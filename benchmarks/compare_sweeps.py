@@ -1,0 +1,47 @@
+"""Compare two dry-run sweeps (baseline vs optimized) cell by cell.
+
+  PYTHONPATH=src python -m benchmarks.compare_sweeps runs/dryrun_v3 runs/dryrun_v4
+"""
+
+import json
+import pathlib
+import sys
+
+from repro.launch.roofline import cell_tokens, roofline_terms
+
+
+def load(outdir):
+    cells = {}
+    for f in pathlib.Path(outdir).glob("*.json"):
+        j = json.loads(f.read_text())
+        if j.get("status") != "ok" or j.get("mesh") != "single":
+            continue
+        cells[(j["arch"], j["shape"])] = j
+    return cells
+
+
+def main(base_dir, opt_dir):
+    base = load(base_dir)
+    opt = load(opt_dir)
+    print("| arch | shape | bound | frac base | frac opt | Δ | mem_ub base→opt (s) |")
+    print("|---|---|---|---|---|---|---|")
+    gains = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        tb = roofline_terms(base[key], tokens=cell_tokens(base[key]))
+        to = roofline_terms(opt[key], tokens=cell_tokens(opt[key]))
+        fb, fo = tb["roofline_fraction"], to["roofline_fraction"]
+        d = (fo / fb - 1) * 100 if fb else 0.0
+        gains.append(fo / fb if fb else 1.0)
+        print(f"| {key[0]} | {key[1]} | {to['bottleneck']} | {fb:.3f} | {fo:.3f} | "
+              f"{d:+.0f}% | {tb['memory_s']:.2f}→{to['memory_s']:.2f} |")
+    if gains:
+        import math
+
+        geo = math.exp(sum(math.log(max(g, 1e-9)) for g in gains) / len(gains))
+        print(f"\ngeomean roofline-fraction gain: {geo:.2f}x over {len(gains)} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:3])

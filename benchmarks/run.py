@@ -1,0 +1,184 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+benchmarked fit in microseconds; derived = the paper-relevant statistic).
+
+Default sizes are scaled to finish on this CPU-only container in minutes;
+``--full`` switches to the paper's sizes (p=20 000 etc.).  Section mapping:
+
+  table1_speedup       paper Table 1 / Fig 4 — wall-clock w/ and w/o the rule
+  fig1_fig2_efficiency paper Fig 1–2 + Table 2 — screened vs active set size
+  fig3_violations      paper Fig 3 — violation prevalence over full paths
+  fig5_overhead        paper Fig 5 / Table 3 — no overhead when n ≫ p
+  fig6_algorithms      paper Fig 6 — strong-set vs previous-set strategies
+  kernels              Pallas kernels vs jnp oracle (interpret mode)
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import fit, row, sequence, timed
+from repro.data import (
+    make_classification,
+    make_multinomial,
+    make_poisson,
+    make_regression,
+)
+
+
+def table1_speedup(full: bool):
+    """Relative speed-up of the screening rule (paper Table 1)."""
+    n = 200 if full else 100
+    p = 20_000 if full else 2_000
+    k = 20
+    makers = {
+        "ols": make_regression,
+        "logistic": make_classification,
+        "poisson": make_poisson,
+        "multinomial": make_multinomial,
+    }
+    rhos = (0.0, 0.5, 0.99) if full else (0.0, 0.5)
+    for family, maker in makers.items():
+        pp = p if family in ("ols", "logistic") else p // 2
+        for rho in rhos:
+            X, y, _ = maker(n, pp, k=k, rho=rho, seed=1, design="ar")
+            q = n / (10 * pp)
+            _, t_scr = fit(X, y, family, screening="strong", q=q,
+                           path_length=100 if full else 50)
+            _, t_no = fit(X, y, family, screening="none", q=q,
+                          path_length=100 if full else 50)
+            row(f"table1/{family}/rho{rho}", t_scr * 1e6,
+                f"speedup={t_no / t_scr:.1f}x (no_screen={t_no:.1f}s)")
+
+
+def fig1_fig2_efficiency(full: bool):
+    """Screened-set size vs active-set size (paper Fig 1–2, Table 2)."""
+    n = 200 if full else 100
+    p = 5_000 if full else 1_500
+    for rho in (0.0, 0.5, 0.9):
+        X, y, _ = make_regression(n, p, k=p // 4, rho=rho, seed=0,
+                                  beta_kind="normal")
+        res, wall = fit(X, y, "ols", screening="strong", q=0.005,
+                        path_length=50)
+        eff = [s.n_screened / max(s.n_active, 1) for s in res.steps[1:]
+               if s.n_active > 0]
+        frac = [s.n_screened / p for s in res.steps[1:]]
+        row(f"fig1/equicorr/rho{rho}", wall * 1e6,
+            f"median_screen/active={np.median(eff):.2f} "
+            f"median_screen/p={np.median(frac):.3f} viol={res.total_violations}")
+    # Fig 2: sequence-type effect
+    for seq in ("bh", "oscar", "lasso"):
+        X, y, _ = make_regression(n, 2 * p if full else p, k=10, rho=0.4,
+                                  seed=2)
+        q = n / (10 * X.shape[1]) if seq == "bh" else 0.05
+        res, wall = fit(X, y, "ols", screening="strong", q=q, seq=seq,
+                        path_length=50)
+        eff = [s.n_screened / max(s.n_active, 1) for s in res.steps[1:]
+               if s.n_active > 0]
+        row(f"fig2/seq_{seq}", wall * 1e6,
+            f"median_screen/active={np.median(eff):.2f} viol={res.total_violations}")
+
+
+def fig3_violations(full: bool):
+    """Violation prevalence (paper Fig 3): rare, low-p only."""
+    n = 100
+    reps = 100 if full else 20
+    for p in (20, 50, 100, 500) + ((1000,) if full else ()):
+        total = 0
+        t_total = 0.0
+        for rep in range(reps):
+            X, y, _ = make_regression(n, p, k=max(p // 4, 1), rho=0.5,
+                                      seed=rep)
+            res, wall = fit(X, y, "ols", screening="strong", q=0.1,
+                            path_length=100, solver_tol=1e-10)
+            total += res.total_violations
+            t_total += wall
+        row(f"fig3/p{p}", t_total / reps * 1e6,
+            f"violations_per_path={total / reps:.3f}")
+
+
+def fig5_overhead(full: bool):
+    """n ≫ p: the rule must not cost anything (paper Fig 5)."""
+    n = 1000
+    for p in (10, 100, 500, 1000, 2000) if full else (10, 100, 500, 1000):
+        X, y, _ = make_regression(n, p, k=max(p // 10, 1), rho=0.0, seed=3)
+        _, t_scr = fit(X, y, "ols", screening="strong", q=0.1, path_length=40)
+        _, t_no = fit(X, y, "ols", screening="none", q=0.1, path_length=40)
+        row(f"fig5/p{p}", t_scr * 1e6, f"ratio_vs_noscreen={t_scr / t_no:.2f}")
+
+
+def fig6_algorithms(full: bool):
+    """Strong-set vs previous-set algorithms under correlation (Fig 6)."""
+    n, p, k = (200, 5000, 50) if full else (100, 1200, 30)
+    for rho in (0.0, 0.4, 0.8):
+        X, y, _ = make_regression(n, p, k=k, rho=rho, seed=4,
+                                  beta_kind="normal")
+        _, t_strong = fit(X, y, "ols", screening="strong", q=0.02,
+                          path_length=50)
+        _, t_prev = fit(X, y, "ols", screening="previous", q=0.02,
+                        path_length=50)
+        row(f"fig6/rho{rho}", t_strong * 1e6,
+            f"previous/strong={t_prev / t_strong:.2f} (prev={t_prev:.1f}s)")
+
+
+def kernels(full: bool):
+    """Pallas kernel microbenches (interpret mode) vs jnp oracle."""
+    from repro.kernels import prox_sorted_l1_kernel, screen_scan, slope_gradient
+    from repro.kernels import ref as R
+
+    rng = np.random.default_rng(0)
+    n, p = (512, 8192) if full else (256, 2048)
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+
+    _, t_k = timed(lambda: slope_gradient(X, r))
+    _, t_r = timed(lambda: R.xt_matmul_ref(X, r))
+    row("kernel/xt_gemv", t_k * 1e6, f"interp_vs_jnp={t_k / t_r:.1f}x")
+
+    c = jnp.asarray(np.sort(np.abs(rng.normal(size=p)))[::-1].copy(), jnp.float32)
+    lam = jnp.asarray(sequence("bh", p, 0.1), jnp.float32)
+    _, t_k = timed(lambda: screen_scan(c, lam))
+    _, t_r = timed(lambda: R.screen_scan_ref(c, lam))
+    row("kernel/screen_scan", t_k * 1e6, f"interp_vs_jnp={t_k / t_r:.1f}x")
+
+    v = jnp.asarray(rng.normal(size=p), jnp.float32)
+    _, t_k = timed(lambda: prox_sorted_l1_kernel(v, lam))
+    from repro.core import prox_sorted_l1
+
+    _, t_r = timed(lambda: prox_sorted_l1(v, lam))
+    row("kernel/prox_sorted_l1", t_k * 1e6, f"interp_vs_lax={t_k / t_r:.1f}x")
+
+
+BENCHES = {
+    "table1_speedup": table1_speedup,
+    "fig1_fig2_efficiency": fig1_fig2_efficiency,
+    "fig3_violations": fig3_violations,
+    "fig5_overhead": fig5_overhead,
+    "fig6_algorithms": fig6_algorithms,
+    "kernels": kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn(args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Assigned-architecture configs.  ``get_config(name)`` is the registry used
+by --arch flags everywhere (launcher, dry-run, benchmarks, tests)."""
+
+from __future__ import annotations
+
+import importlib
+
+_ARCHS = [
+    "jamba_1_5_large_398b",
+    "whisper_medium",
+    "smollm_360m",
+    "starcoder2_15b",
+    "gemma_7b",
+    "h2o_danube_1_8b",
+    "deepseek_v2_lite_16b",
+    "granite_moe_3b_a800m",
+    "llava_next_mistral_7b",
+    "mamba2_1_3b",
+]
+
+ALIASES = {
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-medium": "whisper_medium",
+    "smollm-360m": "smollm_360m",
+    "starcoder2-15b": "starcoder2_15b",
+    "gemma-7b": "gemma_7b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+ARCH_NAMES = list(ALIASES)
+
+
+def get_config(name: str):
+    mod_name = ALIASES.get(name, name)
+    if mod_name not in _ARCHS:
+        raise ValueError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {n: get_config(n) for n in ARCH_NAMES}

@@ -1,0 +1,41 @@
+"""deepseek-v2-lite-16b — MoE LM with Multi-head Latent Attention (MLA).
+
+27L d_model=2048, 16 heads, MLA kv_lora=512 (qk_nope 128 + qk_rope 64,
+v 128), vocab 102400.  MoE: 64 routed top-6 + 2 shared experts,
+expert d_ff 1408; layer 0 dense (d_ff 10944).  [arXiv:2405.04434; hf]
+
+Spec note: the assignment header says "MoE 64e top-6"; the "160 routed"
+parenthetical belongs to full V2 — 64 routed is the Lite config (DESIGN.md §4).
+"""
+
+from repro.models.config import ArchConfig, MoECfg
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab=102_400,
+    attention="mla",
+    mla_kv_lora=512,
+    mla_qk_nope=128,
+    mla_qk_rope=64,
+    mla_v_dim=128,
+    moe=MoECfg(
+        n_experts=64,
+        top_k=6,
+        d_ff_expert=1408,
+        n_shared=2,
+        d_ff_shared=2816,        # 2 shared experts × 1408
+        first_dense=True,
+        d_ff_first_dense=10944,
+        capacity_factor=1.25,
+    ),
+    tie_embeddings=False,
+    sub_quadratic=False,
+    source="arXiv:2405.04434 (DeepSeek-V2)",
+)

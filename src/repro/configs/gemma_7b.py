@@ -1,0 +1,23 @@
+"""gemma-7b — dense LM with GeGLU and head_dim 256.
+
+28L d_model=3072, 16 heads / 16 KV (MHA; the 2b sibling uses MQA),
+d_ff 24576, vocab 256000.  [arXiv:2403.08295; hf google/gemma-7b]
+"""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab=256_000,
+    mlp_act="geglu",
+    tie_embeddings=True,
+    sub_quadratic=False,
+    source="arXiv:2403.08295 (Gemma)",
+)

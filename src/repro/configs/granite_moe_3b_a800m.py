@@ -1,0 +1,30 @@
+"""granite-moe-3b-a800m — fine-grained MoE LM.
+
+32L d_model=1536, 24 heads / 8 KV, expert d_ff 512, vocab 49155,
+MoE 40 experts top-8 (assignment header; the "32 experts" note refers to
+the 1b sibling — DESIGN.md §4).  [hf ibm-granite/granite-3.0-3b-a800m-base]
+"""
+
+from repro.models.config import ArchConfig, MoECfg
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab=49155,
+    moe=MoECfg(
+        n_experts=40,            # padded to 48 for 16-way EP (3 dummies/shard)
+        top_k=8,
+        d_ff_expert=512,
+        capacity_factor=1.25,
+    ),
+    mlp_act="swiglu",
+    tie_embeddings=True,
+    sub_quadratic=False,
+    source="hf ibm-granite/granite-3.0-3b-a800m-base",
+)

@@ -1,0 +1,25 @@
+"""h2o-danube-1.8b — llama/mistral-mix dense LM with sliding-window attention.
+
+24L d_model=2560, 32 heads / 8 KV, d_ff 6912, vocab 32000, SWA window 4096.
+[arXiv:2401.16818; hf h2oai/h2o-danube-1.8b-base]
+"""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab=32000,
+    attention="swa",
+    window=4096,
+    mlp_act="swiglu",
+    tie_embeddings=False,
+    sub_quadratic=True,  # SWA caps the KV cache at the window
+    source="arXiv:2401.16818 (H2O-Danube)",
+)

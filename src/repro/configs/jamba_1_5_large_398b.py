@@ -1,0 +1,39 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention 1:7 interleave with MoE.
+
+72L d_model=8192, 64 Q heads / 8 KV (GQA), d_ff 24576, vocab 65536,
+MoE 16 experts top-2 on every second layer; attention on 1 of every 8
+layers.  ≈398 B total / ≈94 B active.  [arXiv:2403.19887; hf]
+
+Adaptation note (DESIGN.md §4): Mamba-1 selective-scan layers are realised
+with the SSD chunked recurrence (d_state 16, headdim 64 → 256 SSM heads) —
+same state size and recurrence class, TPU-friendly chunk matmuls.
+"""
+
+from repro.models.config import ArchConfig, MoECfg, SSMCfg
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab=65536,
+    attention="full",
+    moe=MoECfg(
+        n_experts=16,
+        top_k=2,
+        d_ff_expert=24576,
+        period=2,
+        offset=1,
+        capacity_factor=1.25,
+    ),
+    ssm=SSMCfg(d_state=16, expand=2, headdim=64, ngroups=8, conv_width=4, chunk=256),
+    attn_period=8,
+    attn_offset=4,
+    tie_embeddings=False,
+    sub_quadratic=True,  # attention in 9/72 layers only; 1.5 targets 256K ctx
+    source="arXiv:2403.19887 (Jamba-1.5); hf ai21labs/AI21-Jamba-1.5-Large",
+)

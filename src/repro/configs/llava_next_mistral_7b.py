@@ -1,0 +1,27 @@
+"""llava-next-mistral-7b — VLM: mistral-7b backbone + anyres vision stub.
+
+32L d_model=4096, 32 heads / 8 KV, d_ff 14336, vocab 32000.  The vision
+tower + anyres tiling is a STUB per the assignment: ``input_specs``
+supplies 576 precomputed patch embeddings (one base-resolution tile),
+spliced ahead of the token stream.  [hf llava-hf/llava-v1.6-mistral-7b-hf]
+"""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=32000,
+    mlp_act="swiglu",
+    n_patches=576,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    sub_quadratic=False,
+    source="hf llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,25 @@
+"""mamba2-1.3b — attention-free SSM LM (SSD, state-space duality).
+
+48L d_model=2048, d_state 128, expand 2, headdim 64 → 64 SSM heads,
+vocab 50280.  [arXiv:2405.21060; unverified]
+"""
+
+from repro.models.config import ArchConfig, SSMCfg
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=1,           # unused (attention-free)
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab=50280,
+    attention="none",
+    use_rope=False,
+    ssm=SSMCfg(d_state=128, expand=2, headdim=64, ngroups=1, conv_width=4, chunk=256),
+    tie_embeddings=True,
+    sub_quadratic=True,
+    source="arXiv:2405.21060 (Mamba-2)",
+)

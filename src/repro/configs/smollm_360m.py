@@ -1,0 +1,23 @@
+"""smollm-360m — llama-architecture small dense LM.
+
+32L d_model=960, 15 heads / 5 KV (GQA 3:1), d_ff 2560, vocab 49152.
+[hf:HuggingFaceTB/SmolLM-360M; hf]
+"""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=2560,
+    vocab=49152,
+    mlp_act="swiglu",
+    tie_embeddings=True,
+    sub_quadratic=False,
+    source="hf HuggingFaceTB/SmolLM-360M",
+)

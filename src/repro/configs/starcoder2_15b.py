@@ -1,0 +1,24 @@
+"""starcoder2-15b — dense code LM, GQA + RoPE, non-gated gelu MLP.
+
+40L d_model=6144, 48 heads / 4 KV, d_ff 24576, vocab 49152.
+[arXiv:2402.19173; hf bigcode/starcoder2-15b]
+"""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab=49152,
+    mlp_act="gelu",  # starcoder2 uses a standard (non-gated) FFN
+    rope_theta=100_000.0,
+    tie_embeddings=True,
+    sub_quadratic=False,
+    source="arXiv:2402.19173 (StarCoder2)",
+)

@@ -1,0 +1,29 @@
+"""whisper-medium — encoder-decoder audio transformer (backbone only).
+
+24 encoder + 24 decoder layers, d_model 1024, 16 heads (MHA), d_ff 4096,
+vocab 51865, gelu MLPs, sinusoidal positions (no RoPE).  The conv frame
+frontend is a STUB per the assignment: ``input_specs`` supplies precomputed
+frame embeddings (B, F, d_model).  [arXiv:2212.04356; unverified]
+"""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=51865,
+    mlp_act="gelu",
+    use_rope=False,
+    encdec=True,
+    n_enc_layers=24,
+    enc_frames=1500,
+    tie_embeddings=True,
+    sub_quadratic=False,
+    source="arXiv:2212.04356 (Whisper); openai/whisper-medium",
+)

@@ -1,0 +1,42 @@
+"""repro.core — faithful implementation of "The Strong Screening Rule for
+SLOPE" (Larsson, Bogdan, Wallin; NeurIPS 2020)."""
+
+from .sorted_l1 import (
+    sorted_l1_norm,
+    prox_sorted_l1,
+    dual_sorted_l1_gauge,
+    isotonic_decreasing,
+    clusters,
+)
+from .screening import (
+    algorithm_1_oracle,
+    algorithm_2_oracle,
+    screen_k,
+    support_superset_k,
+    strong_rule,
+)
+from .kkt import in_subdifferential, kkt_optimal, kkt_violations
+from .lambda_seq import (
+    bh_sequence,
+    gaussian_sequence,
+    oscar_sequence,
+    lasso_sequence,
+    path_start_sigma,
+    sigma_grid,
+)
+from .losses import Family, ols, logistic, poisson, multinomial, get_family
+from .solver import fista, FistaResult
+from .path import fit_path, PathResult
+
+__all__ = [
+    "sorted_l1_norm", "prox_sorted_l1", "dual_sorted_l1_gauge",
+    "isotonic_decreasing", "clusters",
+    "algorithm_1_oracle", "algorithm_2_oracle", "screen_k",
+    "support_superset_k", "strong_rule",
+    "in_subdifferential", "kkt_optimal", "kkt_violations",
+    "bh_sequence", "gaussian_sequence", "oscar_sequence", "lasso_sequence",
+    "path_start_sigma", "sigma_grid",
+    "Family", "ols", "logistic", "poisson", "multinomial", "get_family",
+    "fista", "FistaResult",
+    "fit_path", "PathResult",
+]

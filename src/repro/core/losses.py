@@ -1,0 +1,124 @@
+"""GLM objectives used in the paper's experiments (§3.2.3): OLS, logistic,
+Poisson and multinomial regression.
+
+Every family exposes the loss through its linear predictor z = Xβ:
+
+    f(β) = Σ_i ℓ(z_i, y_i),       ∇f(β) = Xᵀ r(z, y),   r = ∂ℓ/∂z
+
+so the solver and the screening rule only ever need ``value``/``residual``
+plus the two matvecs (which are what the Pallas kernels accelerate).
+Conventions follow the R SLOPE package: unnormalised sums, centred y for
+OLS, y ∈ {0,1} for logistic, y ∈ ℕ for Poisson, integer classes for
+multinomial (β ∈ R^{p×m}, penalty on the flattened coefficients).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Family", "ols", "logistic", "poisson", "multinomial", "get_family"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    name: str
+    value: Callable  # (z, y) -> scalar loss
+    residual: Callable  # (z, y) -> dloss/dz, same shape as z
+    hess_bound: float | None  # sup of d²ℓ/dz² (None: use backtracking)
+    n_classes: int = 1  # >1 → β is (p, m)
+
+    def loss(self, X, y, beta):
+        return self.value(X @ beta, y)
+
+    def gradient(self, X, y, beta):
+        """∇f(β) = Xᵀ r(Xβ, y); shape = beta.shape."""
+        return X.T @ self.residual(X @ beta, y)
+
+    def lipschitz(self, X) -> jax.Array:
+        """Upper bound on the gradient Lipschitz constant: c·‖X‖₂²."""
+        s = _spectral_norm(X)
+        c = self.hess_bound if self.hess_bound is not None else 1.0
+        return c * s * s
+
+
+def _spectral_norm(X, iters: int = 30):
+    """Power iteration for ‖X‖₂ (deterministic start)."""
+    v = jnp.ones((X.shape[1],), X.dtype) / jnp.sqrt(X.shape[1])
+
+    def body(_, v):
+        u = X @ v
+        u = u / (jnp.linalg.norm(u) + 1e-12)
+        w = X.T @ u
+        return w / (jnp.linalg.norm(w) + 1e-12)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.linalg.norm(X @ v)
+
+
+# -- OLS --------------------------------------------------------------------
+
+def _ols_value(z, y):
+    return 0.5 * jnp.sum(jnp.square(z - y))
+
+
+def _ols_residual(z, y):
+    return z - y
+
+
+ols = Family("ols", _ols_value, _ols_residual, hess_bound=1.0)
+
+
+# -- logistic (y ∈ {0,1}) ----------------------------------------------------
+
+def _logit_value(z, y):
+    # Σ log(1 + e^z) − y z, numerically stable
+    return jnp.sum(jnp.logaddexp(0.0, z) - y * z)
+
+
+def _logit_residual(z, y):
+    return jax.nn.sigmoid(z) - y
+
+
+logistic = Family("logistic", _logit_value, _logit_residual, hess_bound=0.25)
+
+
+# -- Poisson -----------------------------------------------------------------
+
+def _pois_value(z, y):
+    return jnp.sum(jnp.exp(z) - y * z)
+
+
+def _pois_residual(z, y):
+    return jnp.exp(z) - y
+
+
+poisson = Family("poisson", _pois_value, _pois_residual, hess_bound=None)
+
+
+# -- multinomial (y integer classes, β ∈ R^{p×m}) ----------------------------
+
+def _multi_value(Z, y):
+    return jnp.sum(jax.nn.logsumexp(Z, axis=-1) - jnp.take_along_axis(Z, y[:, None], axis=-1)[:, 0])
+
+
+def _multi_residual(Z, y):
+    m = Z.shape[-1]
+    return jax.nn.softmax(Z, axis=-1) - jax.nn.one_hot(y, m, dtype=Z.dtype)
+
+
+def multinomial(m: int) -> Family:
+    return Family("multinomial", _multi_value, _multi_residual, hess_bound=0.5,
+                  n_classes=m)
+
+
+def get_family(name: str, n_classes: int = 3) -> Family:
+    if name == "multinomial":
+        return multinomial(n_classes)
+    fam = {"ols": ols, "logistic": logistic, "poisson": poisson}.get(name)
+    if fam is None:
+        raise ValueError(f"unknown family {name!r}")
+    return fam

@@ -1,0 +1,124 @@
+"""The strong screening rule for SLOPE (paper §2.2).
+
+Three layers:
+
+* :func:`algorithm_1_oracle` / :func:`algorithm_2_oracle` — verbatim Python
+  transcriptions of the paper's Algorithm 1 and Algorithm 2.  Used as test
+  oracles and for documentation; not jit-compiled.
+* :func:`screen_k` — the closed-form parallel equivalent (DESIGN.md §1):
+  Algorithm 2's result equals the *rightmost argmax of cumsum(c − λ)* when
+  that maximum is ≥ 0, else 0.  One prefix sum + one reduction; this is the
+  form that shards and the form the Pallas kernel implements.
+* :func:`strong_rule` — the paper's strong rule for SLOPE: surrogate
+  c = |∇f(β̂(λ^(m)))|↓ + (λ^(m) − λ^(m+1)), screened with λ^(m+1)
+  (Proposition 2's unit-slope bound), returning the screened index set.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "algorithm_1_oracle",
+    "algorithm_2_oracle",
+    "screen_k",
+    "support_superset_k",
+    "strong_rule",
+]
+
+
+# ---------------------------------------------------------------------------
+# Verbatim oracles (host-side, for tests and reference)
+# ---------------------------------------------------------------------------
+
+def algorithm_1_oracle(c, lam):
+    """Paper Algorithm 1.  ``c`` must be |gradient| sorted decreasing.
+
+    Returns the set S of *sorted positions* (0-based) kept by the rule.
+    """
+    import numpy as np
+
+    c = np.asarray(c, dtype=np.float64)
+    lam = np.asarray(lam, dtype=np.float64)
+    S: list[int] = []
+    B: list[int] = []
+    for i in range(len(c)):
+        B.append(i)
+        if sum(c[j] - lam[j] for j in B) >= 0:
+            S.extend(B)
+            B = []
+    return set(S)
+
+
+def algorithm_2_oracle(c, lam):
+    """Paper Algorithm 2 (fast version).  Returns k = #active predicted."""
+    import numpy as np
+
+    c = np.asarray(c, dtype=np.float64)
+    lam = np.asarray(lam, dtype=np.float64)
+    p = len(c)
+    i, k, s = 1, 0, 0.0
+    while i + k <= p:
+        s += c[i + k - 1] - lam[i + k - 1]  # 1-based in the paper
+        if s >= 0:
+            k += i
+            i = 1
+            s = 0.0
+        else:
+            i += 1
+    return k
+
+
+# ---------------------------------------------------------------------------
+# Parallel closed form (jit-safe, shardable)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def screen_k(c_sorted: jax.Array, lam: jax.Array) -> jax.Array:
+    """k = rightmost argmax of cumsum(c − λ) if the max is ≥ 0 else 0.
+
+    Equivalent to Algorithm 2 (proof sketch in DESIGN.md §1; property-tested
+    against :func:`algorithm_2_oracle`).  ``c_sorted`` must be decreasing.
+    """
+    s = jnp.cumsum(c_sorted.astype(jnp.promote_types(c_sorted.dtype, jnp.float32))
+                   - lam.astype(jnp.promote_types(c_sorted.dtype, jnp.float32)))
+    p = s.shape[0]
+    rev_arg = jnp.argmax(s[::-1])          # first max in reversed = last max
+    k = (p - rev_arg).astype(jnp.int32)
+    return jnp.where(jnp.max(s) >= 0, k, jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("tol",))
+def support_superset_k(grad: jax.Array, lam: jax.Array, *, tol: float = 0.0):
+    """Proposition 1: Algorithm 1/2 with the *true* gradient certifies a
+    support superset.  Returns (k, order) — the superset is order[:k].
+
+    At an exact solution the active prefix satisfies cumsum(c − λ) = 0, so
+    a finite-precision gradient sits O(solver tol) *below* the boundary:
+    the certificate must relax **upward** (c + tol) to stay a superset.
+    tol=0 is the paper's exact statement.
+    """
+    mag = jnp.abs(jnp.ravel(grad))
+    order = jnp.argsort(-mag)
+    c = mag[order]
+    k = screen_k(c + tol, lam)
+    return k, order
+
+
+@jax.jit
+def strong_rule(grad_prev: jax.Array, lam_prev: jax.Array, lam_next: jax.Array):
+    """The strong rule for SLOPE (paper §2.2.2).
+
+    ``grad_prev`` = ∇f(β̂(λ^(m))) at the previous path solution.  Surrogate
+    c = |grad|↓ + (λ^(m) − λ^(m+1)) per the unit-slope bound, screened
+    against λ^(m+1).  Returns (k, order): screened set = order[:k].
+    """
+    mag = jnp.abs(jnp.ravel(grad_prev))
+    order = jnp.argsort(-mag)
+    gap = (lam_prev - lam_next).astype(mag.dtype)
+    c = mag[order] + gap
+    k = screen_k(c, lam_next)
+    return k, order

@@ -1,0 +1,123 @@
+"""FISTA solver for SLOPE (paper §3.1: accelerated proximal gradient).
+
+One jit-compiled ``lax.while_loop`` per (n, p, m) shape; the path driver
+buckets sub-problem widths to powers of two so the whole regularization
+path reuses a handful of compilations.  Backtracking line search covers the
+Poisson family (no global Lipschitz bound); adaptive restart (gradient
+scheme) is a strict improvement over plain FISTA and is on by default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .losses import Family
+from .sorted_l1 import prox_sorted_l1, sorted_l1_norm
+
+__all__ = ["fista", "FistaResult"]
+
+
+class FistaResult(NamedTuple):
+    beta: jax.Array
+    iters: jax.Array
+    objective: jax.Array
+    converged: jax.Array
+
+
+class _State(NamedTuple):
+    x: jax.Array
+    z: jax.Array
+    t: jax.Array
+    L: jax.Array
+    obj: jax.Array
+    it: jax.Array
+    done: jax.Array
+
+
+@functools.partial(
+    jax.jit, static_argnames=("family", "max_iter", "tol", "restart", "max_backtrack")
+)
+def fista(
+    X: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    beta0: jax.Array,
+    family: Family,
+    *,
+    max_iter: int = 1000,
+    tol: float = 1e-8,
+    restart: bool = True,
+    max_backtrack: int = 30,
+) -> FistaResult:
+    """Minimise f(β) + J(β; λ) with FISTA + backtracking + adaptive restart.
+
+    ``lam`` must have ``beta0.size`` entries (flattened coefficients for the
+    multinomial family) and be non-increasing.  Zero-padded columns of X are
+    self-consistent: their gradient is identically zero so they stay at 0.
+    """
+    dtype = X.dtype
+    lam = lam.astype(dtype)
+
+    def obj_fn(beta):
+        return family.loss(X, y, beta) + sorted_l1_norm(beta, lam)
+
+    # Initial curvature guess: crude row-norm bound, corrected by backtracking.
+    L0 = jnp.maximum(jnp.sum(X * X) * (family.hess_bound or 1.0) / X.shape[1], 1e-3)
+
+    def step(state: _State) -> _State:
+        z = state.z
+        fz = family.loss(X, y, z)
+        gz = family.gradient(X, y, z)
+
+        def bt_cond(carry):
+            L, x_new, ok, tries = carry
+            return (~ok) & (tries < max_backtrack)
+
+        def bt_body(carry):
+            L, _, _, tries = carry
+            x_new = prox_sorted_l1(jnp.ravel(z - gz / L), lam / L).reshape(z.shape)
+            diff = x_new - z
+            q = fz + jnp.vdot(gz, diff) + 0.5 * L * jnp.vdot(diff, diff)
+            ok = family.loss(X, y, x_new) <= q + 1e-12 * jnp.abs(q)
+            L_next = jnp.where(ok, L, L * 2.0)
+            return L_next, x_new, ok, tries + 1
+
+        L, x_new, _, _ = lax.while_loop(
+            bt_cond, bt_body, (state.L, z, jnp.bool_(False), jnp.int32(0))
+        )
+
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * state.t**2))
+        momentum = (state.t - 1.0) / t_new
+        z_new = x_new + momentum * (x_new - state.x)
+        if restart:
+            # Gradient-scheme restart (O'Donoghue & Candès): kill momentum
+            # when the update opposes the trajectory.
+            bad = jnp.vdot(z - x_new, x_new - state.x) > 0
+            t_new = jnp.where(bad, 1.0, t_new)
+            z_new = jnp.where(bad, x_new, z_new)
+
+        obj_new = obj_fn(x_new)
+        done = jnp.abs(state.obj - obj_new) <= tol * jnp.maximum(1.0, jnp.abs(obj_new))
+        # mild decrease of L lets the step size recover after conservative phases
+        return _State(x_new, z_new, t_new, L * 0.95, obj_new, state.it + 1, done)
+
+    def cond(state: _State):
+        return (~state.done) & (state.it < max_iter)
+
+    init = _State(
+        x=beta0.astype(dtype),
+        z=beta0.astype(dtype),
+        t=jnp.asarray(1.0, dtype),
+        L=L0.astype(dtype),
+        obj=obj_fn(beta0.astype(dtype)),
+        it=jnp.int32(0),
+        done=jnp.bool_(False),
+    )
+    final = lax.while_loop(cond, step, init)
+    return FistaResult(final.x, final.it, final.obj, final.done)

@@ -1,0 +1,15 @@
+from .lm_data import SyntheticLM, lm_batches
+from .glm_data import (
+    equicorrelated_design,
+    ar_chain_design,
+    make_regression,
+    make_classification,
+    make_poisson,
+    make_multinomial,
+)
+
+__all__ = [
+    "SyntheticLM", "lm_batches",
+    "equicorrelated_design", "ar_chain_design", "make_regression",
+    "make_classification", "make_poisson", "make_multinomial",
+]

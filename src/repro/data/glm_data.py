@@ -1,0 +1,96 @@
+"""GLM data generators matching the paper's simulation setups (§3.2).
+
+* equicorrelated design: Σ_ij = ρ (i≠j), 1 on the diagonal — generated via
+  the factor trick  X = √ρ·z·1ᵀ + √(1−ρ)·E  (O(np), no p×p Cholesky).
+* AR chain (§3.2.3): X_1 ~ N(0, I); X_j ~ N(ρ·X_{j−1}, I).
+* response generators for OLS / logistic / Poisson / multinomial exactly as
+  specified in the paper's text.
+Predictors are normalised to  x̄_j = 0, ‖x_j‖₂ = 1 and y is centred for OLS
+(paper §3.1) unless ``normalize=False``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "equicorrelated_design", "ar_chain_design", "normalize_design",
+    "make_regression", "make_classification", "make_poisson", "make_multinomial",
+]
+
+
+def normalize_design(X: np.ndarray) -> np.ndarray:
+    X = X - X.mean(axis=0, keepdims=True)
+    norms = np.linalg.norm(X, axis=0, keepdims=True)
+    norms[norms == 0] = 1.0
+    return X / norms
+
+
+def equicorrelated_design(n: int, p: int, rho: float, rng) -> np.ndarray:
+    z = rng.normal(size=(n, 1))
+    E = rng.normal(size=(n, p))
+    return np.sqrt(rho) * z + np.sqrt(1.0 - rho) * E
+
+
+def ar_chain_design(n: int, p: int, rho: float, rng) -> np.ndarray:
+    X = np.empty((n, p))
+    X[:, 0] = rng.normal(size=n)
+    for j in range(1, p):
+        X[:, j] = rho * X[:, j - 1] + rng.normal(size=n)
+    return X
+
+
+def _design(n, p, rho, rng, kind):
+    X = (ar_chain_design if kind == "ar" else equicorrelated_design)(n, p, rho, rng)
+    return normalize_design(X)
+
+
+def make_regression(n, p, k, rho=0.0, seed=0, design="equi", beta_kind="pm2",
+                    noise=1.0):
+    """y = Xβ + ε.  β: first k entries ±2 (paper §3.2.1 variant) or N(0,1)."""
+    rng = np.random.default_rng(seed)
+    X = _design(n, p, rho, rng, design)
+    beta = np.zeros(p)
+    if beta_kind == "pm2":
+        beta[:k] = rng.choice([-2.0, 2.0], size=k)
+    elif beta_kind == "normal":
+        beta[:k] = rng.normal(size=k)
+    else:  # paper §3.2.3: sample without replacement from {1..20}
+        beta[:k] = rng.choice(np.arange(1, 21), size=k, replace=False)
+    y = X @ beta + noise * rng.normal(size=n)
+    y = y - y.mean()
+    return X, y, beta
+
+
+def make_classification(n, p, k, rho=0.0, seed=0, design="ar", noise_var=20.0):
+    rng = np.random.default_rng(seed)
+    X = _design(n, p, rho, rng, design)
+    beta = np.zeros(p)
+    beta[:k] = rng.choice(np.arange(1, 21), size=k, replace=False)
+    z = X @ beta + np.sqrt(noise_var) * rng.normal(size=n)
+    y = (np.sign(z) > 0).astype(np.float64)
+    return X, y, beta
+
+
+def make_poisson(n, p, k, rho=0.0, seed=0, design="ar"):
+    rng = np.random.default_rng(seed)
+    X = _design(n, p, rho, rng, design)
+    beta = np.zeros(p)
+    beta[:k] = rng.choice(np.arange(1, 21) / 40.0, size=k, replace=False)
+    y = rng.poisson(np.exp(X @ beta)).astype(np.float64)
+    return X, y, beta
+
+
+def make_multinomial(n, p, k, m=3, rho=0.0, seed=0, design="ar"):
+    rng = np.random.default_rng(seed)
+    X = _design(n, p, rho, rng, design)
+    beta = np.zeros((p, m))
+    rows = rng.choice(p, size=k, replace=False)
+    vals = rng.choice(np.arange(1, 21), size=k, replace=False)
+    for r, v in zip(rows, vals):
+        beta[r, rng.integers(m)] = v
+    Z = X @ beta
+    probs = np.exp(Z - Z.max(axis=1, keepdims=True))
+    probs /= probs.sum(axis=1, keepdims=True)
+    y = np.array([rng.choice(m, p=pr) for pr in probs], dtype=np.int32)
+    return X, y, beta

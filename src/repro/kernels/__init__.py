@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for SLOPE's compute hot spots (validated in
+interpret mode on CPU; see ops.py for dispatch and ref.py for oracles)."""
+
+from .ops import (
+    slope_gradient,
+    slope_residual,
+    screen_scan,
+    prox_pool,
+    prox_sorted_l1_kernel,
+)
+
+__all__ = [
+    "slope_gradient",
+    "slope_residual",
+    "screen_scan",
+    "prox_pool",
+    "prox_sorted_l1_kernel",
+]

@@ -1,0 +1,126 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: pad to block multiples, pick interpret mode (Pallas TPU
+kernels execute via the interpreter on CPU — that is how this container
+validates them; on a real TPU ``interpret=False`` compiles to Mosaic),
+fall back to the pure-jnp oracle where a kernel's preconditions don't hold
+(e.g. prox pooling beyond the VMEM budget).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .prox_sorted_l1 import VMEM_ELEM_LIMIT, prox_pool_kernel_call
+from .screen_scan import DEFAULT_BLOCK, screen_scan_kernel_call
+from .slope_gemv import DEFAULT_BN, DEFAULT_BP, xb_residual, xt_matmul
+
+__all__ = [
+    "slope_gradient",
+    "slope_residual",
+    "screen_scan",
+    "prox_pool",
+    "prox_sorted_l1_kernel",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bp", "use_kernel"))
+def slope_gradient(X, R, *, bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
+                   use_kernel: bool = True):
+    """∇f = Xᵀ R.  X (n, p); R (n,) or (n, m) → matches R's rank."""
+    squeeze = R.ndim == 1
+    R2 = R[:, None] if squeeze else R
+    if not use_kernel:
+        out = _ref.xt_matmul_ref(X, R2)
+        return out[:, 0] if squeeze else out
+    n, p = X.shape
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Rp = _pad_to(_pad_to(R2, bn_, 0), 128, 1)
+    out = xt_matmul(Xp, Rp, bn=bn_, bp=bp_, interpret=_interpret())
+    out = out[:p, : R2.shape[1]]
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("family", "bn", "bp", "use_kernel"))
+def slope_residual(X, B, Y, *, family: str = "none", bn: int = DEFAULT_BN,
+                   bp: int = DEFAULT_BP, use_kernel: bool = True):
+    """r = ∂ℓ/∂z at z = X·B, fused GEMV + GLM epilogue."""
+    squeeze = B.ndim == 1
+    B2 = B[:, None] if squeeze else B
+    Y2 = Y[:, None] if Y.ndim == 1 else Y
+    if not use_kernel:
+        out = _ref.xb_residual_ref(X, B2, Y2, family)
+        return out[:, 0] if squeeze else out
+    n, p = X.shape
+    m = B2.shape[1]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Bp = _pad_to(_pad_to(B2, bp_, 0), 128, 1)
+    Yp = _pad_to(_pad_to(Y2, bn_, 0), 128, 1)
+    out = xb_residual(
+        Xp, Bp, Yp, family=family, m_actual=m, bn=bn_, bp=bp_, interpret=_interpret()
+    )
+    out = out[:n, :m]
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel"))
+def screen_scan(c, lam, *, block: int = DEFAULT_BLOCK, use_kernel: bool = True):
+    """Algorithm-2 screen: k = #kept (c, λ in the sorted order)."""
+    if not use_kernel:
+        return _ref.screen_scan_ref(c, lam)
+    (p,) = c.shape
+    blk = min(block, _round_up(p, 128))
+    # pad with c − λ = −1: strictly decreasing tail can never host the
+    # rightmost argmax, so k is unaffected
+    cp = _pad_to(c.astype(jnp.float32), blk, 0, value=-1.0)
+    lp = _pad_to(lam.astype(jnp.float32), blk, 0, value=0.0)
+    return screen_scan_kernel_call(cp, lp, block=blk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def prox_pool(w, *, use_kernel: bool = True):
+    """Non-increasing isotonic projection + clip at 0."""
+    if not use_kernel or w.shape[0] > VMEM_ELEM_LIMIT:
+        return _ref.prox_pool_ref(w)
+    return prox_pool_kernel_call(w, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def prox_sorted_l1_kernel(v, lam, *, use_kernel: bool = True):
+    """Full sorted-ℓ1 prox: XLA sort + Pallas pooling + unsort."""
+    shape = v.shape
+    v = jnp.ravel(v)
+    lam = jnp.ravel(lam).astype(v.dtype)
+    sign = jnp.sign(v)
+    mag = jnp.abs(v)
+    order = jnp.argsort(-mag)
+    w = mag[order] - lam
+    x_sorted = prox_pool(w, use_kernel=use_kernel)
+    x = jnp.zeros_like(v).at[order].set(x_sorted.astype(v.dtype))
+    return (sign * x).reshape(shape)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

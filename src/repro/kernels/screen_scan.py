@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the strong-rule screen (paper Algorithm 2).
+
+Uses the closed form derived in DESIGN.md §1: with s = cumsum(c − λ),
+k = rightmost argmax of s when max(s) ≥ 0, else 0.  The kernel streams
+(c, λ) through VMEM in blocks, carrying three scalars across the sequential
+TPU grid: the running total of (c − λ), the best (rightmost-max) cumsum
+value, and its global index.  One pass, O(p) HBM traffic — the screen is
+bandwidth-bound by construction, matching the paper's "cheaper than one
+gradient step" claim.
+
+Caller pads the tail with c − λ = −1 (strictly decreasing ⇒ never the
+rightmost argmax) — see ops.screen_scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["screen_scan_kernel_call", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = 2048
+
+
+def _screen_kernel(c_ref, lam_ref, o_ref, total_ref, best_ref, idx_ref):
+    b = pl.program_id(0)
+    bp = c_ref.shape[0]
+
+    @pl.when(b == 0)
+    def _init():
+        total_ref[0] = 0.0
+        best_ref[0] = -jnp.inf
+        idx_ref[0] = 0
+
+    d = c_ref[...].astype(jnp.float32) - lam_ref[...].astype(jnp.float32)
+    s = jnp.cumsum(d) + total_ref[0]
+
+    # rightmost local argmax: first max of the reversed prefix sums
+    rev = s[::-1]
+    j = jnp.argmax(rev)
+    local_best = rev[j]
+    local_idx = b * bp + (bp - 1 - j.astype(jnp.int32))
+
+    better = local_best >= best_ref[0]  # ≥ keeps the *rightmost* on ties
+    best_ref[0] = jnp.where(better, local_best, best_ref[0])
+    idx_ref[0] = jnp.where(better, local_idx, idx_ref[0])
+    total_ref[0] = total_ref[0] + jnp.sum(d)
+
+    @pl.when(b == pl.num_programs(0) - 1)
+    def _finish():
+        k = jnp.where(best_ref[0] >= 0, idx_ref[0] + 1, 0)
+        o_ref[0] = k.astype(jnp.int32)
+
+
+def screen_scan_kernel_call(
+    c: jax.Array, lam: jax.Array, *, block: int = DEFAULT_BLOCK, interpret: bool = False
+) -> jax.Array:
+    """k for pre-padded inputs (length divisible by ``block``)."""
+    (p,) = c.shape
+    assert p % block == 0, (p, block)
+    return pl.pallas_call(
+        _screen_kernel,
+        grid=(p // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((block,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.float32),
+            pltpu.SMEM((1,), jnp.float32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(c, lam)[0]

@@ -1,0 +1,141 @@
+"""Pallas TPU kernels for the two matvecs that dominate SLOPE solves.
+
+Per FISTA iteration the solver reads X twice: once for the linear predictor
+z = X·β (+ the GLM residual epilogue, fused here so z never round-trips
+through HBM) and once for the gradient ∇f = Xᵀ·r.  With p ≫ n these GEMVs
+are memory-bound on X, so the kernels tile X through VMEM in MXU-aligned
+(bn × bp) blocks, accumulate in f32, and stream the small operands (r, β,
+y) alongside.
+
+Layouts (m = #classes; 1 for scalar GLMs, padded to the lane width by ops.py):
+  xt_matmul:    X (n, p), R (n, m)      → G (p, m)     grid (p/bp, n/bn)
+  xb_residual:  X (n, p), B (p, m), Y (n, m) → r (n, m) grid (n/bn, p/bp)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["xt_matmul", "xb_residual", "DEFAULT_BN", "DEFAULT_BP"]
+
+DEFAULT_BN = 256
+DEFAULT_BP = 512
+
+
+def _xt_matmul_kernel(x_ref, r_ref, o_ref, acc_ref):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        r_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),  # Xᵀ·R without transpose copy
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(nb == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def xt_matmul(
+    X: jax.Array,
+    R: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """G = Xᵀ R; shapes (n, p) × (n, m) → (p, m).  Caller pads to blocks."""
+    n, p = X.shape
+    m = R.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    grid = (p // bp, n // bn)
+    return pl.pallas_call(
+        _xt_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda pb, nb: (nb, pb)),
+            pl.BlockSpec((bn, m), lambda pb, nb: (nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, m), lambda pb, nb: (pb, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, m), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, m), jnp.float32)],
+        interpret=interpret,
+    )(X, R)
+
+
+def _epilogue(z, y, family: str, m_actual: int):
+    if family == "none":
+        return z
+    if family == "ols":
+        return z - y
+    if family == "logistic":
+        return jax.nn.sigmoid(z) - y
+    if family == "poisson":
+        return jnp.exp(z) - y
+    if family == "multinomial":
+        # mask padded class lanes out of the softmax
+        lane = jax.lax.broadcasted_iota(jnp.int32, z.shape, dimension=z.ndim - 1)
+        zm = jnp.where(lane < m_actual, z, -jnp.inf)
+        sm = jax.nn.softmax(zm, axis=-1)
+        return jnp.where(lane < m_actual, sm - y, 0.0)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def _xb_residual_kernel(x_ref, b_ref, y_ref, o_ref, acc_ref, *, family, m_actual):
+    pb = pl.program_id(1)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pb == pl.num_programs(1) - 1)
+    def _flush():
+        z = acc_ref[...]
+        o_ref[...] = _epilogue(z, y_ref[...].astype(jnp.float32), family, m_actual).astype(
+            o_ref.dtype
+        )
+
+
+def xb_residual(
+    X: jax.Array,
+    B: jax.Array,
+    Y: jax.Array,
+    *,
+    family: str = "none",
+    m_actual: int | None = None,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """r = ∂ℓ/∂z at z = X·B, fused.  Shapes (n,p) × (p,m), Y (n,m) → (n,m)."""
+    n, p = X.shape
+    m = B.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    m_actual = m if m_actual is None else m_actual
+    grid = (n // bn, p // bp)
+    kernel = functools.partial(_xb_residual_kernel, family=family, m_actual=m_actual)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda nb, pb: (nb, pb)),
+            pl.BlockSpec((bp, m), lambda nb, pb: (pb, 0)),
+            pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
+        interpret=interpret,
+    )(X, B, Y)

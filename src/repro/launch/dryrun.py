@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script
+  1. builds the production mesh (16×16 single-pod, 2×16×16 multi-pod),
+  2. lowers the real step function (train/prefill/serve) against
+     ShapeDtypeStruct inputs — no allocation,
+  3. compiles it (SPMD partitioning for 256/512 devices must succeed),
+  4. records memory_analysis(), cost_analysis() and the collective-byte
+     census parsed from the compiled HLO into a JSON artifact consumed by
+     launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out runs/dryrun
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _lower_cell(cfg, shape_name: str, mesh, profile: str = "tp"):
+    """Lower the cell's step function on ``mesh``; returns the Lowered."""
+    import jax.numpy as jnp
+
+    from repro.launch import sharding as sh
+    from repro.launch.specs import input_specs
+    from repro.launch.steps import hyper_for, make_prefill_step, make_serve_step, make_train_step
+    from repro.models import init_params
+    from repro.optim import adamw_init
+
+    spec = input_specs(cfg, shape_name)
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = sh.param_sharding(params, mesh, profile)
+
+    if spec["kind"] == "train":
+        hyper = hyper_for(cfg)
+        opt = jax.eval_shape(lambda: adamw_init(params, hyper))
+        o_sh = sh.opt_sharding(params, mesh, profile)
+        b_sh = sh.batch_sharding(spec["batch"], mesh, profile)
+        step = make_train_step(cfg, mesh, hyper)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh, None),
+                     out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+        with mesh:
+            return fn.lower(params, opt, spec["batch"], jnp.int32(0))
+    if spec["kind"] == "prefill":
+        b_sh = sh.batch_sharding(spec["batch"], mesh)
+        fn = jax.jit(make_prefill_step(cfg, mesh), in_shardings=(p_sh, b_sh))
+        with mesh:
+            return fn.lower(params, spec["batch"])
+    c_sh = sh.cache_sharding(spec["cache"], mesh, seq_shard=spec["seq_shard"])
+    t_sh = sh.batch_sharding(spec["token"], mesh)
+    fn = jax.jit(make_serve_step(cfg, mesh),
+                 in_shardings=(p_sh, c_sh, t_sh, None),
+                 out_shardings=(None, c_sh), donate_argnums=(1,))
+    with mesh:
+        return fn.lower(params, spec["cache"], spec["token"], jnp.int32(17))
+
+
+def _truncated_cfg(cfg, k: int):
+    """Config with k scan units (prologue kept) for cost extrapolation."""
+    import dataclasses
+
+    from repro.models import stack_pattern
+
+    prologue, pattern, n_scan = stack_pattern(cfg)
+    changes = {"n_layers": len(prologue) + len(pattern) * k}
+    if cfg.encdec:
+        changes["n_enc_layers"] = k
+    return dataclasses.replace(cfg, **changes)
+
+
+def _analysis_counts(cfg, shape_name: str, mesh, profile: str = "tp") -> tuple[dict, dict]:
+    """Two-point scan-body extrapolation of flops/bytes/collectives.
+
+    XLA's cost_analysis counts while-loop bodies once, so the production
+    (rolled-scan) artifact undercounts per-step work by ~n_layers.  Lowering
+    k=1 and k=2 scan units with scans unrolled gives body = f(2) − f(1)
+    exactly; total = f(1) − body + n_scan·body.
+    """
+    from repro.launch.roofline import collective_census
+    from repro.models import stack_pattern
+    from repro.models.model import set_scan_unroll
+
+    _, _, n_scan = stack_pattern(cfg)
+    costs, censuses = [], []
+    set_scan_unroll(True)
+    try:
+        for k in (1, 2):
+            lowered = _lower_cell(_truncated_cfg(cfg, k), shape_name, mesh, profile)
+            compiled = lowered.compile()
+            costs.append(compiled.cost_analysis())
+            censuses.append(collective_census(compiled.as_text()))
+    finally:
+        set_scan_unroll(False)
+
+    def extrap(a, b):
+        body = b - a
+        return max(a - body, 0.0) + n_scan * body
+
+    cost = {}
+    for key in ("flops", "bytes accessed", "transcendentals"):
+        if key in costs[0]:
+            cost[key] = extrap(float(costs[0].get(key, 0)), float(costs[1].get(key, 0)))
+    census: dict = {}
+    kinds = set(censuses[0]) | set(censuses[1])
+    for kind in kinds:
+        z = {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+        a = censuses[0].get(kind, z)
+        b = censuses[1].get(kind, z)
+        census[kind] = {
+            f: int(round(extrap(float(a[f]), float(b[f])))) for f in z
+        }
+    return cost, census
+
+
+def _apply_opts(opts: tuple[str, ...]):
+    import jax.numpy as jnp
+
+    from repro.models.attention import set_flash
+    from repro.models.layers import set_reduce_dtype
+
+    set_reduce_dtype(jnp.bfloat16 if "bf16_reduce" in opts else jnp.float32)
+    set_flash("flash" in opts)
+    profile = "fsdp" if "fsdp" in opts else "tp"
+    vp_embed = "vp_embed" in opts
+    return profile, vp_embed
+
+
+def _build_cell(arch: str, shape_name: str, multi_pod: bool,
+                opts: tuple[str, ...] = ()):
+    from repro.configs import get_config
+    from repro.launch import sharding as sh
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs, skip_reason
+    from repro.launch.steps import hyper_for, make_prefill_step, make_serve_step, make_train_step
+    from repro.models import init_params
+    from repro.optim import adamw_init
+
+    cfg = get_config(arch)
+    skip = skip_reason(cfg, shape_name)
+    if skip:
+        return {"status": "skip", "reason": skip}
+
+    profile, vp_embed = _apply_opts(opts)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh.install(mesh, profile=profile, vp_embed=vp_embed)
+    try:
+        spec = input_specs(cfg, shape_name)
+        params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        p_sh = sh.param_sharding(params, mesh, profile)
+
+        if spec["kind"] == "train":
+            hyper = hyper_for(cfg)
+            opt = jax.eval_shape(lambda: adamw_init(params, hyper))
+            o_sh = sh.opt_sharding(params, mesh, profile)
+            b_sh = sh.batch_sharding(spec["batch"], mesh, profile)
+            step = make_train_step(cfg, mesh, hyper)
+            fn = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            with mesh:
+                lowered = fn.lower(params, opt, spec["batch"], jnp.int32(0))
+        elif spec["kind"] == "prefill":
+            b_sh = sh.batch_sharding(spec["batch"], mesh)
+            step = make_prefill_step(cfg, mesh)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+            with mesh:
+                lowered = fn.lower(params, spec["batch"])
+        else:  # decode
+            c_sh = sh.cache_sharding(spec["cache"], mesh, seq_shard=spec["seq_shard"])
+            t_sh = sh.batch_sharding(spec["token"], mesh)
+            step = make_serve_step(cfg, mesh)
+            fn = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, t_sh, None),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            with mesh:
+                lowered = fn.lower(params, spec["cache"], spec["token"], jnp.int32(17))
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost_raw = compiled.cost_analysis()
+        from repro.launch.roofline import collective_census
+
+        hlo = compiled.as_text()
+        coll_raw = collective_census(hlo)
+        # honest per-step counts: scan bodies extrapolated (see helper)
+        cost, coll = _analysis_counts(cfg, shape_name, mesh, profile)
+        n_dev = mesh.devices.size
+        result = {
+            "status": "ok",
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "n_devices": int(n_dev),
+            "compile_s": round(compile_s, 1),
+            "cost": cost,
+            "cost_rolled_raw": {k: cost_raw.get(k) for k in
+                                ("flops", "bytes accessed") if k in cost_raw},
+            "memory": _mem_dict(mem),
+            "collectives": coll,
+            "collectives_rolled_raw": coll_raw,
+            "n_params": get_n_params(arch),
+            "opts": list(opts),
+        }
+        return result, hlo
+    finally:
+        sh.install(None)
+
+
+def get_n_params(arch):
+    from repro.configs import get_config
+
+    c = get_config(arch)
+    return {"total": c.n_params(), "active": c.n_active_params()}
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch, shape_name, mesh_kind, outdir: pathlib.Path, save_hlo=True,
+             opts: tuple[str, ...] = ()):
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    if opts:
+        tag += "__" + "-".join(opts)
+    t0 = time.time()
+    try:
+        res = _build_cell(arch, shape_name, mesh_kind == "multi", opts)
+        if isinstance(res, tuple):
+            result, hlo = res
+            if save_hlo:
+                (outdir / f"{tag}.hlo.txt").write_text(hlo)
+        else:
+            result = res
+    except Exception as e:
+        result = {"status": "error", "arch": arch, "shape": shape_name,
+                  "mesh": mesh_kind, "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    result["wall_s"] = round(time.time() - t0, 1)
+    (outdir / f"{tag}.json").write_text(json.dumps(result, indent=2))
+    status = result["status"]
+    extra = result.get("reason", result.get("error", ""))[:120]
+    print(f"[dryrun] {tag:60s} {status:6s} {result['wall_s']:7.1f}s {extra}",
+          flush=True)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma list: bf16_reduce,fsdp,vp_embed (§Perf knobs)")
+    args = ap.parse_args(argv)
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    from repro.configs import ARCH_NAMES
+    from repro.launch.specs import SHAPES
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape_name}__{mesh_kind}"
+                if opts:
+                    tag += "__" + "-".join(opts)
+                done = outdir / f"{tag}.json"
+                if done.exists():
+                    prev = json.loads(done.read_text())
+                    if prev.get("status") in ("ok", "skip"):
+                        print(f"[dryrun] {tag:60s} cached", flush=True)
+                        continue
+                r = run_cell(arch, shape_name, mesh_kind, outdir,
+                             save_hlo=not args.no_hlo, opts=opts)
+                failures += r["status"] == "error"
+    print(f"[dryrun] done, {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

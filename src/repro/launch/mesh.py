@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before the first device query.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_elastic_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run under "
+            "launch/dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_elastic_mesh(*, model_parallel: int = 16):
+    """Best-effort mesh from whatever devices exist right now.
+
+    Used by the trainer's restart path: after losing a pod (or shrinking to
+    1 CPU device in tests) training resumes on ``n // model_parallel × mp``
+    devices; checkpoint restore resharding handles the layout change.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    mp = model_parallel
+    while mp > 1 and len(devices) % mp:
+        mp //= 2
+    dp = len(devices) // mp
+    return jax.sharding.Mesh(np.asarray(devices[: dp * mp]).reshape(dp, mp),
+                             ("data", "model"))

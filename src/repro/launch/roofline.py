@@ -1,0 +1,203 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Hardware model (assignment): TPU v5e-class chip — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.  From each cell's compiled artifact:
+
+  compute_s    = HLO flops (per-device — the SPMD module is the per-device
+                 program) / 197e12
+  memory_s     = HLO 'bytes accessed' / 819e9  (upper bound: XLA's counter
+                 includes VMEM-resident reuse)
+  collective_s = Σ operand bytes of collectives × ring-factor / 50e9
+                 (ring factor 2 for all-reduce = reduce-scatter+all-gather,
+                 1 otherwise; single-link conservative model)
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (forward/
+decode); the MODEL/HLO ratio flags remat & dispatch waste.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+from typing import Iterable
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(r"%([\w\.\-]+) = ((?:\([^=]*?\))|(?:[\w\[\]{},: ]+?)) ([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Per-collective-type operand/result byte totals from HLO text."""
+    sizes: dict[str, int] = {}
+    ops: list[tuple[str, str, str]] = []  # (kind, result_type, args_str)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        name, rtype, op = m.group(1), m.group(2), m.group(3)
+        sizes[name] = _shape_bytes(rtype)
+        kind = op.removesuffix("-start").removesuffix("-done")
+        if kind in _COLLECTIVES and not op.endswith("-done"):
+            lpar = line.find("(", m.end() - 1)
+            args = line[m.end() - 1:]
+            ops.append((kind, rtype, args, name))
+
+    census: dict[str, dict] = {
+        k: {"count": 0, "operand_bytes": 0, "result_bytes": 0} for k in _COLLECTIVES
+    }
+    for kind, rtype, args, name in ops:
+        census[kind]["count"] += 1
+        census[kind]["result_bytes"] += _shape_bytes(rtype)
+        operand_names = re.findall(r"%([\w\.\-]+)", args)
+        ob = sum(sizes.get(n, 0) for n in operand_names if n != name)
+        if ob == 0:  # fall back to inline operand types
+            ob = _shape_bytes(args)
+        census[kind]["operand_bytes"] += ob
+    census = {k: v for k, v in census.items() if v["count"]}
+    return census
+
+
+def analytic_memory_floor(cell: dict) -> float:
+    """Lower bound on per-device HBM traffic (bytes) for one step.
+
+    Train:  params read (fwd+bwd, bf16) + grad write + Adam m/v read+write
+            + param write + remat-boundary activations (save+reload).
+    Decode: active params read once + KV/state cache read+write.
+    Prefill: params read + activations written once.
+    XLA's 'bytes accessed' is the matching upper bound (no VMEM-reuse
+    credit); the truth lives between the two.
+    """
+    from repro.launch.specs import SHAPES
+
+    n = cell["n_params"]["total"] / cell["n_devices"]
+    n_act = cell["n_params"]["active"] / cell["n_devices"]
+    sp = SHAPES[cell["shape"]]
+    if sp.kind == "train":
+        opt_state_bytes = 4  # fp32 m/v (bf16 for jamba; keep conservative)
+        traffic = n * 2 * 2 + n * 2 + n * 4 * opt_state_bytes + n * 2
+        # one (B,S,d)-ish boundary activation per layer, saved + reloaded
+        traffic += 2 * cell.get("act_boundary_bytes", 0)
+        return traffic
+    if sp.kind == "prefill":
+        return n * 2 * 2
+    # decode: every active weight + the whole cache once (+ cache write)
+    cache_bytes = cell.get("memory", {}).get("argument_size_in_bytes", 0)
+    return n_act * 2 + cache_bytes
+
+
+def roofline_terms(cell: dict, *, tokens: int | None = None) -> dict:
+    """Three roofline terms (seconds) + bottleneck for one dry-run cell."""
+    cost = cell.get("cost", {})
+    flops = float(cost.get("flops") or 0.0)
+    bytes_acc = float(cost.get("bytes accessed") or 0.0)
+    coll = cell.get("collectives", {})
+    coll_bytes = 0.0
+    for kind, v in coll.items():
+        if kind == "all-reduce":
+            coll_bytes += 2.0 * v["operand_bytes"]  # ring RS + AG
+        elif kind == "all-gather":
+            coll_bytes += v["result_bytes"]  # each device receives the gather
+        else:
+            coll_bytes += v["operand_bytes"]
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    out = dict(terms, bottleneck=dom.removesuffix("_s"))
+    out["memory_floor_s"] = analytic_memory_floor(cell) / HBM_BW
+    # bottleneck under the optimistic memory model (perfect VMEM reuse)
+    lb_terms = dict(terms, memory_s=out["memory_floor_s"])
+    out["bottleneck_floor"] = max(lb_terms, key=lb_terms.get).removesuffix("_s")
+    if tokens is not None and cell.get("n_params"):
+        n_active = cell["n_params"]["active"]
+        mult = 6 if cell["shape"].startswith("train") else 2
+        model_flops = mult * n_active * tokens / cell["n_devices"]
+        out["model_flops"] = model_flops
+        out["hlo_flops"] = flops
+        out["model_over_hlo"] = model_flops / flops if flops else 0.0
+        # roofline fraction: useful model flops per device over peak,
+        # evaluated at the step's bound (= max of the three terms)
+        bound = max(terms.values())
+        out["roofline_fraction"] = (model_flops / PEAK_FLOPS) / bound if bound else 0.0
+        bound_f = max(lb_terms.values())
+        out["roofline_fraction_floor"] = (
+            (model_flops / PEAK_FLOPS) / bound_f if bound_f else 0.0
+        )
+    return out
+
+
+def cell_tokens(cell: dict) -> int:
+    from repro.launch.specs import SHAPES
+
+    sp = SHAPES[cell["shape"]]
+    if sp.kind == "decode":
+        return sp.global_batch  # one token per sequence per step
+    return sp.global_batch * sp.seq_len
+
+
+def load_cells(outdir: str | pathlib.Path) -> list[dict]:
+    cells = []
+    for f in sorted(pathlib.Path(outdir).glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def summarize(outdir: str | pathlib.Path, mesh: str = "single") -> str:
+    """Markdown roofline table for EXPERIMENTS.md §Roofline."""
+    rows = []
+    header = (
+        "| arch | shape | compute_s | mem_ub_s | mem_floor_s | coll_s | bound(ub/floor) | "
+        "MODEL/HLO | frac(ub) | frac(floor) |\n"
+        "|---|---|---|---|---|---|---|---|---|---|"
+    )
+    for cell in load_cells(outdir):
+        if cell.get("status") != "ok" or cell.get("mesh") != mesh:
+            continue
+        t = roofline_terms(cell, tokens=cell_tokens(cell))
+        rows.append(
+            f"| {cell['arch']} | {cell['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['memory_floor_s']:.3e} | "
+            f"{t['collective_s']:.3e} | {t['bottleneck']}/{t['bottleneck_floor']} | "
+            f"{t['model_over_hlo']:.2f} | {t['roofline_fraction']:.3f} | "
+            f"{t['roofline_fraction_floor']:.3f} |"
+        )
+    return header + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun"
+    print(summarize(outdir))

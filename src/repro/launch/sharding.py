@@ -1,0 +1,258 @@
+"""Sharding rules: logical activation axes + path-based parameter layouts.
+
+Megatron-style TP on the ``model`` axis:
+  column-parallel:  wq/wk/wv, wi_gate/wi_up, w_x/w_z (output dim sharded)
+  row-parallel:     wo, w_out (input dim sharded → XLA inserts the
+                    all-reduce the TP pattern requires)
+  vocab-parallel:   embed / head (+ sharded CE via logits constraint)
+  expert-parallel:  experts' leading E dim on ``model``
+Batch-like activation dims shard over ("pod","data").  Every rule checks
+divisibility and falls back to replication (e.g. smollm's 15 heads, kv=5).
+
+ZeRO-1: optimizer states take the param layout plus the first still-
+unsharded, divisible dim over the batch axes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["axis_rules", "param_sharding", "opt_sharding", "batch_sharding",
+           "cache_sharding", "install"]
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def axis_rules(mesh: Mesh, profile: str = "tp", vp_embed: bool = False) -> dict:
+    """Logical-axis rules consumed by models.layers.shard().
+
+    profile='tp'   — Megatron TP on the model axis (baseline).
+    profile='fsdp' — fully-sharded data parallel over ALL axes: batch dims
+        shard over (pod, data, model); no head/ffn activation sharding (the
+        model axis carries parameter shards, gathered per use by SPMD).
+        §Perf lever for small models where TP's per-layer activation
+        all-reduces dwarf an FSDP parameter all-gather.
+    vp_embed       — Megatron vocab-parallel embedding lookup (shard_map
+        local-range gather + psum) instead of gathering the vocab-sharded
+        table.
+    """
+    if profile == "fsdp":
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+        return {
+            "mesh": mesh,
+            "profile": profile,
+            "pad_to": 1,
+            "vp_embed": False,
+            "rules": {"batch": all_axes, "seq": all_axes},
+        }
+    return {
+        "mesh": mesh,
+        "profile": profile,
+        "pad_to": mesh.shape.get("model", 1),
+        "vp_embed": vp_embed,
+        "rules": {
+            "batch": batch_axes(mesh),
+            "heads": "model",
+            "kv_heads": "model",
+            "ffn": "model",
+            "vocab": "model",
+            "expert": "model",
+            "seq": batch_axes(mesh),  # context parallelism (long_500k caches)
+        },
+    }
+
+
+def install(mesh: Mesh | None, profile: str = "tp", vp_embed: bool = False):
+    """Install activation-sharding rules process-wide (None to clear)."""
+    from repro.models.layers import set_axis_rules
+
+    set_axis_rules(axis_rules(mesh, profile, vp_embed) if mesh is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_COL = ("wq", "wk", "wv", "wi_gate", "wi_up", "w_x", "w_z", "w_dt")
+_ROW = ("wo", "w_out")
+_VOCAB = ("embed", "head")
+_REPL = ("norm", "router", "bias", "A_log", "D", "dt_bias", "w_bc", "conv_bc",
+         "w_dkv", "w_krope", "kv_norm")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _spec_for(path: str, shape: tuple[int, ...], model: int) -> P:
+    """PartitionSpec for one param leaf (model-axis TP only)."""
+    nd = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+
+    def ok(dim):  # shardable?
+        return shape[dim] % model == 0
+
+    spec: list = [None] * nd
+    if "experts" in path:
+        # stacked (scan?, E, d, ff): shard E — first dim of the trailing 3
+        e_dim = nd - 3
+        if shape[e_dim] % model == 0:
+            spec[e_dim] = "model"
+        return P(*spec)
+    if leaf in ("w_uk", "w_uv"):  # (scan?, lora, H, hd) — shard heads
+        h_dim = nd - 2
+        if ok(h_dim):
+            spec[h_dim] = "model"
+        return P(*spec)
+    if leaf == "conv_x":  # (scan?, channels, width)
+        if ok(nd - 2):
+            spec[nd - 2] = "model"
+        return P(*spec)
+    if any(k in leaf for k in _REPL):
+        return P(*spec)
+    if leaf in _VOCAB and nd >= 2:
+        if ok(nd - 2):
+            spec[nd - 2] = "model"
+        return P(*spec)
+    if leaf in _COL and nd >= 2:
+        if ok(nd - 1):
+            spec[nd - 1] = "model"
+        return P(*spec)
+    if leaf in _ROW and nd >= 2:
+        if ok(nd - 2):
+            spec[nd - 2] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def _spec_fsdp(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Fully-sharded layout: prefer one dim divisible by ALL devices; else
+    split data/model across two dims; else single-axis; else replicate."""
+    axes = [a for a in ("pod", "data", "model") if a in mesh.shape]
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    spec: list = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % total == 0 and shape[i] >= total:
+            spec[i] = tuple(axes)
+            return P(*spec)
+    # two-dim split: model on one dim, (pod,data) on another
+    model = mesh.shape.get("model", 1)
+    dp = total // model
+    m_dim = next((i for i in order if shape[i] % model == 0 and shape[i] >= model), None)
+    if m_dim is not None:
+        spec[m_dim] = "model"
+    d_dim = next((i for i in order if i != m_dim and shape[i] % dp == 0 and shape[i] >= dp), None)
+    if d_dim is not None and dp > 1:
+        dax = tuple(a for a in axes if a != "model")
+        spec[d_dim] = dax if len(dax) > 1 else dax[0]
+    return P(*spec)
+
+
+def param_sharding(param_shapes, mesh: Mesh, profile: str = "tp"):
+    model = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        if profile == "fsdp":
+            return NamedSharding(mesh, _spec_fsdp(leaf.shape, mesh))
+        return NamedSharding(mesh, _spec_for(_path_str(path), leaf.shape, model))
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def opt_sharding(param_shapes, mesh: Mesh, profile: str = "tp"):
+    """ZeRO-1: param layout + first free divisible dim over the batch axes."""
+    model = mesh.shape.get("model", 1)
+    baxes = batch_axes(mesh)
+    dp = 1
+    for a in baxes:
+        dp *= mesh.shape[a]
+
+    def one(path, leaf):
+        if profile == "fsdp":
+            return NamedSharding(mesh, _spec_fsdp(leaf.shape, mesh))
+        spec = list(_spec_for(_path_str(path), leaf.shape, model))
+        if baxes and dp > 1:
+            for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+                if s is None and dim % dp == 0 and dim >= dp:
+                    spec[i] = baxes if len(baxes) > 1 else baxes[0]
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    shard_one_tree = jax.tree_util.tree_map_with_path(one, param_shapes)
+    return {"m": shard_one_tree, "v": shard_one_tree}
+
+
+# ---------------------------------------------------------------------------
+# batches and caches
+# ---------------------------------------------------------------------------
+
+
+def batch_sharding(batch_shapes, mesh: Mesh, profile: str = "tp"):
+    if profile == "fsdp":
+        baxes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    else:
+        baxes = batch_axes(mesh)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        # largest axis prefix that divides the batch dim
+        cand = list(baxes)
+        while cand:
+            dp = 1
+            for a in cand:
+                dp *= mesh.shape[a]
+            if dp > 1 and leaf.shape and leaf.shape[0] % dp == 0:
+                spec[0] = tuple(cand) if len(cand) > 1 else cand[0]
+                break
+            cand.pop()  # drop the innermost axis and retry
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_sharding(cache_shapes, mesh: Mesh, *, seq_shard: bool = False):
+    """Decode caches: shard batch dim; kv-head/SSM-head dims over model when
+    divisible; optionally the sequence dim over the batch axes (long_500k,
+    batch=1 context parallelism)."""
+    model = mesh.shape.get("model", 1)
+    baxes = batch_axes(mesh)
+    dp = 1
+    for a in baxes:
+        dp *= mesh.shape[a]
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    # (batch dim, seq dim, model dim) anchored from the END of each leaf's
+    # shape — stacked caches carry leading scan dims, trailing dims are fixed
+    _ANCHORS = {
+        "k": (-4, -3, -2), "v": (-4, -3, -2),          # (..., B, S, K, hd)
+        "ckv": (-3, -2, None), "k_rope": (-3, -2, None),  # (..., B, S, lora)
+        "state": (-4, None, -3),                        # (..., B, H, P, N)
+        "conv_x": (-3, None, -1), "conv_bc": (-3, None, None),  # (..., B, w, C)
+    }
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        leafname = pstr.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        anchors = _ANCHORS.get(leafname)
+        if anchors is None:
+            return NamedSharding(mesh, P(*spec))
+        b_dim, s_dim, m_dim = anchors
+        if dp > 1 and shape[b_dim] % dp == 0:
+            spec[b_dim] = b
+        elif seq_shard and s_dim is not None and dp > 1 and shape[s_dim] % dp == 0:
+            spec[s_dim] = b  # context parallelism when batch can't shard
+        if m_dim is not None and model > 1 and shape[m_dim] % model == 0:
+            spec[m_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

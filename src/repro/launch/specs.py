@@ -1,0 +1,85 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins per (arch × shape).
+
+The four LM shapes (assignment):
+  train_4k     seq 4096,    global_batch 256   → train_step
+  prefill_32k  seq 32768,   global_batch 32    → prefill (forward logits)
+  decode_32k   seq 32768,   global_batch 128   → serve_step (1 new token)
+  long_500k    seq 524288,  global_batch 1     → serve_step, sub-quadratic
+                                                  archs only (DESIGN.md §4)
+
+Multimodal stubs: whisper gets encoder frame embeddings at seq/2 frames for
+train/prefill (decode uses the native 1500-frame cross cache); llava gets
+576 patch embeddings spliced ahead of the text tokens (text len shrinks so
+the total sequence matches the assigned seq).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+from repro.models.config import ArchConfig
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "SKIP(full-attn): long_500k requires sub-quadratic attention"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns {kind, batch | (cache, token, pos)}; no device allocation.
+    """
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    out: dict[str, Any] = {"kind": sp.kind, "shape": sp}
+
+    if sp.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        text_len = S - (cfg.n_patches or 0)
+        batch["tokens"] = _sds((B, text_len), jnp.int32)
+        if cfg.encdec:
+            batch["frames"] = _sds((B, S // 2, cfg.d_model), cfg.adtype)
+        if cfg.n_patches:
+            batch["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), cfg.adtype)
+        out["batch"] = batch
+        return out
+
+    # decode: 1 new token against an S-long cache
+    enc_frames = cfg.enc_frames if cfg.encdec else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, enc_frames=enc_frames)
+    )
+    out["cache"] = cache
+    out["token"] = _sds((B, 1), jnp.int32)
+    out["pos"] = _sds((), jnp.int32)
+    out["seq_shard"] = sp.name == "long_500k"
+    return out

@@ -1,0 +1,63 @@
+"""jit-able step factories: train_step / prefill_step / serve_step.
+
+These close over (cfg, mesh, hyper) so the jitted signature carries only
+arrays — the dry-run lowers exactly what production would run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, encode, forward, lm_loss
+from repro.models.config import ArchConfig
+from repro.optim import AdamWHyper, adamw_update
+from repro.optim.schedules import cosine_warmup
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step", "hyper_for"]
+
+
+def hyper_for(cfg: ArchConfig) -> AdamWHyper:
+    # bf16 optimizer states for the 398B config so params+states fit a pod
+    # (DESIGN.md §6); fp32 otherwise.
+    state_dtype = "bfloat16" if cfg.n_params() > 5e10 else "float32"
+    return AdamWHyper(lr=3e-4, state_dtype=state_dtype)
+
+
+def make_train_step(cfg: ArchConfig, mesh=None, hyper: AdamWHyper | None = None,
+                    total_steps: int = 10_000):
+    hyper = hyper or hyper_for(cfg)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            loss, metrics = lm_loss(p, batch, cfg, mesh=mesh)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = cosine_warmup(step, peak=hyper.lr, warmup=200, total=total_steps)
+        new_params, new_opt = adamw_update(params, grads, opt_state, step, hyper, lr=lr)
+        gnorm = jnp.sqrt(sum(jnp.vdot(g.astype(jnp.float32), g.astype(jnp.float32))
+                             for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None):
+    def prefill_step(params, batch):
+        enc_out = None
+        if cfg.encdec:
+            enc_out = encode(params, batch["frames"], cfg, mesh)
+        logits, _ = forward(params, batch["tokens"], cfg, mesh=mesh,
+                            enc_out=enc_out, patch_embeds=batch.get("patch_embeds"))
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None):
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cache, token, pos, cfg, mesh=mesh)
+
+    return serve_step

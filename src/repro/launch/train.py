@@ -1,0 +1,65 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 200 --batch 8 --seq 128 --slope
+
+Full-size configs require the production mesh (run under the dry-run's
+XLA_FLAGS or on real hardware); ``--reduced`` trains the same-family small
+config on whatever devices exist (the examples use this).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="runs/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--slope", action="store_true",
+                    help="enable SLOPE-path regularization of the embedding")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.launch import sharding as sh
+    from repro.models.slope_reg import SlopeRegConfig
+    from repro.optim import AdamWHyper
+    from repro.train import TrainConfig, Trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    mesh = None
+    if len(jax.devices()) > 1:
+        mesh = make_elastic_mesh(model_parallel=min(16, len(jax.devices())))
+        sh.install(mesh)
+        print(f"[train] mesh {dict(mesh.shape)}")
+
+    slope = None
+    if args.slope:
+        slope = SlopeRegConfig(total_steps=args.steps, screen_every=max(args.steps // 10, 1))
+
+    tc = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir, slope=slope)
+    trainer = Trainer(cfg, tc, mesh=mesh, hyper=AdamWHyper(lr=args.lr),
+                      global_batch=args.batch, seq_len=args.seq)
+    out = trainer.run()
+    print(f"[train] done at step {out['final_step']}; "
+          f"final loss {out['metrics'][-1]['loss']:.4f}; "
+          f"{len(out['stragglers'])} straggler events")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

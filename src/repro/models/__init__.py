@@ -1,0 +1,19 @@
+"""LM substrate: config-driven models covering all assigned architectures."""
+
+from .config import ArchConfig, MoECfg, SSMCfg
+from .model import (
+    init_params,
+    forward,
+    lm_loss,
+    init_cache,
+    decode_step,
+    encode,
+    stack_pattern,
+)
+from .layers import set_axis_rules, get_axis_rules, shard
+
+__all__ = [
+    "ArchConfig", "MoECfg", "SSMCfg",
+    "init_params", "forward", "lm_loss", "init_cache", "decode_step",
+    "encode", "stack_pattern", "set_axis_rules", "get_axis_rules", "shard",
+]

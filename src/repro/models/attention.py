@@ -1,0 +1,366 @@
+"""Attention mixers: GQA/MQA full attention, sliding-window (SWA), MLA
+(DeepSeek low-rank KV), and cross attention — each with a full-sequence
+(train/prefill) form and a single-token cached decode form.
+
+Decode caches:
+  full/cross: k, v        (B, S_ctx, K, hd)
+  swa:        ring buffer  (B, W, K, hd) + slot positions (B, W)
+  mla:        latent ckv   (B, S_ctx, lora) + shared k_rope (B, S_ctx, rope)
+              — the paper-faithful MLA memory saving; decode uses the
+              absorbed form (scores in latent space, no K/V expansion).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import apply_rope, dense, init_dense, rope_cos_sin, shard
+
+__all__ = [
+    "init_attention", "attention", "attention_decode",
+    "init_attn_cache", "precompute_cross_kv",
+]
+
+_NEG = -1e30
+
+
+def _dus(cache, update, pos, axis: int):
+    """dynamic_update_slice at ``pos`` on ``axis`` (index dtypes unified)."""
+    idx = [jnp.zeros((), jnp.int32)] * cache.ndim
+    idx[axis] = jnp.asarray(pos, jnp.int32)
+    return jax.lax.dynamic_update_slice(cache, update.astype(cache.dtype), tuple(idx))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.pdtype
+    ks = jax.random.split(key, 8)
+    if cfg.attention == "mla" and not cross:
+        lo, nope, rope, vd = cfg.mla_kv_lora, cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim
+        return {
+            "wq": init_dense(ks[0], d, H * (nope + rope), dt),
+            "w_dkv": init_dense(ks[1], d, lo, dt),
+            "w_krope": init_dense(ks[2], d, rope, dt),
+            "kv_norm": jnp.ones((lo,), dt),
+            "w_uk": (jax.random.normal(ks[3], (lo, H, nope), jnp.float32) / jnp.sqrt(lo)).astype(dt),
+            "w_uv": (jax.random.normal(ks[4], (lo, H, vd), jnp.float32) / jnp.sqrt(lo)).astype(dt),
+            "wo": init_dense(ks[5], H * vd, d, dt),
+        }
+    return {
+        "wq": init_dense(ks[0], d, H * hd, dt),
+        "wk": init_dense(ks[1], d, K * hd, dt),
+        "wv": init_dense(ks[2], d, K * hd, dt),
+        "wo": init_dense(ks[3], H * hd, d, dt),
+    }
+
+
+def init_attn_cache(cfg: ArchConfig, B: int, S_ctx: int, dtype) -> dict:
+    """Zero decode cache for one layer."""
+    if cfg.attention == "mla":
+        return {
+            "ckv": jnp.zeros((B, S_ctx, cfg.mla_kv_lora), dtype),
+            "k_rope": jnp.zeros((B, S_ctx, cfg.mla_qk_rope), dtype),
+        }
+    K, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.attention == "swa":
+        W = min(cfg.window or S_ctx, S_ctx)
+        return {
+            "k": jnp.zeros((B, W, K, hd), dtype),
+            "v": jnp.zeros((B, W, K, hd), dtype),
+            "slot_pos": jnp.full((W,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((B, S_ctx, K, hd), dtype),
+        "v": jnp.zeros((B, S_ctx, K, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _model_axis_size() -> int:
+    from .layers import get_axis_rules
+
+    rules = get_axis_rules()
+    if not rules:
+        return 1
+    return rules.get("pad_to", rules["mesh"].shape.get("model", 1))
+
+
+def _pad_to_mult(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad_heads(q: jax.Array, H_eff: int) -> jax.Array:
+    """Zero-pad the head dim so it shards over the model axis.  Execution-
+    layer only (params stay faithful); padded heads are sliced off after."""
+    H = q.shape[2]
+    if H_eff == H:
+        return q
+    pad = jnp.zeros(q.shape[:2] + (H_eff - H,) + q.shape[3:], q.dtype)
+    return jnp.concatenate([q, pad], axis=2)
+
+
+def _kv_index_map(H: int, K: int, H_eff: int) -> jax.Array:
+    """q-head → kv-head map covering padded heads (they read kv head 0)."""
+    g = max(H // K, 1)
+    idx = [min(h // g, K - 1) if h < H else 0 for h in range(H_eff)]
+    return jnp.asarray(idx, jnp.int32)
+
+
+def _expand_kv_padded(k: jax.Array, H: int, H_eff: int) -> jax.Array:
+    """k (B,T,K,hd) → (B,T,H_eff,hd) honouring GQA groups + head padding."""
+    K = k.shape[-2]
+    if H_eff == H and K and H % K == 0:
+        return _expand_kv(k, H)
+    return jnp.take(k, _kv_index_map(H, K, H_eff), axis=2)
+
+
+_FLASH = False
+_FLASH_CHUNK = 1024
+
+
+def set_flash(v: bool, chunk: int = 1024):
+    """§Perf knob: online-softmax chunked attention — the (S,T) score
+    matrix never materializes (flash attention's insight, TPU-adapted: KV
+    streams through VMEM-sized chunks, f32 running max/denominator).
+    Numerically identical to the dense path up to fp associativity."""
+    global _FLASH, _FLASH_CHUNK
+    _FLASH = v
+    _FLASH_CHUNK = chunk
+
+
+def _sdpa(q, k, v, mask) -> jax.Array:
+    """q (B,S,H,hd), k/v (B,T,H,hd), mask (Sm,T) additive, Sm ∈ {1, S}."""
+    T = k.shape[1]
+    if _FLASH and T > _FLASH_CHUNK and T % _FLASH_CHUNK == 0 and mask.ndim == 2:
+        return _sdpa_flash(q, k, v, mask)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v, preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def _sdpa_flash(q, k, v, mask) -> jax.Array:
+    """Online-softmax attention over KV chunks (O(S·chunk) live scores)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    C = _FLASH_CHUNK
+    nc = T // C
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    kc = jnp.moveaxis(k.reshape(B, nc, C, H, hd), 1, 0)   # (nc,B,C,H,hd)
+    vc = jnp.moveaxis(v.reshape(B, nc, C, H, hd), 1, 0)
+    Sm = mask.shape[0]
+    mc = jnp.moveaxis(mask.reshape(Sm, nc, C), 1, 0)      # (nc,Sm,C)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, mk = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + mk[None, None]                            # (B,H,S,C)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        w = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(w, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", w.astype(q.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, mc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def _expand_kv(k: jax.Array, H: int) -> jax.Array:
+    K = k.shape[-2]
+    if K == H:
+        return k
+    return jnp.repeat(k, H // K, axis=-2)
+
+
+def _causal_mask(S: int, T: int, window: int = 0) -> jax.Array:
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    m = kpos > qpos
+    if window:
+        m |= kpos <= qpos - window
+    return jnp.where(m, _NEG, 0.0).astype(jnp.float32)
+
+
+def attention(x, p, cfg: ArchConfig, positions, *, causal: bool = True,
+              kv_x: jax.Array | None = None, use_rope: bool | None = None) -> jax.Array:
+    """Full-sequence attention.  ``kv_x`` switches to cross attention."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    if cfg.attention == "mla" and kv_x is None:
+        return _mla_attention(x, p, cfg, positions)
+    K, hd = cfg.n_kv_heads, cfg.hd
+    src = x if kv_x is None else kv_x
+    T = src.shape[1]
+    q = dense(x, p["wq"]).reshape(B, S, H, hd)
+    k = dense(src, p["wk"]).reshape(B, T, K, hd)
+    v = dense(src, p["wv"]).reshape(B, T, K, hd)
+    rope_on = cfg.use_rope if use_rope is None else use_rope
+    if rope_on and kv_x is None:
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta, jnp.float32)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    H_eff = _pad_to_mult(H, _model_axis_size())
+    q = shard(_pad_heads(q, H_eff), "batch", None, "heads", None)
+    k = shard(_expand_kv_padded(k, H, H_eff), "batch", None, "heads", None)
+    v = shard(_expand_kv_padded(v, H, H_eff), "batch", None, "heads", None)
+    if kv_x is not None or not causal:
+        mask = jnp.zeros((S, T), jnp.float32)
+    else:
+        mask = _causal_mask(S, T, cfg.window if cfg.attention == "swa" else 0)
+    out = _sdpa(q, k, v, mask)[:, :, :H]
+    out = shard(out, "batch", None, None, None)
+    return dense(out.reshape(B, S, H * hd), p["wo"])
+
+
+def _mla_attention(x, p, cfg: ArchConfig, positions) -> jax.Array:
+    from .layers import rms_norm
+
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope, vd = cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim
+    q = dense(x, p["wq"]).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv = rms_norm(dense(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = dense(x, p["w_krope"])[:, :, None, :]  # (B,S,1,rope) shared head
+    cos, sin = rope_cos_sin(positions, rope, cfg.rope_theta, jnp.float32)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    k_nope = jnp.einsum("bsl,lhn->bshn", ckv, p["w_uk"].astype(x.dtype),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsl,lhn->bshn", ckv, p["w_uv"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1)
+    H_eff = _pad_to_mult(H, _model_axis_size())
+    q_full = shard(_pad_heads(q_full, H_eff), "batch", None, "heads", None)
+    k_full = shard(_expand_kv_padded(k_full, H, H_eff), "batch", None, "heads", None)
+    v = _expand_kv_padded(v, H, H_eff)
+    out = _sdpa(q_full, k_full, v, _causal_mask(S, S))[:, :, :H]
+    return dense(out.reshape(B, S, H * vd), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+
+def attention_decode(x, p, cfg: ArchConfig, cache: dict, pos) -> tuple[jax.Array, dict]:
+    """x (B,1,d), scalar ``pos``; returns (y (B,1,d), updated cache)."""
+    if cfg.attention == "mla":
+        return _mla_decode(x, p, cfg, cache, pos)
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(x, p["wq"]).reshape(B, 1, H, hd)
+    k1 = dense(x, p["wk"]).reshape(B, 1, K, hd)
+    v1 = dense(x, p["wv"]).reshape(B, 1, K, hd)
+    if cfg.use_rope:
+        cos, sin = rope_cos_sin(jnp.full((1,), pos, jnp.int32), hd, cfg.rope_theta, jnp.float32)
+        q = apply_rope(q, cos, sin)
+        k1 = apply_rope(k1, cos, sin)
+
+    if cfg.attention == "swa":
+        W = cache["k"].shape[1]
+        slot = pos % W
+        k = _dus(cache["k"], k1, slot, 1)
+        v = _dus(cache["v"], v1, slot, 1)
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], jnp.full((1,), pos, jnp.int32),
+            (jnp.asarray(slot, jnp.int32),)
+        )
+        new_cache = {"k": k, "v": v, "slot_pos": slot_pos}
+        valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - (cfg.window or W))
+    else:
+        k = _dus(cache["k"], k1, pos, 1)
+        v = _dus(cache["v"], v1, pos, 1)
+        new_cache = {"k": k, "v": v}
+        valid = jnp.arange(k.shape[1]) <= pos
+
+    mask = jnp.where(valid, 0.0, _NEG).astype(jnp.float32)[None, :]  # (1,T)
+    H_eff = _pad_to_mult(H, _model_axis_size())
+    q = _pad_heads(q, H_eff)
+    kx = _expand_kv_padded(k.astype(x.dtype), H, H_eff)
+    vx = _expand_kv_padded(v.astype(x.dtype), H, H_eff)
+    out = _sdpa(q, kx, vx, mask)[:, :, :H]
+    y = dense(out.reshape(B, 1, H * hd), p["wo"])
+    return y, new_cache
+
+
+def _mla_decode(x, p, cfg: ArchConfig, cache: dict, pos) -> tuple[jax.Array, dict]:
+    from .layers import rms_norm
+
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rope, vd, lo = cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim, cfg.mla_kv_lora
+    q = dense(x, p["wq"]).reshape(B, 1, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv1 = rms_norm(dense(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)  # (B,1,lo)
+    kr1 = dense(x, p["w_krope"])[:, :, None, :]
+    cos, sin = rope_cos_sin(jnp.full((1,), pos, jnp.int32), rope, cfg.rope_theta, jnp.float32)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr1 = apply_rope(kr1, cos, sin)[:, :, 0, :]
+
+    ckv = _dus(cache["ckv"], ckv1, pos, 1)
+    krope = _dus(cache["k_rope"], kr1[:, None, :] if kr1.ndim == 2 else kr1, pos, 1)
+    new_cache = {"ckv": ckv, "k_rope": krope}
+
+    # absorbed decode: queries projected into the latent space
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, p["w_uk"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv.astype(x.dtype), preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, krope.astype(x.dtype), preferred_element_type=jnp.float32)
+    ) / jnp.sqrt(jnp.float32(nope + rope))
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    scores = scores + jnp.where(valid, 0.0, _NEG)[None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    lat = jnp.einsum("bhqs,bsl->bqhl", probs, ckv.astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bqhl,lhv->bqhv", lat, p["w_uv"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    y = dense(out.reshape(B, 1, H * vd), p["wo"])
+    return y, new_cache
+
+
+def precompute_cross_kv(enc_out, p, cfg: ArchConfig) -> dict:
+    """Cross-attention K/V from encoder output, computed once per request."""
+    B, T, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": dense(enc_out, p["wk"]).reshape(B, T, K, hd),
+        "v": dense(enc_out, p["wv"]).reshape(B, T, K, hd),
+    }
+
+
+def cross_attention_decode(x, p, cfg: ArchConfig, cross_kv: dict) -> jax.Array:
+    """Decoder-side cross attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q = dense(x, p["wq"]).reshape(B, 1, H, hd)
+    H_eff = _pad_to_mult(H, _model_axis_size())
+    q = _pad_heads(q, H_eff)
+    k = _expand_kv_padded(cross_kv["k"].astype(x.dtype), H, H_eff)
+    v = _expand_kv_padded(cross_kv["v"].astype(x.dtype), H, H_eff)
+    out = _sdpa(q, k, v, jnp.zeros((1, k.shape[1]), jnp.float32))[:, :, :H]
+    return dense(out.reshape(B, 1, H * hd), p["wo"])

@@ -1,0 +1,230 @@
+"""Architecture configuration for the LM substrate.
+
+One frozen dataclass describes every assigned architecture; ``configs/``
+instantiates them.  The model code (models/*.py) is driven entirely by this
+config — no per-arch model classes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+__all__ = ["MoECfg", "SSMCfg", "ArchConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # shared (always-on) experts, DeepSeek style
+    d_ff_shared: int = 0         # width of the shared expert block
+    period: int = 1              # MoE every `period`-th layer (jamba: 2)
+    offset: int = 0              # first MoE layer index within the period
+    first_dense: bool = False    # layer 0 dense (DeepSeek-V2)
+    d_ff_first_dense: int = 0
+    capacity_factor: float = 1.25
+    router_renorm: bool = True   # renormalise top-k gate weights
+    sharding: Literal["ep", "tp"] = "ep"   # expert- vs tensor-parallel experts
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 1e-3
+    dt_max: float = 1e-1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 → d_model // n_heads
+
+    # attention flavour
+    attention: Literal["full", "swa", "mla", "none"] = "full"
+    window: int = 0              # SWA window (0 = unused)
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    # MLA (DeepSeek-V2)
+    mla_kv_lora: int = 0
+    mla_qk_nope: int = 128
+    mla_qk_rope: int = 64
+    mla_v_dim: int = 128
+
+    # MLP
+    mlp_act: Literal["swiglu", "geglu", "gelu"] = "swiglu"
+
+    moe: MoECfg | None = None
+    ssm: SSMCfg | None = None
+
+    # hybrid interleave (jamba): attention at layer % attn_period == attn_offset
+    attn_period: int = 0
+    attn_offset: int = 0
+
+    # encoder-decoder (whisper)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_frames: int = 1500       # default encoder length for serve shapes
+
+    # VLM stub frontend
+    n_patches: int = 0
+
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    param_dtype: str = "bfloat16"
+    act_dtype: str = "bfloat16"
+
+    # assignment bookkeeping
+    sub_quadratic: bool = False  # eligible for long_500k
+    source: str = ""             # provenance note
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.act_dtype)
+
+    def layer_kind(self, idx: int) -> str:
+        """'attn' | 'ssm' for the mixer at layer ``idx`` (decoder stack)."""
+        if self.ssm is None:
+            return "attn"
+        if self.attn_period == 0:
+            return "ssm"
+        return "attn" if idx % self.attn_period == self.attn_offset else "ssm"
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if self.moe is None:
+            return False
+        if self.moe.first_dense and idx == 0:
+            return False
+        return idx % self.moe.period == self.moe.offset
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + stack), for roofline."""
+        d, V = self.d_model, self.vocab
+        total = V * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            total += self._mixer_params(i) + self._mlp_params(i) + 2 * d
+        if self.encdec:
+            n_mats = 2 if self.mlp_act == "gelu" else 3
+            for _ in range(self.n_enc_layers):
+                total += self._attn_params() + n_mats * self.d_ff * d + 2 * d
+            # cross attention in every decoder layer
+            total += self.n_layers * self._attn_params()
+        return total
+
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE top-k + shared only)."""
+        d = self.d_model
+        total = self.vocab * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            total += self._mixer_params(i) + self._mlp_params(i, active=True) + 2 * d
+        if self.encdec:
+            n_mats = 2 if self.mlp_act == "gelu" else 3
+            for _ in range(self.n_enc_layers):
+                total += self._attn_params() + n_mats * self.d_ff * d + 2 * d
+            total += self.n_layers * self._attn_params()
+        return total
+
+    def _attn_params(self) -> int:
+        d = self.d_model
+        if self.attention == "mla":
+            lo, nope, rope, vd = self.mla_kv_lora, self.mla_qk_nope, self.mla_qk_rope, self.mla_v_dim
+            H = self.n_heads
+            return (d * H * (nope + rope)          # Wq
+                    + d * (lo + rope)              # W_dkv + W_k_rope
+                    + lo * H * (nope + vd)         # W_uk, W_uv
+                    + H * vd * d)                  # Wo
+        H, K, hd = self.n_heads, self.n_kv_heads, self.hd
+        return d * H * hd + 2 * d * K * hd + H * hd * d
+
+    def _mixer_params(self, idx: int) -> int:
+        d = self.d_model
+        if self.layer_kind(idx) == "ssm":
+            s = self.ssm
+            di = s.d_inner(d)
+            H = s.n_heads(d)
+            proj_in = d * (2 * di + 2 * s.ngroups * s.d_state + H)
+            conv = (di + 2 * s.ngroups * s.d_state) * s.conv_width
+            return proj_in + conv + 2 * H + di + di * d  # A_log, D, norm, out
+        return self._attn_params()
+
+    def _mlp_params(self, idx: int, active: bool = False) -> int:
+        d = self.d_model
+        if self.is_moe_layer(idx):
+            m = self.moe
+            e = (m.top_k if active else m.n_experts)
+            total = e * 3 * d * m.d_ff_expert + d * m.n_experts  # experts + router
+            if m.n_shared:
+                total += 3 * d * (m.d_ff_shared or m.d_ff_expert * m.n_shared)
+            return total
+        if self.moe is not None and self.moe.first_dense and idx == 0:
+            return 3 * d * self.moe.d_ff_first_dense
+        if self.layer_kind(idx) == "ssm" and self.family == "ssm":
+            return 0  # pure mamba2 blocks have no separate MLP
+        n_mats = 2 if self.mlp_act == "gelu" else 3
+        return n_mats * d * self.d_ff
+
+    def reduced(self) -> "ArchConfig":
+        """A tiny config of the same family for CPU smoke tests."""
+        changes: dict = dict(
+            n_layers=max(2, min(4, self.n_layers)),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            window=min(self.window, 32) if self.window else 0,
+            n_patches=min(self.n_patches, 8) if self.n_patches else 0,
+            param_dtype="float32",
+            act_dtype="float32",
+        )
+        if self.encdec:
+            changes.update(n_enc_layers=2, enc_frames=16)
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 8),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=32,
+                d_ff_shared=32 if self.moe.n_shared else 0,
+                d_ff_first_dense=64 if self.moe.first_dense else 0,
+            )
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, headdim=16, chunk=8
+            )
+        if self.attention == "mla":
+            changes.update(mla_kv_lora=32, mla_qk_nope=16, mla_qk_rope=8, mla_v_dim=16)
+        if self.attn_period:
+            changes.update(n_layers=self.attn_period)  # one superblock
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,150 @@
+"""Shared NN layers: norms, rotary embeddings, MLPs, embedding/head.
+
+All matmuls take ``preferred_element_type=float32`` and cast back to the
+activation dtype; norms accumulate in f32.  Sharding hints go through
+:func:`shard` which reads the ambient logical-axis rules installed by
+``repro.launch.sharding`` (identity when unset, so smoke tests run
+annotation-free on one device).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+__all__ = [
+    "shard", "set_axis_rules", "get_axis_rules",
+    "rms_norm", "dense", "mlp", "init_mlp", "init_rms",
+    "rope_cos_sin", "apply_rope", "init_dense",
+]
+
+_AXIS_RULES: dict | None = None
+
+
+def set_axis_rules(rules: dict | None):
+    """Install logical-axis → mesh-axis rules (launch/sharding.py)."""
+    global _AXIS_RULES
+    _AXIS_RULES = rules
+
+
+def get_axis_rules():
+    return _AXIS_RULES
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op if no rules)."""
+    if _AXIS_RULES is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = _AXIS_RULES["mesh"]
+    rules = _AXIS_RULES["rules"]
+    spec = []
+    for ax, size in zip(logical_axes, x.shape):
+        mesh_axes = rules.get(ax) if ax else None
+        if mesh_axes is None:
+            spec.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        total = 1
+        for a in mesh_axes:
+            total *= mesh.shape[a]
+        spec.append(tuple(mesh_axes) if size % total == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_rms(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# §Perf knob: dtype of matmul partial sums.  Baseline f32 — XLA then
+# all-reduces f32 partial sums for every row-parallel matmul (2× collective
+# bytes).  bf16 matches Megatron practice: MXU still accumulates f32
+# internally per shard; only the cross-shard reduction payload narrows.
+_REDUCE_DTYPE = jnp.float32
+
+
+def set_reduce_dtype(dt):
+    global _REDUCE_DTYPE
+    _REDUCE_DTYPE = dt
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w.astype(x.dtype), preferred_element_type=_REDUCE_DTYPE).astype(x.dtype)
+
+
+# -- gated MLP ---------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, dtype, act: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi_up": init_dense(k2, d, d_ff, dtype),
+        "wo": init_dense(k3, d_ff, d, dtype),
+    }
+    if act != "gelu":  # gated variants carry a third matrix
+        p["wi_gate"] = init_dense(k1, d, d_ff, dtype)
+    return p
+
+
+def mlp(x: jax.Array, p: dict, act: str) -> jax.Array:
+    u = dense(x, p["wi_up"])
+    u = shard(u, "batch", None, "ffn") if u.ndim == 3 else u
+    if act == "gelu":
+        h = jax.nn.gelu(u, approximate=True)
+    else:
+        g = dense(x, p["wi_gate"])
+        g = shard(g, "batch", None, "ffn") if g.ndim == 3 else g
+        if act == "swiglu":
+            h = jax.nn.silu(g) * u
+        elif act == "geglu":
+            h = jax.nn.gelu(g, approximate=True) * u
+        else:
+            raise ValueError(act)
+    return dense(h, p["wo"])
+
+
+# -- rotary embeddings ---------------------------------------------------------
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float, dtype):
+    """positions (..., S) → cos/sin (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int, dtype) -> jax.Array:
+    """Additive sinusoidal position encodings (whisper stub frontend)."""
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)

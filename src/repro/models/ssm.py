@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) mixer, TPU-adapted.
+
+Training/prefill uses the chunked dual form: within a chunk of Q tokens the
+output is a (masked, decay-weighted) Q×Q attention-like matmul — MXU food —
+and across chunks a small (H, P, N) state recurrence runs in a ``lax.scan``.
+Decode is the O(1) recurrent update.  Hybrid archs (jamba) reuse this block
+in place of Mamba-1's selective scan (same recurrence class; documented
+adaptation in DESIGN.md).
+
+Projections are split per segment (z | x | BC | dt) instead of one fused
+in_proj so tensor-parallel sharding is clean: x/z (d_inner) and heads shard
+over ``model``; B, C (ngroups·d_state) stay replicated.
+
+Shapes: x (B, L, H, P); dt (B, L, H); A (H,); B/C (B, L, G, N); state (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig, SSMCfg
+from .layers import init_dense, dense, rms_norm, shard
+
+__all__ = ["init_ssm", "ssm_layer", "ssm_decode", "init_ssm_cache"]
+
+
+def init_ssm(key, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d, dt_p = cfg.d_model, cfg.pdtype
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    gn = s.ngroups * s.d_state
+    ks = jax.random.split(key, 8)
+    u = jax.random.uniform(ks[5], (H,), jnp.float32, s.dt_min, s.dt_max)
+    return {
+        "w_z": init_dense(ks[0], d, di, dt_p),
+        "w_x": init_dense(ks[1], d, di, dt_p),
+        "w_bc": init_dense(ks[2], d, 2 * gn, dt_p),
+        "w_dt": init_dense(ks[3], d, H, dt_p),
+        "conv_x": (jax.random.normal(ks[4], (di, s.conv_width), jnp.float32) * 0.1).astype(dt_p),
+        "conv_bc": (jax.random.normal(ks[6], (2 * gn, s.conv_width), jnp.float32) * 0.1).astype(dt_p),
+        "dt_bias": jnp.log(jnp.expm1(u)),  # softplus^-1(u), f32
+        "A_log": jnp.log(jax.random.uniform(ks[7], (H,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((di,), dt_p),
+        "w_out": init_dense(jax.random.fold_in(key, 9), di, d, dt_p),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv; x (B, L, C), w (C, width) — unrolled shifts."""
+    width = w.shape[1]
+    acc = x * w[:, width - 1].astype(x.dtype)
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + shifted * w[:, width - 1 - i].astype(x.dtype)
+    return acc
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, s: SSMCfg, init_state=None):
+    """Chunked SSD scan.
+
+    x (b,l,H,P) f32, dt (b,l,H) f32 (already softplus'ed), A (H,) f32 (<0),
+    Bm/Cm (b,l,G,N) f32.  Returns (y (b,l,H,P), final_state (b,H,P,N)).
+    """
+    b, l, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(s.chunk, l)
+    l_orig = l
+    if l % Q:  # pad the tail chunk; dt=0 ⇒ decay 1, no state contribution
+        pad = Q - l % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // Q
+    rep = H // G
+
+    def c(a, shape):  # reshape to chunks
+        return a.reshape((b, nc, Q) + shape)
+
+    xc, dtc = c(x, (H, P)), c(dt, (H,))
+    Bc, Cc = c(Bm, (G, N)), c(Cm, (G, N))
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)   # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A  # (b,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)       # within-chunk cumulative decay
+
+    # ---- intra-chunk (dual / attention-like) ----
+    # M[i,j] = (C_i·B_j) · exp(cum_i − cum_j) · dt_j   for j ≤ i
+    G_ij = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh, preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, :, :, None, :].swapaxes(2, 4) - cum[:, :, None, :, :].swapaxes(2, 4).swapaxes(3, 4))
+    # simpler/explicit: decay[b,c,h,i,j] = exp(cum[b,c,i,h] − cum[b,c,j,h])
+    decay = jnp.exp(
+        cum.transpose(0, 1, 3, 2)[:, :, :, :, None] - cum.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    )
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask, G_ij * decay, 0.0) * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, xc, preferred_element_type=jnp.float32)
+
+    # ---- chunk states ----
+    # S_c = Σ_j exp(cum_last − cum_j) dt_j B_j ⊗ x_j   → (b,nc,H,P,N)
+    w_state = jnp.exp(cum[:, :, -1:, :] - cum) * dtc    # (b,nc,Q,H)
+    S_c = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", w_state, Bh, xc,
+                     preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (b,nc,H)
+
+    # ---- inter-chunk recurrence ----
+    def step(carry, inp):
+        S_prev = carry                                  # (b,H,P,N)
+        S_chunk, dec = inp                              # (b,H,P,N), (b,H)
+        S_new = dec[:, :, None, None] * S_prev + S_chunk
+        return S_new, S_prev
+
+    S0 = jnp.zeros((b, H, P, N), jnp.float32) if init_state is None else init_state
+    S_final, S_prevs = lax.scan(
+        step,
+        S0,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)          # (b,nc,H,P,N)
+
+    # inter contribution: Y_inter[i] = exp(cum_i) · C_i @ S_prev(chunk)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch, S_prevs,
+                         preferred_element_type=jnp.float32) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, l, H, P)[:, :l_orig]
+    return y, S_final
+
+
+def ssm_layer(u, p, cfg: ArchConfig, *, init_state=None):
+    """Full Mamba2 block: u (B, L, d) → (B, L, d); returns (y, final_state)."""
+    s = cfg.ssm
+    B_, L, d = u.shape
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+
+    z = dense(u, p["w_z"])
+    x = dense(u, p["w_x"])
+    bc = dense(u, p["w_bc"])
+    dt_raw = dense(u, p["w_dt"]).astype(jnp.float32)
+
+    x = jax.nn.silu(_causal_conv(x, p["conv_x"]))
+    bc = jax.nn.silu(_causal_conv(bc, p["conv_bc"]))
+    x = shard(x, "batch", None, "ffn")
+
+    gn = s.ngroups * s.d_state
+    Bm = bc[..., :gn].reshape(B_, L, s.ngroups, s.d_state).astype(jnp.float32)
+    Cm = bc[..., gn:].reshape(B_, L, s.ngroups, s.d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xh = x.reshape(B_, L, H, s.headdim).astype(jnp.float32)
+    y, S_final = _ssd_chunked(xh, dt, A, Bm, Cm, s, init_state)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B_, L, di).astype(u.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return dense(y, p["w_out"]), S_final
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ArchConfig, B: int, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    gn = s.ngroups * s.d_state
+    return {
+        "state": jnp.zeros((B, H, s.headdim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((B, s.conv_width - 1, di), dtype),
+        "conv_bc": jnp.zeros((B, s.conv_width - 1, 2 * gn), dtype),
+    }
+
+
+def _conv_step(x1, state, w):
+    """One causal-conv step; x1 (B,C), state (B,width-1,C), w (C,width)."""
+    full = jnp.concatenate([state, x1[:, None, :]], axis=1)  # (B,width,C)
+    y = jnp.einsum("bwc,cw->bc", full.astype(jnp.float32), w.astype(jnp.float32))
+    return y.astype(x1.dtype), full[:, 1:]
+
+
+def ssm_decode(u1, p, cfg: ArchConfig, cache: dict):
+    """One-token decode: u1 (B, 1, d) → (y (B,1,d), new cache)."""
+    s = cfg.ssm
+    B_, _, d = u1.shape
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    u = u1[:, 0]
+
+    z = dense(u, p["w_z"])
+    x = dense(u, p["w_x"])
+    bc = dense(u, p["w_bc"])
+    dt_raw = dense(u, p["w_dt"]).astype(jnp.float32)
+
+    x, conv_x = _conv_step(x, cache["conv_x"], p["conv_x"])
+    bc, conv_bc = _conv_step(bc, cache["conv_bc"], p["conv_bc"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+
+    gn = s.ngroups * s.d_state
+    Bm = bc[:, :gn].reshape(B_, s.ngroups, s.d_state).astype(jnp.float32)
+    Cm = bc[:, gn:].reshape(B_, s.ngroups, s.d_state).astype(jnp.float32)
+    rep = H // s.ngroups
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])          # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B_, H, s.headdim).astype(jnp.float32)
+
+    S = cache["state"]
+    S = jnp.exp(dt * A)[:, :, None, None] * S + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh, preferred_element_type=jnp.float32
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", S, Ch, preferred_element_type=jnp.float32)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B_, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["w_out"])[:, None, :]
+    return out, {"state": S, "conv_x": conv_x, "conv_bc": conv_bc}

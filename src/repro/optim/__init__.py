@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update, AdamWHyper
+from .schedules import cosine_warmup
+
+__all__ = ["adamw_init", "adamw_update", "AdamWHyper", "cosine_warmup"]

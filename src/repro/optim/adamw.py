@@ -1,0 +1,62 @@
+"""AdamW without external dependencies.
+
+State dtype is configurable: fp32 for ≤20 B-param models, bf16 for
+jamba-398b so a single v5e pod's HBM holds params + states (DESIGN.md §6);
+all update math runs in f32 regardless.  State sharding (ZeRO-1) is applied
+by the caller via jit in_shardings — see launch/sharding.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWHyper", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWHyper:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+
+
+def adamw_init(params, hyper: AdamWHyper = AdamWHyper()):
+    dt = jnp.dtype(hyper.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(params, grads, state, step, hyper: AdamWHyper, lr=None):
+    """Returns (new_params, new_state).  ``step`` is 0-based; a traced ``lr``
+    (schedule value) overrides the static ``hyper.lr``."""
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - jnp.power(hyper.b1, t)
+    c2 = 1.0 - jnp.power(hyper.b2, t)
+    dt = jnp.dtype(hyper.state_dtype)
+    lr = hyper.lr if lr is None else lr
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = hyper.b1 * m.astype(jnp.float32) + (1 - hyper.b1) * g32
+        v32 = hyper.b2 * v.astype(jnp.float32) + (1 - hyper.b2) * jnp.square(g32)
+        mh = m32 / c1
+        vh = v32 / c2
+        delta = mh / (jnp.sqrt(vh) + hyper.eps) + hyper.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}

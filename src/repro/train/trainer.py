@@ -1,0 +1,151 @@
+"""Production train loop: checkpoint/restart, preemption handling,
+straggler watchdog, SLOPE-path regularization, metrics logging.
+
+Fault-tolerance model (single-controller JAX):
+  * periodic atomic checkpoints (params + optimizer + step) — restart
+    resumes from the newest valid manifest and the deterministic data
+    pipeline regenerates the exact stream from the step counter;
+  * SIGTERM/SIGINT → checkpoint-and-exit (preemption hook);
+  * per-step wall-clock watchdog: a step slower than ``straggler_factor`` ×
+    the running median is logged as a straggler event; the driver-level
+    response (re-dispatch on a spare slice) is a deployment policy — here we
+    record and continue, and the elastic mesh helper (launch/mesh.py) covers
+    the restart-on-fewer-devices path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import statistics
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM
+from repro.models import init_params, lm_loss
+from repro.models.config import ArchConfig
+from repro.models.slope_reg import SlopeRegConfig, apply_slope_prox, slope_screen_stats
+from repro.optim import AdamWHyper, adamw_init, adamw_update
+from repro.optim.schedules import cosine_warmup
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["TrainConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: str = "runs/ckpt"
+    seed: int = 0
+    straggler_factor: float = 3.0
+    slope: SlopeRegConfig | None = None
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tc: TrainConfig, *, mesh=None,
+                 hyper: AdamWHyper | None = None, global_batch: int = 8,
+                 seq_len: int = 64):
+        self.cfg, self.tc, self.mesh = cfg, tc, mesh
+        self.hyper = hyper or AdamWHyper()
+        self.data = SyntheticLM(cfg.vocab, seq_len, global_batch, seed=tc.seed)
+        self._stop = False
+        self.step_times: list[float] = []
+        self.straggler_events: list[dict] = []
+        self.metrics_log: list[dict] = []
+
+        def train_step(params, opt_state, batch, step):
+            def loss_fn(p):
+                return lm_loss(p, batch, cfg, mesh=mesh)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            lr = cosine_warmup(step, peak=self.hyper.lr, warmup=10, total=tc.steps)
+            params, opt_state = adamw_update(params, grads, opt_state, step,
+                                             self.hyper, lr=lr)
+            if tc.slope is not None:
+                params, opt_state = apply_slope_prox(params, opt_state, step, lr,
+                                                     tc.slope)
+            return params, opt_state, dict(metrics, loss=loss, lr=lr), grads
+
+        self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def _install_preemption_hook(self):
+        def handler(signum, frame):
+            self._stop = True
+
+        self._old = {s: signal.signal(s, handler) for s in (signal.SIGTERM, signal.SIGINT)}
+
+    def _restore_hooks(self):
+        for s, h in getattr(self, "_old", {}).items():
+            signal.signal(s, h)
+
+    def run(self) -> dict:
+        cfg, tc = self.cfg, self.tc
+        params = init_params(cfg, jax.random.PRNGKey(tc.seed))
+        opt_state = adamw_init(params, self.hyper)
+        start = 0
+        last = latest_step(tc.ckpt_dir)
+        if last is not None:
+            params, opt_state, manifest = restore_checkpoint(
+                tc.ckpt_dir, last, params_template=params, opt_template=opt_state
+            )
+            start = manifest["step"] + 1
+            print(f"[trainer] resumed from step {last}")
+
+        self._install_preemption_hook()
+        try:
+            step = start
+            while step < tc.steps and not self._stop:
+                t0 = time.perf_counter()
+                batch = {k: jnp.asarray(v) for k, v in self.data.batch(step).items()}
+                params, opt_state, metrics, grads = self.train_step(
+                    params, opt_state, batch, jnp.int32(step)
+                )
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+
+                self.step_times.append(dt)
+                med = statistics.median(self.step_times[-50:])
+                if len(self.step_times) > 5 and dt > tc.straggler_factor * med:
+                    self.straggler_events.append({"step": step, "dt": dt, "median": med})
+                    print(f"[trainer] straggler: step {step} took {dt:.2f}s (median {med:.2f}s)")
+
+                if step % tc.log_every == 0 or step == tc.steps - 1:
+                    row = {k: float(v) for k, v in metrics.items()}
+                    row["step"] = step
+                    if tc.slope is not None and step % tc.slope.screen_every == 0:
+                        stats = slope_screen_stats(
+                            params, grads, step, float(metrics["lr"]), tc.slope
+                        )
+                        for grp, s in stats.items():
+                            row[f"slope/{grp}/strong_k"] = int(s["strong_k"])
+                            row[f"slope/{grp}/nnz"] = int(s["nnz"])
+                    self.metrics_log.append(row)
+                    print(f"[trainer] step {step:5d} loss {row['loss']:.4f}")
+
+                if step % tc.ckpt_every == 0 and step > start:
+                    save_checkpoint(tc.ckpt_dir, step, params=params,
+                                    opt_state=opt_state)
+                step += 1
+
+            final_step = step - 1
+            save_checkpoint(tc.ckpt_dir, final_step, params=params, opt_state=opt_state)
+            if self._stop:
+                print(f"[trainer] preempted at step {final_step}; checkpoint saved")
+        finally:
+            self._restore_hooks()
+        return {
+            "final_step": final_step,
+            "params": params,
+            "metrics": self.metrics_log,
+            "stragglers": self.straggler_events,
+            "preempted": self._stop,
+        }

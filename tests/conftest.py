@@ -1,0 +1,14 @@
+import jax
+import pytest
+
+# GLM correctness tests need f64; models/kernels request explicit dtypes so
+# this only changes defaults.  Smoke tests intentionally see 1 CPU device —
+# do NOT set xla_force_host_platform_device_count here (dry-run only).
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(42)

@@ -1,0 +1,147 @@
+"""Distributed pieces.  Multi-device cases run in a subprocess so the forced
+host-device count never leaks into the main test process (smoke tests must
+see 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_sub(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_sharded_gradient_and_screen_match_dense():
+    print(_run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.distributed import (sharded_linear_predictor,
+            sharded_gradient, distributed_strong_rule)
+        from repro.core import strong_rule, bh_sequence
+        mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("feat",))
+        rng = np.random.default_rng(0)
+        n, p = 40, 512
+        X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+        beta = jnp.asarray(rng.normal(size=p) * (rng.random(p) < 0.05), jnp.float32)
+        y = jnp.asarray(rng.normal(size=n), jnp.float32)
+
+        z = sharded_linear_predictor(mesh, "feat")(X, beta)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(X @ beta), rtol=2e-5, atol=2e-5)
+
+        r = z - y
+        g = sharded_gradient(mesh, "feat")(X, r)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(X.T @ r), rtol=2e-5, atol=2e-5)
+
+        # pick a λ scale where the rule keeps a nontrivial small set
+        for scale in (2.0, 5.0, 10.0, 20.0):
+            lam = jnp.asarray(np.asarray(bh_sequence(p, 0.05)) * scale, jnp.float32)
+            k_ref, order = strong_rule(g, lam, 0.9 * lam)
+            if 0 < int(k_ref) < 200:
+                break
+        assert 0 < int(k_ref) < 200, int(k_ref)
+
+        cap = 2  # deliberately small: exercises the uncertain-retry protocol
+        lam_full = np.asarray(lam)
+        while True:
+            capD = min(cap * 8, p)
+            gap = (0.1 * lam)[:capD]
+            lam_cap = (0.9 * lam)[:capD]
+            gap_tail = jnp.float32((0.1 * lam_full)[capD:].max() if capD < p else 0.0)
+            k, thr, keep, uncertain = distributed_strong_rule(
+                mesh, "feat", cap=cap, p_total=p)(
+                g, gap, lam_cap, jnp.float32(0.9 * lam_full[-1]), gap_tail)
+            if not bool(uncertain) or capD >= p:
+                break
+            cap *= 2
+        assert int(k) == int(k_ref), (int(k), int(k_ref), cap)
+        kept_ref = set(np.asarray(order[:int(k_ref)]).tolist())
+        kept_got = set(np.nonzero(np.asarray(keep))[0].tolist())
+        assert kept_ref <= kept_got  # threshold mask ⊇ exact set (ties keep extra)
+        print("distributed OK")
+    """))
+
+
+def test_mini_dryrun_cell_compiles():
+    out = _run_sub("""
+        import numpy as np, jax, jax.numpy as jnp, dataclasses, json
+        from repro.configs import get_config
+        from repro.launch import sharding as sh
+        from repro.launch.steps import make_train_step, hyper_for
+        from repro.models import init_params
+        from repro.optim import adamw_init
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+        sh.install(mesh)
+        cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                                  d_model=64, n_heads=6, n_kv_heads=2, head_dim=16,
+                                  d_ff=128, vocab=250)  # non-divisible heads+vocab
+        params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        p_sh = sh.param_sharding(params, mesh)
+        hyper = hyper_for(cfg)
+        opt = jax.eval_shape(lambda: adamw_init(params, hyper))
+        o_sh = sh.opt_sharding(params, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        b_sh = sh.batch_sharding(batch, mesh)
+        fn = jax.jit(make_train_step(cfg, mesh, hyper),
+                     in_shardings=(p_sh, o_sh, b_sh, None),
+                     out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+        with mesh:
+            compiled = fn.lower(params, opt, batch, jnp.int32(0)).compile()
+        ca = compiled.cost_analysis()
+        assert ca.get("flops", 0) > 0
+        print("mini dryrun OK", ca.get("flops"))
+    """)
+    assert "mini dryrun OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """The distributed train step must be numerically equivalent to the
+    single-device one (same params after one step, up to f32 tolerance)."""
+    print(_run_sub("""
+        import numpy as np, jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config
+        from repro.launch import sharding as sh
+        from repro.launch.steps import make_train_step
+        from repro.models import init_params
+        from repro.optim import adamw_init, AdamWHyper
+        cfg = dataclasses.replace(get_config("smollm-360m").reduced(), n_layers=2)
+        hyper = AdamWHyper(lr=1e-2)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params, hyper)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)}
+
+        # single device
+        p1, o1, m1 = jax.jit(make_train_step(cfg, None, hyper))(params, opt, batch, jnp.int32(0))
+
+        # 8-device mesh
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+        sh.install(mesh)
+        p_sh = sh.param_sharding(params, mesh)
+        o_sh = sh.opt_sharding(params, mesh)
+        b_sh = sh.batch_sharding(batch, mesh)
+        fn = jax.jit(make_train_step(cfg, mesh, hyper),
+                     in_shardings=(p_sh, o_sh, b_sh, None))
+        with mesh:
+            p2, o2, m2 = fn(params, opt, batch, jnp.int32(0))
+        sh.install(None)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-4)
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert d < 5e-4, d
+        print("parity OK", d)
+    """))

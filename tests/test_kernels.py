@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import prox_sorted_l1
+from repro.core.screening import algorithm_2_oracle
+from repro.kernels import (
+    prox_pool,
+    prox_sorted_l1_kernel,
+    screen_scan,
+    slope_gradient,
+    slope_residual,
+)
+from repro.kernels import ref as R
+
+SHAPES = [(7, 13, 1), (64, 128, 3), (33, 257, 4), (256, 512, 1), (129, 1025, 2)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_xt_matmul_kernel(shape, dtype, rng):
+    n, p, m = shape
+    X = jnp.asarray(rng.normal(size=(n, p)), dtype)
+    Rm = jnp.asarray(rng.normal(size=(n, m)), dtype)
+    got = np.asarray(slope_gradient(X, Rm), np.float32)
+    want = np.asarray(R.xt_matmul_ref(X, Rm), np.float32)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("family", ["none", "ols", "logistic", "poisson", "multinomial"])
+def test_xb_residual_kernel(shape, family, rng):
+    n, p, m = shape
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(p, m)) / np.sqrt(p), jnp.float32)
+    Y = jnp.asarray(rng.integers(0, 2, size=(n, m)), jnp.float32)
+    got = np.asarray(slope_residual(X, B, Y, family=family))
+    want = np.asarray(R.xb_residual_ref(X, B, Y, family))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_gemv_1d_paths(rng):
+    X = jnp.asarray(rng.normal(size=(50, 70)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=50), jnp.float32)
+    b = jnp.asarray(rng.normal(size=70) / 8, jnp.float32)
+    y = jnp.asarray(rng.normal(size=50), jnp.float32)
+    g = slope_gradient(X, r)
+    assert g.shape == (70,)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(X).T @ np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+    z = slope_residual(X, b, y, family="ols")
+    assert z.shape == (50,)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(X) @ np.asarray(b) - np.asarray(y),
+                               rtol=2e-5, atol=2e-5)
+
+
+@st.composite
+def screen_case(draw):
+    """Dyadic-grid inputs (multiples of 1/64, bounded): every partial sum is
+    exact in f32, so block-wise (kernel), parallel-prefix (ref) and
+    sequential (Algorithm 2) summation orders all agree exactly — the tests
+    check the algorithms, not float association on constructed ties."""
+    p = draw(st.integers(1, 600))
+    c = draw(st.lists(st.integers(-320, 320), min_size=p, max_size=p))
+    raw = draw(st.lists(st.integers(0, 256), min_size=p, max_size=p))
+    lam = np.sort(np.asarray(raw, np.float32))[::-1] / 64.0
+    return np.asarray(c, np.float32) / 64.0, lam
+
+
+@settings(max_examples=60, deadline=None)
+@given(screen_case())
+def test_screen_kernel_matches_f32_ref(case):
+    c, lam = case
+    k_ref = int(R.screen_scan_ref(jnp.asarray(c), jnp.asarray(lam)))
+    k_kernel = int(screen_scan(jnp.asarray(c), jnp.asarray(lam), block=128))
+    assert k_ref == k_kernel
+
+
+def test_screen_kernel_matches_algorithm_2_random(rng):
+    """Kernel vs the paper's Algorithm 2 on generic (non-adversarial) data."""
+    for trial in range(200):
+        p = int(rng.integers(1, 2000))
+        c = (rng.normal(size=p) * 3).astype(np.float32)
+        lam = np.sort(np.abs(rng.normal(size=p)).astype(np.float32))[::-1].copy()
+        k1 = algorithm_2_oracle(c, lam)
+        k2 = int(screen_scan(jnp.asarray(c), jnp.asarray(lam), block=256))
+        assert k1 == k2, (trial, p, k1, k2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 2**31 - 1))
+def test_prox_kernel_matches_core(p, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=p) * 3, jnp.float32)
+    lam = jnp.asarray(np.sort(np.abs(rng.normal(size=p)))[::-1], jnp.float32)
+    got = np.asarray(prox_sorted_l1_kernel(v, lam))
+    want = np.asarray(prox_sorted_l1(v, lam))
+    np.testing.assert_allclose(got, want, atol=3e-6)
+
+
+def test_prox_pool_monotone_output(rng):
+    for _ in range(20):
+        p = int(rng.integers(1, 500))
+        w = jnp.asarray(np.sort(rng.normal(size=p))[::-1] + rng.normal(size=p) * 0.3,
+                        jnp.float32)
+        out = np.asarray(prox_pool(w))
+        assert np.all(np.diff(out) <= 1e-5)
+        assert np.all(out >= 0)

