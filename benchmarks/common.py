@@ -71,5 +71,19 @@ def timed(fn, *args, repeats=3, **kw):
     return out, best
 
 
+# every row() call is recorded here so the driver can emit a JSON artifact
+# (BENCH_ci.json in CI) alongside the CSV stream
+RESULTS: list[dict] = []
+
+
 def row(name: str, us: float, derived: str):
+    RESULTS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def write_json(path: str):
+    import json
+
+    with open(path, "w") as fh:
+        json.dump(RESULTS, fh, indent=2)
+    print(f"# wrote {len(RESULTS)} rows to {path}", flush=True)

@@ -12,6 +12,7 @@ Default sizes are scaled to finish on this CPU-only container in minutes;
   fig5_overhead        paper Fig 5 / Table 3 — no overhead when n ≫ p
   fig6_algorithms      paper Fig 6 — strong-set vs previous-set strategies
   kernels              Pallas kernels vs jnp oracle (interpret mode)
+  batched_engine       device engine: fit_path_batched vs a loop of fit_path
 """
 
 from __future__ import annotations
@@ -25,7 +26,7 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import fit, row, sequence, timed
+from benchmarks.common import fit, row, sequence, timed, write_json
 from repro.data import (
     make_classification,
     make_multinomial,
@@ -157,6 +158,53 @@ def kernels(full: bool):
     row("kernel/prox_sorted_l1", t_k * 1e6, f"interp_vs_lax={t_k / t_r:.1f}x")
 
 
+def batched_engine(full: bool):
+    """ISSUE 1 acceptance: fit_path_batched over B=8 problems vs a Python
+    loop of fit_path calls at the same sizes (same σ grids, no early stop).
+
+    The loop arm is the host driver — per-step dispatches and column
+    gathers; the batched arm is ONE compiled device program (lax.scan over
+    the path × vmap over problems).  Default sizes are the CI smoke config.
+    """
+    from repro.core import bh_sequence, fit_path, fit_path_batched, ols
+    from repro.data import make_regression
+
+    B = 8
+    n, p, L = (80, 128, 100) if full else (40, 64, 100)
+    probs = [make_regression(n, p, k=5, rho=0.3, seed=s)[:2] for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    # dense grid over the top decade of the path — the resolution regime CV
+    # and stability selection explore, and where the host driver's per-step
+    # dispatch dominates its per-step compute
+    kw = dict(path_length=L, sigma_ratio=0.1, solver_tol=1e-8,
+              max_iter=20000, kkt_tol=1e-4)
+
+    # warm both compile caches (steady-state timing, as everywhere else
+    # here), then best-of-repeats like the other sections — this row backs
+    # the BENCH_ci.json perf trajectory, so one-shot noise is not OK
+    fit_path(Xs[0], ys[0], lam, ols, screening="strong", engine="host",
+             early_stop=False, **kw)
+    fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw)
+
+    loop, t_loop = timed(
+        lambda: [fit_path(Xs[b], ys[b], lam, ols, screening="strong",
+                          engine="host", early_stop=False, **kw)
+                 for b in range(B)],
+        repeats=2,
+    )
+    batched, t_batch = timed(
+        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw),
+        repeats=2,
+    )
+
+    diff = max(np.abs(loop[b].betas - batched.betas[b]).max() for b in range(B))
+    row(f"batched_engine/loop_B{B}", t_loop * 1e6, f"host loop of {B} fit_path")
+    row(f"batched_engine/batched_B{B}", t_batch * 1e6,
+        f"speedup={t_loop / t_batch:.1f}x maxdiff={diff:.1e}")
+
+
 BENCHES = {
     "table1_speedup": table1_speedup,
     "fig1_fig2_efficiency": fig1_fig2_efficiency,
@@ -164,6 +212,7 @@ BENCHES = {
     "fig5_overhead": fig5_overhead,
     "fig6_algorithms": fig6_algorithms,
     "kernels": kernels,
+    "batched_engine": batched_engine,
 }
 
 
@@ -172,12 +221,16 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact (CI: BENCH_ci.json)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
         fn(args.full)
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -4,18 +4,21 @@ SLOPE" (Larsson, Bogdan, Wallin; NeurIPS 2020)."""
 from .sorted_l1 import (
     sorted_l1_norm,
     prox_sorted_l1,
+    prox_sorted_l1_with_norm,
     dual_sorted_l1_gauge,
     isotonic_decreasing,
+    isotonic_decreasing_parallel,
     clusters,
 )
 from .screening import (
     algorithm_1_oracle,
     algorithm_2_oracle,
     screen_k,
+    screen_masked,
     support_superset_k,
     strong_rule,
 )
-from .kkt import in_subdifferential, kkt_optimal, kkt_violations
+from .kkt import in_subdifferential, kkt_optimal, kkt_violations, kkt_violations_masked
 from .lambda_seq import (
     bh_sequence,
     gaussian_sequence,
@@ -25,18 +28,31 @@ from .lambda_seq import (
     sigma_grid,
 )
 from .losses import Family, ols, logistic, poisson, multinomial, get_family
-from .solver import fista, FistaResult
-from .path import fit_path, PathResult
+from .solver import fista, fista_masked, FistaResult
+from .engine import (
+    path_engine,
+    batched_path_engine,
+    fit_path_batched,
+    cv_path,
+    EnginePath,
+    BatchedPathResult,
+    CvPathResult,
+)
+from .path import fit_path, PathResult, PathStep
 
 __all__ = [
-    "sorted_l1_norm", "prox_sorted_l1", "dual_sorted_l1_gauge",
-    "isotonic_decreasing", "clusters",
-    "algorithm_1_oracle", "algorithm_2_oracle", "screen_k",
+    "sorted_l1_norm", "prox_sorted_l1", "prox_sorted_l1_with_norm",
+    "dual_sorted_l1_gauge",
+    "isotonic_decreasing", "isotonic_decreasing_parallel", "clusters",
+    "algorithm_1_oracle", "algorithm_2_oracle", "screen_k", "screen_masked",
     "support_superset_k", "strong_rule",
     "in_subdifferential", "kkt_optimal", "kkt_violations",
+    "kkt_violations_masked",
     "bh_sequence", "gaussian_sequence", "oscar_sequence", "lasso_sequence",
     "path_start_sigma", "sigma_grid",
     "Family", "ols", "logistic", "poisson", "multinomial", "get_family",
-    "fista", "FistaResult",
-    "fit_path", "PathResult",
+    "fista", "fista_masked", "FistaResult",
+    "path_engine", "batched_path_engine", "fit_path_batched", "cv_path",
+    "EnginePath", "BatchedPathResult", "CvPathResult",
+    "fit_path", "PathResult", "PathStep",
 ]

@@ -1,0 +1,511 @@
+"""Device-resident batched path engine (Algorithms 3/4 under one jit scope).
+
+The host driver in :mod:`repro.core.path` orchestrates one path step at a
+time from NumPy: gather the screened columns, pad to a bucket, dispatch a
+FISTA solve, pull the gradient back, check KKT, repeat.  That is the right
+trade for a *single* huge p ≫ n problem — the gathers shrink every matvec —
+but it round-trips host↔device at every step, and it can only fit one
+(X, y) problem at a time.
+
+This module moves the whole per-step loop onto the device:
+
+* the path is a ``lax.scan`` over σ-grid points;
+* working sets are *masks*, not gathers — :func:`repro.core.solver.fista_masked`
+  zeroes masked columns so the sub-problem keeps one static shape, and
+  :func:`repro.core.screening.screen_masked` /
+  :func:`repro.core.kkt.kkt_violations_masked` run the strong rule and the
+  KKT guard on the same masked representation;
+* KKT repair is a bounded ``lax.while_loop`` inside each scan step;
+* a ``vmap`` batching layer fits B independent problems — CV folds,
+  bootstrap replicates, a batch of user requests — in ONE compiled program.
+
+Shape policy: one compilation per static (B, n, p, m, L, config) bucket.
+The batching wrappers stack problems of identical shape; callers with mixed
+shapes bucket on the host (pad n with zero rows / p with zero columns) —
+zero columns are inert in every family, zero rows are inert for OLS.
+
+Everything here returns the *full* σ grid (a scan cannot truncate); the
+host front-end applies the paper's early-stopping rules post-hoc when a
+:class:`repro.core.path.PathResult` is requested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kkt import kkt_violations_masked
+from .lambda_seq import path_start_sigma, sigma_grid
+from .losses import Family
+from .screening import screen_masked
+from .solver import default_L0, fista_masked
+
+__all__ = [
+    "EnginePath",
+    "path_engine",
+    "batched_path_engine",
+    "fit_path_batched",
+    "cv_path",
+    "null_gradient",
+    "null_sigma_grid",
+    "BatchedPathResult",
+    "CvPathResult",
+]
+
+
+class EnginePath(NamedTuple):
+    """Raw device arrays for one fitted path (leading axis = path point)."""
+
+    betas: jax.Array          # (L, p, m)
+    n_active: jax.Array       # (L,) int32
+    n_screened: jax.Array     # (L,) int32
+    n_violations: jax.Array   # (L,) int32
+    refits: jax.Array         # (L,) int32
+    solver_iters: jax.Array   # (L,) int32
+    deviance: jax.Array       # (L,)
+    kkt_unrepaired: jax.Array  # (L,) bool — repair loop hit max_refits
+    #   with violations outstanding; the step's betas are NOT KKT-clean
+
+
+def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
+            kkt_tol, max_refits) -> EnginePath:
+    """Traced body shared by :func:`path_engine` and the vmapped batch form."""
+    n, p = X.shape
+    m = family.n_classes
+    pm = p * m
+    dtype = X.dtype
+    lam = lam.astype(dtype)
+
+    def fam_shape(b):  # (p, m) -> the shape the family callbacks expect
+        return b[:, 0] if m == 1 else b
+
+    def lift(b):  # family shape -> (p, m)
+        return b[:, None] if m == 1 else b
+
+    zeros = jnp.zeros((p, m), dtype)
+    grad0 = lift(family.gradient(X, y, fam_shape(zeros)))
+    null_dev = family.loss(X, y, fam_shape(zeros))
+    ones_pm = jnp.ones((pm,), bool)
+
+    def solve(E, lam_next, beta, L):
+        # The stack PAVA prox is a p·m-length sequential loop — under vmap
+        # every batch member pays the slowest member's pooling in lockstep.
+        # The sweep-merging prox is a handful of dense ops per sweep, so it
+        # batches with near-perfect efficiency.  L is the curvature estimate
+        # carried from the previous solve — device-resident state the host
+        # driver cannot keep, which skips the backtracking ramp-up.
+        res = fista_masked(X, y, lam_next, fam_shape(beta), E, family,
+                           max_iter=max_iter, tol=tol,
+                           prox_method="parallel", L0=L)
+        beta_new = lift(res.beta)
+        grad = lift(family.gradient(X, y, fam_shape(beta_new)))
+        return beta_new, grad, res.iters.astype(jnp.int32), res.L
+
+    def kkt_check(grad, E, strong_p, checked_full, lam_next):
+        gflat = grad.reshape(pm)
+        ever = jnp.repeat(E, m)
+        viol_full = kkt_violations_masked(gflat, lam_next, ever, ones_pm,
+                                          tol=kkt_tol)
+        if screening != "previous":
+            return viol_full, checked_full
+        # Algorithm 4: check the strong set first; only once it is clean,
+        # graduate (permanently) to full-set checks.
+        subset = jnp.repeat(strong_p, m)
+        viol_sub = kkt_violations_masked(gflat, lam_next, ever, subset,
+                                         tol=kkt_tol)
+        pre = ~checked_full
+        sub_has = viol_sub.any()
+        viol = jnp.where(pre & sub_has, viol_sub, viol_full)
+        return viol, checked_full | (pre & ~sub_has)
+
+    def count_viol(viol_flat, strong_p, prev_active):
+        # Violations against the *strong* set are the rule's failures
+        # (paper §2.2.3); previous-set warm misses are algorithmic.
+        rows = viol_flat.reshape(p, m).any(axis=1)
+        miss = rows & ~strong_p
+        if screening == "previous":
+            miss = miss & ~prev_active
+        return miss.sum().astype(jnp.int32)
+
+    def step(carry, sigs):
+        beta, grad, prev_active, L_carry = carry
+        sig_prev, sig = sigs
+        lam_next = sig * lam
+
+        if screening == "none":
+            strong_p = jnp.ones((p,), bool)
+            E0 = strong_p
+            n_screened = jnp.int32(p)
+        else:
+            gap = (sig_prev - sig) * lam  # rank-space surrogate shift
+            keep_flat, _ = screen_masked(jnp.abs(grad.reshape(pm)), lam_next,
+                                         ones_pm, gap)
+            strong_p = keep_flat.reshape(p, m).any(axis=1)
+            n_screened = strong_p.sum().astype(jnp.int32)
+            if screening == "strong":
+                E0 = strong_p | prev_active
+            else:
+                E0 = jnp.where(prev_active.any(), prev_active, strong_p)
+            # mirror the host driver: once screening keeps most predictors
+            # (n ≳ p regime) just solve the full problem — keeps violation
+            # accounting identical between backends
+            E0 = jnp.where(E0.sum() >= 0.5 * p, jnp.ones((p,), bool), E0)
+
+        beta1, grad1, it1, L1 = solve(E0, lam_next, beta, L_carry)
+
+        if screening == "none":
+            beta_f, grad_f, L_f = beta1, grad1, L1
+            viol_count = jnp.int32(0)
+            refits = jnp.int32(0)
+            iters = it1
+            unrepaired = jnp.bool_(False)
+        else:
+            viol1, checked1 = kkt_check(grad1, E0, strong_p, jnp.bool_(False),
+                                        lam_next)
+            state = dict(
+                beta=beta1, grad=grad1, L=L1,
+                E=E0 | viol1.reshape(p, m).any(axis=1),
+                checked=checked1, has_viol=viol1.any(),
+                viol_count=count_viol(viol1, strong_p, prev_active),
+                refits=jnp.int32(0), iters=it1,
+            )
+
+            def cond(s):
+                return s["has_viol"] & (s["refits"] < max_refits)
+
+            def body(s):
+                beta2, grad2, it2, L2 = solve(s["E"], lam_next, s["beta"],
+                                              s["L"])
+                viol2, checked2 = kkt_check(grad2, s["E"], strong_p,
+                                            s["checked"], lam_next)
+                return dict(
+                    beta=beta2, grad=grad2, L=L2,
+                    E=s["E"] | viol2.reshape(p, m).any(axis=1),
+                    checked=checked2, has_viol=viol2.any(),
+                    viol_count=s["viol_count"]
+                    + count_viol(viol2, strong_p, prev_active),
+                    refits=s["refits"] + 1, iters=s["iters"] + it2,
+                )
+
+            state = lax.while_loop(cond, body, state)
+            beta_f, grad_f, L_f = state["beta"], state["grad"], state["L"]
+            viol_count = state["viol_count"]
+            refits = state["refits"]
+            iters = state["iters"]
+            unrepaired = state["has_viol"]  # loop exited on the refit cap
+
+        active = (jnp.abs(beta_f) > 0).any(axis=1)
+        dev = family.loss(X, y, fam_shape(beta_f))
+        out = (beta_f, active.sum().astype(jnp.int32), n_screened, viol_count,
+               refits, iters, dev, unrepaired)
+        return (beta_f, grad_f, active, L_f), out
+
+    L_init = default_L0(X, family).astype(dtype)
+    carry0 = (zeros, grad0, jnp.zeros((p,), bool), L_init)
+    _, outs = lax.scan(step, carry0, (sigmas[:-1], sigmas[1:]))
+    betas, n_act, n_scr, viol, refits, iters, devs, unrep = outs
+
+    def pre(a, v):
+        return jnp.concatenate([jnp.asarray(v, a.dtype)[None], a])
+
+    return EnginePath(
+        betas=jnp.concatenate([zeros[None], betas]),
+        n_active=pre(n_act, 0),
+        n_screened=pre(n_scr, 0),
+        n_violations=pre(viol, 0),
+        refits=pre(refits, 0),
+        solver_iters=pre(iters, 0),
+        deviance=pre(devs, null_dev),
+        kkt_unrepaired=pre(unrep, False),
+    )
+
+
+_ENGINE_STATICS = ("family", "screening", "max_iter", "tol", "kkt_tol",
+                   "max_refits")
+
+
+@functools.partial(jax.jit, static_argnames=_ENGINE_STATICS)
+def path_engine(X, y, lam, sigmas, family: Family, *, screening: str = "strong",
+                max_iter: int = 5000, tol: float = 1e-8,
+                kkt_tol: float = 1e-4, max_refits: int = 32) -> EnginePath:
+    """Fit one full SLOPE path entirely on device (fixed σ grid, no early
+    stop).  One compilation per (n, p, m, len(sigmas), config)."""
+    return _engine(X, y, lam, sigmas, family, screening, max_iter, tol,
+                   kkt_tol, max_refits)
+
+
+@functools.partial(jax.jit, static_argnames=_ENGINE_STATICS)
+def batched_path_engine(X, y, lam, sigmas, family: Family, *,
+                        screening: str = "strong", max_iter: int = 5000,
+                        tol: float = 1e-8, kkt_tol: float = 1e-4,
+                        max_refits: int = 32) -> EnginePath:
+    """vmap of :func:`path_engine` over the leading problem axis.
+
+    ``X``: (B, n, p); ``y``: (B, n[, ...]); ``sigmas``: (B, L); ``lam`` is
+    shared (SLOPE's λ is a rank sequence, not per-problem data).  Returns an
+    :class:`EnginePath` whose arrays carry a leading batch axis.
+    """
+
+    def one(Xi, yi, si):
+        return _engine(Xi, yi, lam, si, family, screening, max_iter, tol,
+                       kkt_tol, max_refits)
+
+    return jax.vmap(one)(X, y, sigmas)
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrappers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchedPathResult:
+    """B paths fitted by one compiled program (leading axis = problem)."""
+
+    betas: np.ndarray         # (B, L, p) or (B, L, p, m)
+    sigmas: np.ndarray        # (B, L)
+    lam: np.ndarray
+    n_active: np.ndarray      # (B, L)
+    n_screened: np.ndarray
+    n_violations: np.ndarray
+    refits: np.ndarray
+    solver_iters: np.ndarray
+    deviance: np.ndarray
+    kkt_unrepaired: np.ndarray  # (B, L) bool — see EnginePath.kkt_unrepaired
+    total_time: float
+    n_samples: int            # rows per problem (early-stop rules need it)
+
+    @property
+    def batch(self) -> int:
+        return self.betas.shape[0]
+
+    @property
+    def total_violations(self) -> np.ndarray:
+        return self.n_violations.sum(axis=1)
+
+    def path_results(self, *, early_stop: bool = True):
+        """Per-problem :class:`repro.core.path.PathResult` views (the same
+        contract the unbatched driver returns, early stopping applied
+        post-hoc)."""
+        from .path import engine_to_path_result  # lazy: avoid import cycle
+
+        per = self.total_time / self.batch
+        return [
+            engine_to_path_result(
+                EnginePath(
+                    betas=self.betas[b] if self.betas.ndim == 4
+                    else self.betas[b][:, :, None],
+                    n_active=self.n_active[b],
+                    n_screened=self.n_screened[b],
+                    n_violations=self.n_violations[b],
+                    refits=self.refits[b],
+                    solver_iters=self.solver_iters[b],
+                    deviance=self.deviance[b],
+                    kkt_unrepaired=self.kkt_unrepaired[b],
+                ),
+                self.sigmas[b], self.lam, per, early_stop=early_stop,
+                n=self.n_samples,
+            )
+            for b in range(self.batch)
+        ]
+
+
+def null_gradient(X, y, family: Family) -> np.ndarray:
+    """∇f(0) reshaped to (p, m) — the quantity both the σ-grid recipe and
+    the first strong-rule step start from."""
+    p = X.shape[1]
+    m = family.n_classes
+    beta0 = jnp.zeros((p,) if m == 1 else (p, m), X.dtype)
+    return np.asarray(
+        family.gradient(jnp.asarray(X), jnp.asarray(y), beta0)
+    ).reshape(p, m)
+
+
+def null_sigma_grid(X, y, lam, family: Family, *, path_length: int,
+                    sigma_ratio: float | None,
+                    grad0: np.ndarray | None = None) -> np.ndarray:
+    """The paper's σ grid for one problem: σ(1) from the null gradient's
+    dual gauge, geometric decay per §3.1.2.  The ONE recipe shared by
+    fit_path (both backends), fit_path_batched and cv_path."""
+    if grad0 is None:
+        grad0 = null_gradient(X, y, family)
+    s1 = float(path_start_sigma(jnp.asarray(grad0), jnp.asarray(lam)))
+    n, p = X.shape
+    return sigma_grid(s1, length=path_length, ratio=sigma_ratio, n=n, p=p)
+
+
+def _null_sigma_grids(Xs, ys, lam, family: Family, path_length, sigma_ratio):
+    """Per-problem σ grids (stacked :func:`null_sigma_grid`)."""
+    return np.stack([
+        null_sigma_grid(Xs[b], ys[b], lam, family, path_length=path_length,
+                        sigma_ratio=sigma_ratio)
+        for b in range(Xs.shape[0])
+    ])
+
+
+def fit_path_batched(
+    Xs, ys, lam, family: Family, *,
+    screening: str = "strong",
+    path_length: int = 100,
+    sigma_ratio: float | None = None,
+    sigmas: np.ndarray | None = None,
+    solver_tol: float = 1e-8,
+    max_iter: int = 5000,
+    kkt_tol: float = 1e-4,
+    max_refits: int = 32,
+) -> BatchedPathResult:
+    """Fit B independent SLOPE paths in one compiled device program.
+
+    ``Xs`` is (B, n, p) and ``ys`` (B, n) — problems of identical shape share
+    one compilation (the bucketing policy: pad mixed shapes on the host).
+    Semantics match ``fit_path(..., engine="device")`` per problem.  Steps
+    whose KKT repair hit ``max_refits`` are flagged in ``kkt_unrepaired``
+    (and warned about) — raise the cap if that ever fires.
+    """
+    Xs = np.asarray(Xs)
+    ys = np.asarray(ys)
+    if Xs.ndim != 3:
+        raise ValueError(f"Xs must be (B, n, p), got {Xs.shape}")
+    if ys.shape[:2] != Xs.shape[:2]:
+        raise ValueError(
+            f"ys must be (B, n[, ...]) matching Xs {Xs.shape[:2]}, got {ys.shape}")
+    lam = np.asarray(lam)
+    if sigmas is None:
+        sigmas = _null_sigma_grids(Xs, ys, lam, family, path_length,
+                                   sigma_ratio)
+    sigmas = np.asarray(sigmas)
+    B = Xs.shape[0]
+    if sigmas.ndim == 1:  # one shared grid, like fit_path's 1-D sigmas
+        sigmas = np.tile(sigmas, (B, 1))
+    if sigmas.shape[0] != B or sigmas.ndim != 2:
+        raise ValueError(
+            f"sigmas must be (L,) shared or (B, L) per-problem; got "
+            f"{sigmas.shape} for B={B}")
+
+    t0 = time.perf_counter()
+    res = batched_path_engine(
+        jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
+        jnp.asarray(sigmas), family, screening=screening, max_iter=max_iter,
+        tol=solver_tol, kkt_tol=kkt_tol, max_refits=max_refits,
+    )
+    betas = np.asarray(res.betas)  # (B, L, p, m)
+    wall = time.perf_counter() - t0
+    if family.n_classes == 1:
+        betas = betas[:, :, :, 0]
+    unrepaired = np.asarray(res.kkt_unrepaired)
+    _warn_unrepaired(unrepaired, max_refits)
+    return BatchedPathResult(
+        betas=betas,
+        sigmas=sigmas,
+        lam=lam,
+        n_active=np.asarray(res.n_active),
+        n_screened=np.asarray(res.n_screened),
+        n_violations=np.asarray(res.n_violations),
+        refits=np.asarray(res.refits),
+        solver_iters=np.asarray(res.solver_iters),
+        deviance=np.asarray(res.deviance),
+        kkt_unrepaired=unrepaired,
+        total_time=wall,
+        n_samples=Xs.shape[1],
+    )
+
+
+def _warn_unrepaired(unrepaired: np.ndarray, max_refits: int) -> None:
+    if unrepaired.any():
+        import warnings
+
+        warnings.warn(
+            f"{int(unrepaired.sum())} path step(s) hit the KKT repair cap "
+            f"(max_refits={max_refits}) with violations outstanding; those "
+            "betas are not KKT-clean — raise max_refits",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+@dataclasses.dataclass
+class CvPathResult:
+    """K-fold cross-validation over one shared σ grid."""
+
+    sigmas: np.ndarray            # (L,) shared grid
+    lam: np.ndarray
+    val_deviance: np.ndarray      # (K, L) held-out deviance per fold
+    mean_val_deviance: np.ndarray  # (L,)
+    best_index: int
+    best_sigma: float
+    fold_paths: BatchedPathResult
+    total_time: float
+
+
+def cv_path(
+    X, y, lam, family: Family, *,
+    n_folds: int = 5,
+    screening: str = "strong",
+    path_length: int = 100,
+    sigma_ratio: float | None = None,
+    solver_tol: float = 1e-8,
+    max_iter: int = 5000,
+    kkt_tol: float = 1e-4,
+    max_refits: int = 32,
+) -> CvPathResult:
+    """K-fold CV: all fold paths fit as ONE batched device program.
+
+    Folds are contiguous blocks of ⌊n/K⌋ rows (remainder rows are always in
+    training) so every training design has the same shape and the folds
+    batch into a single compilation.  The σ grid is computed once from the
+    full data and shared, so every fold is evaluated at the same penalty.
+    """
+    t0 = time.perf_counter()
+    X = np.asarray(X)
+    y = np.asarray(y)
+    n = X.shape[0]
+    lam = np.asarray(lam)
+    if not 2 <= n_folds <= n:
+        raise ValueError(f"n_folds must be in [2, {n}], got {n_folds}")
+    fold = n // n_folds
+
+    sigmas = null_sigma_grid(X, y, lam, family, path_length=path_length,
+                             sigma_ratio=sigma_ratio)
+
+    Xs, ys_tr, vals = [], [], []
+    for k in range(n_folds):
+        val = np.arange(k * fold, (k + 1) * fold)
+        train = np.setdiff1d(np.arange(n), val)
+        Xs.append(X[train])
+        ys_tr.append(y[train])
+        vals.append(val)
+
+    res = fit_path_batched(
+        np.stack(Xs), np.stack(ys_tr), lam, family, screening=screening,
+        sigmas=sigmas, solver_tol=solver_tol,  # 1-D grid: shared across folds
+        max_iter=max_iter, kkt_tol=kkt_tol, max_refits=max_refits,
+    )
+
+    # one batched evaluation of all K × L held-out deviances (the fold and
+    # path axes share shapes, so this is two nested vmaps, not K·L dispatches)
+    Xv = jnp.asarray(np.stack([X[v] for v in vals]))
+    yv = jnp.asarray(np.stack([y[v] for v in vals]))
+
+    def fold_devs(Xvk, yvk, betas_k):
+        return jax.vmap(lambda b: family.loss(Xvk, yvk, b))(betas_k)
+
+    val_dev = np.asarray(jax.vmap(fold_devs)(Xv, yv, jnp.asarray(res.betas)))
+    mean_dev = val_dev.mean(axis=0)
+    best = int(np.argmin(mean_dev))
+    return CvPathResult(
+        sigmas=sigmas,
+        lam=lam,
+        val_deviance=val_dev,
+        mean_val_deviance=mean_dev,
+        best_index=best,
+        best_sigma=float(sigmas[best]),
+        fold_paths=res,
+        total_time=time.perf_counter() - t0,
+    )

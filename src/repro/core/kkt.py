@@ -13,13 +13,21 @@ Two flavours:
 
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
-from .screening import screen_k
+from .screening import screen_k, screen_masked
 
-__all__ = ["in_subdifferential", "kkt_violations", "kkt_optimal"]
+__all__ = [
+    "in_subdifferential",
+    "kkt_violations",
+    "kkt_violations_masked",
+    "kkt_optimal",
+]
 
 
 def in_subdifferential(g, beta, lam, *, rtol: float = 1e-6, atol: float = 1e-6) -> bool:
@@ -71,6 +79,25 @@ def in_subdifferential(g, beta, lam, *, rtol: float = 1e-6, atol: float = 1e-6) 
 def kkt_optimal(grad, beta, lam, **kw) -> bool:
     """Stationarity (7): 0 ∈ ∇f(β) + ∂J(β;λ)  ⇔  −∇f(β) ∈ ∂J(β;λ)."""
     return in_subdifferential(-np.asarray(grad), beta, lam, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("tol",))
+def kkt_violations_masked(grad, lam, ever_mask, subset_mask, *, tol: float = 1e-6):
+    """Device-resident form of :func:`kkt_violations` (no dynamic shapes).
+
+    Same semantics — Proposition 1 over ``subset_mask | ever_mask``, minus
+    the working set — but expressed through :func:`screen_masked` so the
+    whole check stays inside one jit scope (the path engine's ``lax.scan``
+    step).  ``grad`` is the *flattened* coefficient gradient; both masks are
+    coordinate-space booleans of the same length.
+    """
+    grad = jnp.ravel(grad)
+    ever_mask = jnp.ravel(ever_mask).astype(bool)
+    consider = jnp.ravel(subset_mask).astype(bool) | ever_mask
+    mag = jnp.abs(grad)
+    shift = jnp.full(grad.shape, -tol, mag.dtype)
+    keep, _ = screen_masked(mag, jnp.ravel(lam), consider, shift)
+    return keep & ~ever_mask
 
 
 def kkt_violations(grad, lam, ever_mask, *, subset_mask=None, tol: float = 1e-6):

@@ -1,10 +1,24 @@
-"""Regularization-path drivers: the strong-set and previous-set algorithms
-(paper Algorithms 3 and 4) plus a no-screening baseline.
+"""Regularization-path front-end: the strong-set and previous-set algorithms
+(paper Algorithms 3 and 4) plus a no-screening baseline, over two backends.
 
-The driver is host-side NumPy orchestration around three jit'd primitives
-(gradient, FISTA sub-solve, screen); column gathers and working-set algebra
-are cheap next to the solves.  Sub-problem widths are padded to power-of-two
-buckets so one path reuses a handful of XLA compilations.
+``engine="host"`` is the classic driver: host-side NumPy orchestration
+around three jit'd primitives (gradient, FISTA sub-solve, screen).  Column
+gathers shrink every sub-problem to the screened set — the right trade for
+a single huge p ≫ n problem, where the gathered matvec is the whole win —
+and sub-problem widths are padded to power-of-four buckets so one path
+reuses a handful of XLA compilations.
+
+``engine="device"`` routes to :mod:`repro.core.engine`: the whole per-step
+loop (screen → masked FISTA → KKT repair) runs inside one compiled
+``lax.scan``, eliminating the per-step host↔device round-trips.  That is
+the backend the batched/CV entry points build on.  ``engine="auto"``
+currently selects "host" for this single-problem API (gathered sub-problems
+beat masked full-width solves once p is large); batched workloads should
+call :func:`repro.core.engine.fit_path_batched` directly.
+
+Both backends honour the same ``fit_path`` signature and return the same
+:class:`PathResult` contract, and agree within solver tolerance (see
+``tests/test_engine.py``).
 """
 
 from __future__ import annotations
@@ -17,13 +31,13 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from .engine import EnginePath, null_gradient, null_sigma_grid, path_engine
 from .kkt import kkt_violations
-from .lambda_seq import path_start_sigma, sigma_grid
 from .losses import Family
 from .screening import strong_rule
 from .solver import fista
 
-__all__ = ["fit_path", "PathResult"]
+__all__ = ["fit_path", "PathResult", "PathStep", "engine_to_path_result"]
 
 
 @dataclasses.dataclass
@@ -69,6 +83,71 @@ def _bucket(width: int, p: int) -> int:
     return min(b, p)
 
 
+def _stop_triggered(beta: np.ndarray, dev: float, prev_dev: float,
+                    null_dev: float, n: int) -> bool:
+    """The paper's stopping rules 1–3: unique-magnitude saturation,
+    deviance plateau, deviance explained.  The ONE predicate shared by the
+    host loop (inline break) and the device backend (post-hoc truncation)."""
+    mags = np.unique(np.abs(beta[np.abs(beta) > 0]))
+    frac_change = abs(prev_dev - dev) / max(abs(null_dev), 1e-12)
+    dev_explained = 1.0 - dev / null_dev if null_dev > 0 else 1.0
+    return len(mags) > n or frac_change < 1e-5 or dev_explained > 0.995
+
+
+def _early_stop_len(betas_pm: np.ndarray, devs: np.ndarray, null_dev: float,
+                    n: int) -> int:
+    """First path length at which :func:`_stop_triggered` fires."""
+    prev_dev = null_dev
+    for i in range(1, len(devs)):
+        dev = float(devs[i])
+        if _stop_triggered(betas_pm[i], dev, prev_dev, null_dev, n):
+            return i + 1
+        prev_dev = dev
+    return len(devs)
+
+
+def engine_to_path_result(ep: EnginePath, sigmas, lam, wall_time: float, *,
+                          early_stop: bool = True, n: int | None = None
+                          ) -> PathResult:
+    """Convert a device :class:`~repro.core.engine.EnginePath` (full σ grid)
+    into the host :class:`PathResult` contract, applying the early-stopping
+    rules post-hoc (the device scan cannot truncate)."""
+    betas_pm = np.asarray(ep.betas)          # (L, p, m)
+    devs = np.asarray(ep.deviance)
+    sigmas = np.asarray(sigmas)
+    L = betas_pm.shape[0]
+    if early_stop:
+        if n is None:
+            raise ValueError("early_stop requires the sample count n")
+        L = _early_stop_len(betas_pm, devs, float(devs[0]), n)
+    per_step = wall_time / max(L, 1)
+    steps = [
+        PathStep(
+            sigma=float(sigmas[i]),
+            active=(np.abs(betas_pm[i]) > 0).any(axis=1),
+            n_active=int(ep.n_active[i]),
+            n_screened=int(ep.n_screened[i]),
+            n_violations=int(ep.n_violations[i]),
+            refits=int(ep.refits[i]),
+            deviance=float(devs[i]),
+            solver_iters=int(ep.solver_iters[i]),
+            wall_time=per_step,
+        )
+        for i in range(L)
+    ]
+    betas = betas_pm[:L]
+    if betas.shape[2] == 1:
+        betas = betas[:, :, 0]
+    return PathResult(
+        betas=betas,
+        sigmas=sigmas[:L],
+        steps=steps,
+        lam=np.asarray(lam),
+        total_time=wall_time,
+        total_violations=int(np.asarray(ep.n_violations)[:L].sum()),
+    )
+
+
 def fit_path(
     X,
     y,
@@ -84,6 +163,8 @@ def fit_path(
     kkt_tol: float = 1e-4,
     early_stop: bool = True,
     verbose: bool = False,
+    engine: Literal["auto", "host", "device"] = "auto",
+    max_refits: int = 32,
 ) -> PathResult:
     """Fit a full SLOPE path.
 
@@ -91,7 +172,67 @@ def fit_path(
     ``screening='previous'``→ Algorithm 4 (E = previously-active; check the
     strong set first, then the full set),
     ``screening='none'``    → always solve on all p predictors (baseline).
+
+    ``engine`` picks the backend (see the module docstring); "auto" keeps
+    the gathered host driver for this single-problem API.  ``max_refits``
+    caps the device engine's bounded KKT repair loop (a hit is warned
+    about); the host loop always repairs until clean and ignores it.
+    ``verbose`` is host-only: the device backend runs the whole path as one
+    compiled call, so there is nothing to print per step.
     """
+    if engine not in ("auto", "host", "device"):
+        raise ValueError(f"engine must be 'auto', 'host' or 'device', got {engine!r}")
+    if screening not in ("strong", "previous", "none"):
+        raise ValueError(f"unknown screening mode {screening!r}")
+    if engine == "auto":
+        engine = "host"
+    if engine == "device":
+        return _fit_path_device(
+            X, y, lam, family, screening=screening, path_length=path_length,
+            sigma_ratio=sigma_ratio, sigmas=sigmas, solver_tol=solver_tol,
+            max_iter=max_iter, kkt_tol=kkt_tol, early_stop=early_stop,
+            max_refits=max_refits,
+        )
+    return _fit_path_host(
+        X, y, lam, family, screening=screening, path_length=path_length,
+        sigma_ratio=sigma_ratio, sigmas=sigmas, solver_tol=solver_tol,
+        max_iter=max_iter, kkt_tol=kkt_tol, early_stop=early_stop,
+        verbose=verbose,
+    )
+
+
+def _fit_path_device(X, y, lam, family, *, screening, path_length,
+                     sigma_ratio, sigmas, solver_tol, max_iter, kkt_tol,
+                     early_stop, max_refits):
+    from .engine import _warn_unrepaired
+
+    t0 = time.perf_counter()
+    X = np.asarray(X)
+    y = np.asarray(y)
+    n, p = X.shape
+    m = family.n_classes
+    lam = np.asarray(lam, dtype=X.dtype)
+    assert lam.shape[0] == p * m, "λ must have one entry per coefficient"
+    if sigmas is None:
+        sigmas = null_sigma_grid(X, y, lam, family, path_length=path_length,
+                                 sigma_ratio=sigma_ratio)
+    sigmas = np.asarray(sigmas)
+    ep = path_engine(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam), jnp.asarray(sigmas),
+        family, screening=screening, max_iter=max_iter, tol=solver_tol,
+        kkt_tol=kkt_tol, max_refits=max_refits,
+    )
+    ep = EnginePath(*(np.asarray(a) for a in ep))
+    _warn_unrepaired(ep.kkt_unrepaired, max_refits)
+    return engine_to_path_result(ep, sigmas, lam,
+                                 time.perf_counter() - t0,
+                                 early_stop=early_stop, n=n)
+
+
+def _fit_path_host(
+    X, y, lam, family, *, screening, path_length, sigma_ratio, sigmas,
+    solver_tol, max_iter, kkt_tol, early_stop, verbose,
+) -> PathResult:
     t_start = time.perf_counter()
     X = np.asarray(X)
     y = np.asarray(y)
@@ -105,14 +246,13 @@ def fit_path(
         return b[:, 0] if m == 1 else b
 
     beta = np.zeros((p, m), dtype=X.dtype)
-    grad_full = np.asarray(
-        family.gradient(jnp.asarray(X), jnp.asarray(y), jnp.asarray(_b(beta)))
-    ).reshape(p, m)
-    null_dev = float(family.loss(jnp.asarray(X), jnp.asarray(y), jnp.asarray(_b(beta))))
+    grad_full = null_gradient(X, y, family)
+    null_dev = float(family.loss(jnp.asarray(X), jnp.asarray(y),
+                                 jnp.asarray(_b(beta))))
 
     if sigmas is None:
-        sigma1 = float(path_start_sigma(jnp.asarray(grad_full), jnp.asarray(lam)))
-        sigmas = sigma_grid(sigma1, length=path_length, ratio=sigma_ratio, n=n, p=p)
+        sigmas = null_sigma_grid(X, y, lam, family, path_length=path_length,
+                                 sigma_ratio=sigma_ratio, grad0=grad_full)
     sigmas = np.asarray(sigmas)
 
     betas = [beta.copy()]
@@ -237,13 +377,9 @@ def fit_path(
                 f"screened={n_screened:5d} viol={viol_count} iters={iters_total}"
             )
 
-        if early_stop:
-            mags = np.unique(np.abs(beta[np.abs(beta) > 0]))
-            frac_change = abs(prev_dev - dev) / max(abs(null_dev), 1e-12)
-            dev_explained = 1.0 - dev / null_dev if null_dev > 0 else 1.0
-            if len(mags) > n or frac_change < 1e-5 or dev_explained > 0.995:
-                prev_dev = dev
-                break
+        if early_stop and _stop_triggered(beta, dev, prev_dev, null_dev, n):
+            prev_dev = dev
+            break
         prev_dev = dev
 
     arr = np.stack(betas)

@@ -25,9 +25,16 @@ __all__ = [
     "algorithm_1_oracle",
     "algorithm_2_oracle",
     "screen_k",
+    "screen_masked",
     "support_superset_k",
     "strong_rule",
 ]
+
+# Sentinel magnitude for masked-out coefficients.  Any entry this negative
+# makes cumsum(c − λ) strictly decreasing over the tail, so the rightmost
+# argmax (and hence k) can never land past the valid prefix — masking is
+# exactly equivalent to truncating the problem to the unmasked entries.
+MASKED_NEG = -1e12
 
 
 # ---------------------------------------------------------------------------
@@ -89,6 +96,34 @@ def screen_k(c_sorted: jax.Array, lam: jax.Array) -> jax.Array:
     rev_arg = jnp.argmax(s[::-1])          # first max in reversed = last max
     k = (p - rev_arg).astype(jnp.int32)
     return jnp.where(jnp.max(s) >= 0, k, jnp.int32(0))
+
+
+@jax.jit
+def screen_masked(mag: jax.Array, lam: jax.Array, mask: jax.Array,
+                  rank_shift: jax.Array):
+    """:func:`screen_k` restricted to the coefficients where ``mask`` is True,
+    with no dynamic shapes — the device-engine form of the screening scan.
+
+    Masked entries are replaced by :data:`MASKED_NEG` so they sort to the
+    tail and can never be kept (see the sentinel's invariant above); the
+    result equals running Algorithm 2 on the unmasked entries alone.
+    ``rank_shift`` is added *after* sorting, i.e. it is aligned with λ's
+    rank space, not with coordinates — this is how both the strong rule's
+    (λ^(m) − λ^(m+1)) surrogate shift and the KKT check's −tol relaxation
+    enter the scan.
+
+    Returns ``(keep_mask, k)``: ``keep_mask`` is a coordinate-space boolean
+    mask of the kept set (⊆ mask), ``k`` its cardinality.
+    """
+    mask = mask.astype(bool)
+    cm = jnp.where(mask, mag, jnp.asarray(MASKED_NEG, mag.dtype))
+    order = jnp.argsort(-cm)
+    c = cm[order] + rank_shift.astype(cm.dtype)
+    k = screen_k(c, lam)
+    n = order.shape[0]
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    keep = (rank < k) & mask
+    return keep, k
 
 
 @functools.partial(jax.jit, static_argnames=("tol",))

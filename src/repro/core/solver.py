@@ -18,9 +18,18 @@ import jax.numpy as jnp
 from jax import lax
 
 from .losses import Family
-from .sorted_l1 import prox_sorted_l1, sorted_l1_norm
+from .sorted_l1 import prox_sorted_l1_with_norm, sorted_l1_norm
 
-__all__ = ["fista", "FistaResult"]
+__all__ = ["fista", "fista_masked", "default_L0", "FistaResult"]
+
+
+def default_L0(X: jax.Array, family: Family) -> jax.Array:
+    """Initial curvature guess: crude row-norm bound, corrected by
+    backtracking.  Shared by :func:`fista` and the path engine's scan carry
+    so warm-started device solves seed the same curvature as cold ones."""
+    return jnp.maximum(
+        jnp.sum(X * X) * (family.hess_bound or 1.0) / X.shape[1], 1e-3
+    )
 
 
 class FistaResult(NamedTuple):
@@ -28,6 +37,7 @@ class FistaResult(NamedTuple):
     iters: jax.Array
     objective: jax.Array
     converged: jax.Array
+    L: jax.Array  # final curvature estimate (warm-start for the next solve)
 
 
 class _State(NamedTuple):
@@ -41,7 +51,10 @@ class _State(NamedTuple):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("family", "max_iter", "tol", "restart", "max_backtrack")
+    jax.jit,
+    static_argnames=(
+        "family", "max_iter", "tol", "restart", "max_backtrack", "prox_method"
+    ),
 )
 def fista(
     X: jax.Array,
@@ -54,12 +67,17 @@ def fista(
     tol: float = 1e-8,
     restart: bool = True,
     max_backtrack: int = 30,
+    prox_method: str = "stack",
+    L0: jax.Array | None = None,
 ) -> FistaResult:
     """Minimise f(β) + J(β; λ) with FISTA + backtracking + adaptive restart.
 
     ``lam`` must have ``beta0.size`` entries (flattened coefficients for the
     multinomial family) and be non-increasing.  Zero-padded columns of X are
     self-consistent: their gradient is identically zero so they stay at 0.
+    ``L0`` overrides the initial curvature guess — the device path engine
+    passes the previous path step's learned L so warm solves skip the
+    backtracking ramp-up.
     """
     dtype = X.dtype
     lam = lam.astype(dtype)
@@ -67,8 +85,8 @@ def fista(
     def obj_fn(beta):
         return family.loss(X, y, beta) + sorted_l1_norm(beta, lam)
 
-    # Initial curvature guess: crude row-norm bound, corrected by backtracking.
-    L0 = jnp.maximum(jnp.sum(X * X) * (family.hess_bound or 1.0) / X.shape[1], 1e-3)
+    if L0 is None:
+        L0 = default_L0(X, family)
 
     def step(state: _State) -> _State:
         z = state.z
@@ -76,20 +94,27 @@ def fista(
         gz = family.gradient(X, y, z)
 
         def bt_cond(carry):
-            L, x_new, ok, tries = carry
+            L, x_new, fx, J, ok, tries = carry
             return (~ok) & (tries < max_backtrack)
 
         def bt_body(carry):
-            L, _, _, tries = carry
-            x_new = prox_sorted_l1(jnp.ravel(z - gz / L), lam / L).reshape(z.shape)
+            L, _, _, _, _, tries = carry
+            # prox at λ/L; its by-product norm is ⟨x_sorted, λ/L⟩, so scale
+            # by L to recover J(x_new; λ) — no extra sort for the objective
+            x_new, J_scaled = prox_sorted_l1_with_norm(
+                jnp.ravel(z - gz / L), lam / L, method=prox_method
+            )
+            x_new = x_new.reshape(z.shape)
             diff = x_new - z
             q = fz + jnp.vdot(gz, diff) + 0.5 * L * jnp.vdot(diff, diff)
-            ok = family.loss(X, y, x_new) <= q + 1e-12 * jnp.abs(q)
+            fx = family.loss(X, y, x_new)
+            ok = fx <= q + 1e-12 * jnp.abs(q)
             L_next = jnp.where(ok, L, L * 2.0)
-            return L_next, x_new, ok, tries + 1
+            return L_next, x_new, fx, J_scaled * L, ok, tries + 1
 
-        L, x_new, _, _ = lax.while_loop(
-            bt_cond, bt_body, (state.L, z, jnp.bool_(False), jnp.int32(0))
+        L, x_new, fx, J_new, _, _ = lax.while_loop(
+            bt_cond, bt_body,
+            (state.L, z, fz, jnp.zeros_like(fz), jnp.bool_(False), jnp.int32(0)),
         )
 
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * state.t**2))
@@ -102,7 +127,7 @@ def fista(
             t_new = jnp.where(bad, 1.0, t_new)
             z_new = jnp.where(bad, x_new, z_new)
 
-        obj_new = obj_fn(x_new)
+        obj_new = fx + J_new
         done = jnp.abs(state.obj - obj_new) <= tol * jnp.maximum(1.0, jnp.abs(obj_new))
         # mild decrease of L lets the step size recover after conservative phases
         return _State(x_new, z_new, t_new, L * 0.95, obj_new, state.it + 1, done)
@@ -120,4 +145,33 @@ def fista(
         done=jnp.bool_(False),
     )
     final = lax.while_loop(cond, step, init)
-    return FistaResult(final.x, final.it, final.obj, final.done)
+    return FistaResult(final.x, final.it, final.obj, final.done, final.L)
+
+
+def fista_masked(
+    X: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    beta0: jax.Array,
+    mask: jax.Array,
+    family: Family,
+    **kw,
+) -> FistaResult:
+    """FISTA restricted to the working set ``mask`` — no column gathers.
+
+    The device-engine analogue of the host driver's bucketed sub-problem:
+    masked columns of X are zeroed, so their gradient vanishes and their
+    coefficients stay pinned at exactly 0; because those coefficients are 0
+    they sort to the tail of |β|, which leaves the working set aligned with
+    the *leading* entries of λ — the same rank alignment the host driver
+    achieves by slicing ``λ[:|E|·m]`` for the gathered sub-problem.
+
+    ``mask`` is a (p,) predictor mask; for multinomial families it applies
+    to every class column of the (p, m) coefficient block.
+    """
+    mask_col = mask.astype(X.dtype)
+    Xm = X * mask_col[None, :]
+    beta0 = beta0 * (mask_col if beta0.ndim == 1 else mask_col[:, None])
+    res = fista(Xm, y, lam, beta0, family, **kw)
+    beta = res.beta * (mask_col if res.beta.ndim == 1 else mask_col[:, None])
+    return FistaResult(beta, res.iters, res.objective, res.converged, res.L)

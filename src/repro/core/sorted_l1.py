@@ -24,8 +24,11 @@ from jax import lax
 __all__ = [
     "sorted_l1_norm",
     "prox_sorted_l1",
+    "prox_sorted_l1_with_norm",
     "dual_sorted_l1_gauge",
     "isotonic_decreasing",
+    "isotonic_decreasing_minimax",
+    "isotonic_decreasing_parallel",
     "clusters",
 ]
 
@@ -78,12 +81,86 @@ def isotonic_decreasing(y: jax.Array) -> jax.Array:
     return means[idx]
 
 
-@functools.partial(jax.jit, static_argnames=("method",))
-def prox_sorted_l1(v: jax.Array, lam: jax.Array, *, method: str = "stack") -> jax.Array:
-    """prox_{J(·;λ)}(v) = argmin_x ½‖x − v‖² + J(x; λ).
+def isotonic_decreasing_parallel(y: jax.Array) -> jax.Array:
+    """Project onto the non-increasing cone by parallel block merging.
 
-    ``method='stack'`` is the lax.while_loop PAVA here; the Pallas kernel
-    path lives in :mod:`repro.kernels.ops` and is validated against this.
+    Each sweep merges EVERY violating adjacent block pair at once — safe
+    because a violating adjacent pair must share a block in the optimum, so
+    simultaneous merging keeps the partition a refinement of the optimal
+    one (the classic PAVA invariant).  A sweep is ~10 dense vectorized ops
+    (segment sums + a cumsum), with no data-dependent inner loop: unlike
+    the sequential stack PAVA this form vmaps with near-perfect batch
+    efficiency, which is why the batched device engine uses it.  Typical
+    sweep counts are O(log p); worst case O(p) sweeps (still exact).
+    """
+    p = y.shape[0]
+    dtype = y.dtype
+    idx = jnp.arange(p)
+    S = jnp.concatenate([jnp.zeros((1,), dtype), jnp.cumsum(y)])
+
+    def block_means(start):
+        # scatter-free segment means: a block is [begin, end) where begin is
+        # the last start flag at-or-before i (cummax) and end the first one
+        # after i (reverse cummin) — scatters are pathological under vmap on
+        # CPU, cumulative scans are not
+        begin = lax.cummax(jnp.where(start, idx, 0))
+        nxt = lax.cummin(jnp.where(start, idx, p), reverse=True)
+        end = jnp.concatenate([nxt[1:], jnp.full((1,), p, idx.dtype)])
+        return (S[end] - S[begin]) / (end - begin).astype(dtype)
+
+    def violations(start):
+        mean = block_means(start)
+        prev = jnp.roll(mean, 1)
+        # pool when mean(block) ≥ mean(previous block) — ties merge, which
+        # leaves the projected values unchanged (equal means pool to equal)
+        return start & (mean >= prev) & (idx > 0)
+
+    def cond(state):
+        start, viol = state
+        return viol.any()
+
+    def body(state):
+        start, viol = state
+        start = start & ~viol
+        return start, violations(start)
+
+    start0 = jnp.ones((p,), bool)
+    start, _ = lax.while_loop(cond, body, (start0, violations(start0)))
+    return block_means(start)
+
+
+def isotonic_decreasing_minimax(y: jax.Array) -> jax.Array:
+    """Project onto the non-increasing cone via the minimax formula
+    (Robertson et al.):  x_i = min_{a ≤ i} max_{b ≥ i} mean(y[a..b]).
+
+    O(p²) work but O(log p) depth with NO sequential data dependence.
+    Reference/benchmark alternative: the batched engine uses the
+    sweep-merging form above (cheaper on CPU); this closed form is kept as
+    an independently-derived oracle and for accelerator experiments, where
+    its depth-parallelism may win despite the p × p intermediates.
+    """
+    p = y.shape[0]
+    dtype = y.dtype
+    S = jnp.concatenate([jnp.zeros((1,), dtype), jnp.cumsum(y)])
+    a = jnp.arange(p)[:, None]
+    b = jnp.arange(p)[None, :]
+    valid = b >= a
+    means = (S[b + 1] - S[a]) / jnp.where(valid, b - a + 1, 1).astype(dtype)
+    means = jnp.where(valid, means, -jnp.inf)
+    # R[a, i] = max_{b ≥ i} mean(y[a..b]);  x_i = min_{a ≤ i} R[a, i]
+    R = lax.cummax(means, axis=1, reverse=True)
+    R = jnp.where(valid, R, jnp.inf)
+    return jnp.diagonal(lax.cummin(R, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def prox_sorted_l1_with_norm(v: jax.Array, lam: jax.Array, *,
+                             method: str = "stack"):
+    """(prox_{J(·;λ)}(v), J(prox; λ)) in one pass.
+
+    The prox works on |v| sorted decreasing, and its sorted output IS the
+    sorted magnitude vector of the result — so J(x; λ) = ⟨x_sorted, λ⟩ falls
+    out for free, saving the solver a per-iteration sort.
     """
     shape = v.shape
     v = jnp.ravel(v)
@@ -92,9 +169,27 @@ def prox_sorted_l1(v: jax.Array, lam: jax.Array, *, method: str = "stack") -> ja
     mag = jnp.abs(v)
     order = jnp.argsort(-mag)  # decreasing |v|
     w = mag[order] - lam
-    x_sorted = jnp.maximum(isotonic_decreasing(w), 0)
+    iso = {
+        "stack": isotonic_decreasing,
+        "parallel": isotonic_decreasing_parallel,
+        "minimax": isotonic_decreasing_minimax,
+    }[method](w)
+    x_sorted = jnp.maximum(iso, 0)
     x = jnp.zeros_like(v).at[order].set(x_sorted)
-    return (sign * x).reshape(shape)
+    return (sign * x).reshape(shape), jnp.dot(x_sorted, lam)
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def prox_sorted_l1(v: jax.Array, lam: jax.Array, *, method: str = "stack") -> jax.Array:
+    """prox_{J(·;λ)}(v) = argmin_x ½‖x − v‖² + J(x; λ).
+
+    ``method='stack'`` is the lax.while_loop PAVA here; ``method='parallel'``
+    the sweep-merging form (:func:`isotonic_decreasing_parallel`) the
+    batched device engine uses; ``method='minimax'`` the O(p²)-work
+    depth-parallel form; the Pallas kernel path lives in
+    :mod:`repro.kernels.ops` and is validated against this.
+    """
+    return prox_sorted_l1_with_norm(v, lam, method=method)[0]
 
 
 def dual_sorted_l1_gauge(g: jax.Array, lam: jax.Array) -> jax.Array:

@@ -30,9 +30,11 @@ def _screen_kernel(c_ref, lam_ref, o_ref, total_ref, best_ref, idx_ref):
 
     @pl.when(b == 0)
     def _init():
-        total_ref[0] = 0.0
-        best_ref[0] = -jnp.inf
-        idx_ref[0] = 0
+        # explicit f32: under jax_enable_x64 bare Python literals are weak
+        # f64 and cannot be stored into the f32 SMEM scratch
+        total_ref[0] = jnp.float32(0.0)
+        best_ref[0] = jnp.float32(-jnp.inf)
+        idx_ref[0] = jnp.int32(0)
 
     d = c_ref[...].astype(jnp.float32) - lam_ref[...].astype(jnp.float32)
     s = jnp.cumsum(d) + total_ref[0]

@@ -1,0 +1,99 @@
+"""Minimal stand-in for the slice of `hypothesis` these tests use.
+
+With ``pip install -e .[test]`` the real hypothesis is present and the test
+modules import it directly.  Without it (bare containers, minimal CI
+images) the property-test modules fall back to this shim so the suite still
+COLLECTS and the properties still run — as seeded random fuzzing with a
+bounded example count rather than coverage-guided search.
+
+Only what the test modules need is implemented: ``given`` over positional
+strategies, ``settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``lists`` / ``composite`` strategies.
+"""
+
+from __future__ import annotations
+
+import os
+import types
+
+import numpy as np
+
+# Fallback fuzzing is bounded so the fast tier stays fast; the real
+# hypothesis (CI) runs each test's full max_examples.
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "25"))
+_SEED = 0x5107E
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value, **_ignored):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        k = int(rng.integers(min_size, hi + 1))
+        return [elements.draw(rng) for _ in range(k)]
+
+    return _Strategy(draw)
+
+
+def _composite(fn):
+    def builder(*args, **kwargs):
+        def draw_case(rng):
+            return fn(lambda strategy: strategy.draw(rng), *args, **kwargs)
+
+        return _Strategy(draw_case)
+
+    return builder
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    lists=_lists,
+    composite=_composite,
+)
+
+
+def settings(max_examples=100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # deliberately no functools.wraps: pytest must see the (*args)
+        # signature, not the wrapped one, or it would try to inject the
+        # strategy parameters as fixtures
+        def wrapper(*args, **kwargs):
+            n = min(
+                getattr(wrapper, "_fallback_max_examples", 100),
+                _MAX_EXAMPLES_CAP,
+            )
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._fallback_max_examples = getattr(fn, "_fallback_max_examples", 100)
+        return wrapper
+
+    return deco

@@ -4,6 +4,9 @@ import pytest
 # GLM correctness tests need f64; models/kernels request explicit dtypes so
 # this only changes defaults.  Smoke tests intentionally see 1 CPU device —
 # do NOT set xla_force_host_platform_device_count here (dry-run only).
+# (Property tests bound their own cost: explicit @settings cap example
+# counts, and drawn cases are padded to fixed jit shapes — a hypothesis CI
+# profile would be ignored anyway, since explicit @settings take precedence.)
 jax.config.update("jax_enable_x64", True)
 
 

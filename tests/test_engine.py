@@ -1,0 +1,170 @@
+"""Device-resident batched path engine vs the host driver.
+
+The contract under test (ISSUE 1): ``fit_path_batched`` over B independent
+problems agrees with per-problem ``fit_path`` — same betas within solver
+tolerance, same violation counts — and the masked screening scan equals the
+paper's Algorithm 2 run on the unmasked prefix alone.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image: fall back to seeded random fuzzing
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    algorithm_2_oracle,
+    bh_sequence,
+    cv_path,
+    fit_path,
+    fit_path_batched,
+    get_family,
+    ols,
+    screen_masked,
+)
+from repro.data import make_multinomial, make_regression
+
+# tight solves, default-width KKT guard: the violation check must sit well
+# clear of fp noise so host and device flag identical sets
+KW = dict(path_length=10, solver_tol=1e-12, max_iter=30000, kkt_tol=1e-4)
+
+
+def _batch_problems(B, n, p, *, k=5, rho=0.2, noise=1.0):
+    probs = [make_regression(n, p, k=k, rho=rho, seed=s, noise=noise)[:2]
+             for s in range(B)]
+    return np.stack([X for X, _ in probs]), np.stack([y for _, y in probs])
+
+
+@pytest.mark.parametrize("screening", ["strong", "previous", "none"])
+def test_batched_agrees_with_fit_path(screening):
+    B, n, p = 3, 40, 60
+    Xs, ys = _batch_problems(B, n, p)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    batched = fit_path_batched(Xs, ys, lam, ols, screening=screening, **KW)
+    assert not batched.kkt_unrepaired.any()  # repair loop always finished
+    for b in range(B):
+        single = fit_path(Xs[b], ys[b], lam, ols, screening=screening,
+                          engine="host", early_stop=False, **KW)
+        np.testing.assert_allclose(batched.betas[b], single.betas, atol=5e-3)
+        assert int(batched.total_violations[b]) == single.total_violations
+        # screened/active sets may flip by a coefficient sitting exactly at
+        # the zero boundary between two tol-accurate solutions
+        np.testing.assert_allclose(
+            batched.n_screened[b], [s.n_screened for s in single.steps], atol=2)
+        np.testing.assert_allclose(
+            batched.n_active[b], [s.n_active for s in single.steps], atol=2)
+
+
+def test_device_engine_matches_host_single_problem():
+    """fit_path(engine='device') is a drop-in for the host backend."""
+    n, p = 40, 60
+    X, y, _ = make_regression(n, p, k=5, rho=0.3, seed=9)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    host = fit_path(X, y, lam, ols, engine="host", early_stop=False, **KW)
+    dev = fit_path(X, y, lam, ols, engine="device", early_stop=False, **KW)
+    np.testing.assert_allclose(host.betas, dev.betas, atol=5e-3)
+    assert host.total_violations == dev.total_violations
+    assert len(host.steps) == len(dev.steps)
+    for hs, ds in zip(host.steps, dev.steps):
+        assert abs(hs.n_screened - ds.n_screened) <= 2
+        assert abs(hs.n_active - ds.n_active) <= 2
+
+
+def test_device_engine_early_stop_truncates_like_host():
+    n, p = 25, 50
+    X, y, _ = make_regression(n, p, k=20, rho=0.0, seed=5, noise=0.01)
+    lam = np.ones(p)
+    r = fit_path(X, y, lam, ols, engine="device", path_length=100,
+                 solver_tol=1e-10, max_iter=5000)
+    assert len(r.sigmas) < 100  # saturation rules applied post-hoc
+
+
+def test_batched_multinomial_runs():
+    B, n, p, m = 3, 30, 40, 3
+    probs = [make_multinomial(n, p, k=4, m=m, rho=0.2, seed=s)[:2]
+             for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    fam = get_family("multinomial", m)
+    lam = np.asarray(bh_sequence(p * m, q=0.1))
+    res = fit_path_batched(Xs, ys, lam, fam, path_length=6,
+                           solver_tol=1e-9, max_iter=5000)
+    assert res.betas.shape == (B, 6, p, m)
+    assert np.isfinite(res.betas).all()
+
+
+def test_batched_path_results_views():
+    B, n, p = 3, 30, 40
+    Xs, ys = _batch_problems(B, n, p)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    res = fit_path_batched(Xs, ys, lam, ols, path_length=8,
+                           solver_tol=1e-9, max_iter=5000)
+    paths = res.path_results(early_stop=False)
+    assert len(paths) == B
+    for b, pr in enumerate(paths):
+        np.testing.assert_array_equal(pr.betas, res.betas[b])
+        assert len(pr.steps) == 8
+        assert pr.total_violations == int(res.total_violations[b])
+    # the default view applies the early-stopping rules post-hoc
+    for pr in res.path_results():
+        assert 1 <= len(pr.steps) <= 8
+
+
+def test_cv_path_selects_signal_recovering_sigma():
+    n, p = 60, 50
+    X, y, _ = make_regression(n, p, k=4, rho=0.0, seed=2, noise=0.3)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    cv = cv_path(X, y, lam, ols, n_folds=4, path_length=25,
+                 solver_tol=1e-9, max_iter=5000)
+    assert cv.val_deviance.shape == (4, 25)
+    assert np.isfinite(cv.mean_val_deviance).all()
+    # with real signal, some amount of fitting must beat the null model
+    assert cv.best_index > 0
+    assert cv.mean_val_deviance[cv.best_index] < cv.mean_val_deviance[0]
+
+
+# ---------------------------------------------------------------------------
+# screen_masked == Algorithm 2 on the unmasked prefix (satellite property)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def masked_screen_case(draw):
+    """Dyadic-grid inputs (exact in f64) plus a random mask."""
+    p = draw(st.integers(1, 60))
+    c = draw(st.lists(st.integers(-320, 320), min_size=p, max_size=p))
+    raw = draw(st.lists(st.integers(0, 256), min_size=p, max_size=p))
+    keep = draw(st.lists(st.integers(0, 1), min_size=p, max_size=p))
+    lam = np.sort(np.asarray(raw, np.float64))[::-1] / 64.0
+    return (np.asarray(c, np.float64) / 64.0, lam,
+            np.asarray(keep, bool))
+
+
+@settings(max_examples=200, deadline=None)
+@given(masked_screen_case())
+def test_screen_masked_equals_oracle_on_unmasked_prefix(case):
+    c, lam, mask = case
+    p = len(c)
+    # pad to one fixed jit shape; padded entries are masked out, which is
+    # exactly the property under test
+    pad = 60 - p
+    cp = jnp.asarray(np.concatenate([c, np.zeros(pad)]))
+    lamp = jnp.asarray(np.concatenate([lam, np.zeros(pad)]))
+    maskp = jnp.asarray(np.concatenate([mask, np.zeros(pad, bool)]))
+    keep, k = screen_masked(cp, lamp, maskp, jnp.zeros_like(cp))
+    keep = np.asarray(keep)[:p]
+    k = int(k)
+    # oracle: run Algorithm 2 on the unmasked entries alone (sorted), with
+    # the leading λ entries — masking must be exactly problem truncation
+    sub = np.sort(c[mask])[::-1]
+    k_oracle = algorithm_2_oracle(sub, lam[: len(sub)])
+    assert k == k_oracle
+    assert keep.sum() == k
+    assert not keep[~mask].any()
+    # kept set = k largest unmasked magnitudes
+    if k:
+        kept_vals = np.sort(c[keep])[::-1]
+        np.testing.assert_array_equal(kept_vals, sub[:k])

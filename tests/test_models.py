@@ -25,6 +25,9 @@ from repro.models import (
 )
 from repro.models.model import prefill_cross_cache
 
+# per-arch forward/decode sweeps take minutes: scheduled tier only
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -3,7 +3,11 @@ strong rule (Propositions 1–3)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image: fall back to seeded random fuzzing
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -39,7 +43,14 @@ def test_closed_form_equals_algorithm_2(case):
     """DESIGN.md §1: k = rightmost argmax of cumsum(c−λ) when max ≥ 0."""
     c, lam = case
     k_oracle = algorithm_2_oracle(c, lam)
-    k_fast = int(screen_k(jnp.asarray(c), jnp.asarray(lam)))
+    # pad to one fixed jit shape (a MASKED_NEG tail can never host the
+    # rightmost argmax), or every drawn size costs a fresh compile
+    from repro.core.screening import MASKED_NEG
+
+    pad = 80 - len(c)
+    cp = np.concatenate([c, np.full(pad, MASKED_NEG)])
+    lamp = np.concatenate([lam, np.zeros(pad)])
+    k_fast = int(screen_k(jnp.asarray(cp), jnp.asarray(lamp)))
     assert k_oracle == k_fast
 
 
@@ -54,8 +65,9 @@ def test_algorithm_1_is_prefix_of_size_k(case):
 
 def test_proposition_3_lasso_equivalence(rng):
     """Constant λ ⇒ strong rule for SLOPE == strong rule for the lasso."""
-    for _ in range(100):
-        p = int(rng.integers(2, 60))
+    # sizes from a fixed palette (one jit shape each), not free-form random
+    for trial in range(60):
+        p = (2, 3, 5, 13, 31, 59)[trial % 6]
         grad = rng.normal(size=p) * 2
         lam_prev = np.full(p, 1.5)
         lam_next = np.full(p, 1.2)

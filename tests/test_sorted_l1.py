@@ -2,8 +2,13 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image: fall back to seeded random fuzzing
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import (
@@ -50,11 +55,23 @@ def prox_case(draw):
     return np.asarray(v), lam
 
 
+def _pad_prox_case(v, lam, width=64):
+    """Zero-pad (v, λ) to a fixed width so every drawn case shares ONE jit
+    shape (a fresh compile per random size turns the property test into a
+    compile benchmark).  Exact: padded v entries are 0 with λ = 0, so they
+    sort to the tail, pool only into non-positive blocks, and emit 0."""
+    pad = width - len(v)
+    return (np.concatenate([v, np.zeros(pad)]),
+            np.concatenate([lam, np.zeros(pad)]))
+
+
 @settings(max_examples=200, deadline=None)
 @given(prox_case())
 def test_prox_matches_numpy_pava(case):
     v, lam = case
-    got = np.asarray(prox_sorted_l1(jnp.asarray(v), jnp.asarray(lam)))
+    p = len(v)
+    vp, lamp = _pad_prox_case(v, lam)
+    got = np.asarray(prox_sorted_l1(jnp.asarray(vp), jnp.asarray(lamp)))[:p]
     want = numpy_pava_prox(v, lam)
     np.testing.assert_allclose(got, want, atol=1e-10)
 
@@ -64,7 +81,9 @@ def test_prox_matches_numpy_pava(case):
 def test_prox_optimality_certificate(case):
     """v − prox(v) ∈ ∂J(prox(v); λ)  — Theorem 1 as a prox certificate."""
     v, lam = case
-    x = np.asarray(prox_sorted_l1(jnp.asarray(v), jnp.asarray(lam)))
+    p = len(v)
+    vp, lamp = _pad_prox_case(v, lam)
+    x = np.asarray(prox_sorted_l1(jnp.asarray(vp), jnp.asarray(lamp)))[:p]
     assert in_subdifferential(v - x, x, lam, atol=1e-8)
 
 
@@ -83,10 +102,36 @@ def test_prox_shrinks_toward_zero(rng):
 
 
 def test_isotonic_decreasing_is_monotone(rng):
-    for _ in range(50):
-        y = rng.normal(size=rng.integers(1, 200))
+    # sizes from a fixed palette: each new length recompiles the lax loop,
+    # so free-form random sizes turn this into a compile-time benchmark
+    for p in (1, 2, 17, 200) * 8:
+        y = rng.normal(size=p)
         x = np.asarray(isotonic_decreasing(jnp.asarray(y)))
         assert np.all(np.diff(x) <= 1e-12)
+
+
+def test_isotonic_parallel_and_minimax_match_stack(rng):
+    """The engine's sweep-merging form and the minimax form are exact."""
+    from repro.core import isotonic_decreasing_parallel
+    from repro.core.sorted_l1 import isotonic_decreasing_minimax
+
+    iso_par = jax.jit(isotonic_decreasing_parallel)
+    iso_mm = jax.jit(isotonic_decreasing_minimax)
+    for trial in range(24):
+        p = (1, 2, 17, 200)[trial % 4]
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            y = np.sort(rng.normal(size=p))          # fully violating
+        elif kind == 1:
+            y = rng.integers(-3, 3, size=p).astype(float)  # heavy ties
+        else:
+            y = rng.normal(size=p) * 3
+        want = np.asarray(isotonic_decreasing(jnp.asarray(y)))
+        np.testing.assert_allclose(np.asarray(iso_par(jnp.asarray(y))), want,
+                                   atol=1e-10)
+        if p == 200:  # minimax builds p×p intermediates; one shape suffices
+            np.testing.assert_allclose(np.asarray(iso_mm(jnp.asarray(y))),
+                                       want, atol=1e-10)
 
 
 def test_norm_properties(rng):

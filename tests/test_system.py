@@ -8,6 +8,7 @@
 """
 
 import numpy as np
+import pytest
 
 import jax.numpy as jnp
 
@@ -60,6 +61,7 @@ def test_logistic_path_with_screening():
     assert r.steps[-1].deviance < r.steps[0].deviance
 
 
+@pytest.mark.slow
 def test_lm_slope_training_end_to_end(tmp_path):
     import dataclasses
 

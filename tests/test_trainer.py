@@ -15,6 +15,9 @@ from repro.models.slope_reg import SlopeRegConfig
 from repro.optim import AdamWHyper
 from repro.train import TrainConfig, Trainer, latest_step
 
+# LM training loops: scheduled tier only
+pytestmark = pytest.mark.slow
+
 
 def _tiny_cfg():
     return dataclasses.replace(get_config("smollm-360m").reduced(), n_layers=2,
