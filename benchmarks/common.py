@@ -36,7 +36,6 @@ def fit(X, y, family_name, *, screening, q=0.1, seq="bh", path_length=50,
         # pre-compile every sub-problem bucket shape the path might use
         # (1-iteration solves at huge λ): steady-state timing, like the
         # paper's non-JIT R/C++ baseline
-        from repro.core.path import _bucket
         from repro.core.solver import fista
 
         n, pX = X.shape

@@ -1,13 +1,26 @@
-"""Compare two dry-run sweeps (baseline vs optimized) cell by cell.
+"""Compare two benchmark artifacts cell by cell.
 
-  PYTHONPATH=src python -m benchmarks.compare_sweeps runs/dryrun_v3 runs/dryrun_v4
+Two modes:
+
+* roofline dry-run sweeps (directories of per-cell JSON files):
+
+    PYTHONPATH=src python -m benchmarks.compare_sweeps runs/dryrun_v3 runs/dryrun_v4
+
+* ``--bench``: two BENCH_ci.json artifacts written by ``benchmarks.run
+  --json`` (lists of ``{name, us_per_call, derived}`` rows).  CI diffs the
+  fresh artifact against the previous run's and pastes the markdown table
+  into the job summary:
+
+    python -m benchmarks.compare_sweeps --bench prev/BENCH_ci.json BENCH_ci.json
 """
 
 import json
 import pathlib
 import sys
 
-from repro.launch.roofline import cell_tokens, roofline_terms
+# beyond this slowdown a row is flagged as a regression in the summary
+# (CI runners are noisy; small deltas are not actionable)
+BENCH_REGRESSION_THRESHOLD = 1.25
 
 
 def load(outdir):
@@ -21,6 +34,8 @@ def load(outdir):
 
 
 def main(base_dir, opt_dir):
+    from repro.launch.roofline import cell_tokens, roofline_terms
+
     base = load(base_dir)
     opt = load(opt_dir)
     print("| arch | shape | bound | frac base | frac opt | Δ | mem_ub base→opt (s) |")
@@ -43,5 +58,46 @@ def main(base_dir, opt_dir):
         print(f"\ngeomean roofline-fraction gain: {geo:.2f}x over {len(gains)} cells")
 
 
+def main_bench(prev_path, new_path):
+    """Diff two BENCH_ci.json row lists; markdown to stdout (job summary)."""
+    prev = {r["name"]: r for r in json.loads(pathlib.Path(prev_path).read_text())}
+    new = json.loads(pathlib.Path(new_path).read_text())
+    print("### Benchmark trajectory (vs previous run)\n")
+    print("| row | prev µs | now µs | Δ | |")
+    print("|---|---|---|---|---|")
+    regressions = 0
+    ratios = []
+    for r in new:
+        name, us = r["name"], r["us_per_call"]
+        p = prev.get(name)
+        if p is None or not p.get("us_per_call"):
+            print(f"| {name} | — | {us:.1f} | new | |")
+            continue
+        ratio = us / p["us_per_call"]
+        ratios.append(ratio)
+        flag = ""
+        if ratio > BENCH_REGRESSION_THRESHOLD:
+            flag = "⚠️ regression"
+            regressions += 1
+        elif ratio < 1 / BENCH_REGRESSION_THRESHOLD:
+            flag = "🟢 faster"
+        print(f"| {name} | {p['us_per_call']:.1f} | {us:.1f} | "
+              f"{(ratio - 1) * 100:+.0f}% | {flag} |")
+    dropped = sorted(set(prev) - {r["name"] for r in new})
+    for name in dropped:
+        print(f"| {name} | {prev[name]['us_per_call']:.1f} | — | dropped | |")
+    if ratios:
+        import math
+
+        geo = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+        print(f"\ngeomean time ratio: {geo:.2f}x over {len(ratios)} shared rows; "
+              f"{regressions} row(s) above the {BENCH_REGRESSION_THRESHOLD:.2f}x "
+              "regression threshold")
+    # informational: CI runners are too noisy to hard-fail on wall time
+    return 0
+
+
 if __name__ == "__main__":
+    if sys.argv[1] == "--bench":
+        sys.exit(main_bench(*sys.argv[2:4]))
     main(*sys.argv[1:3])

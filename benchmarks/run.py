@@ -131,30 +131,60 @@ def fig6_algorithms(full: bool):
 
 
 def kernels(full: bool):
-    """Pallas kernel microbenches (interpret mode) vs jnp oracle."""
-    from repro.kernels import prox_sorted_l1_kernel, screen_scan, slope_gradient
+    """Pallas kernel microbenches (interpret mode) vs jnp oracle.
+
+    Every row is best-of-``KERNEL_REPEATS`` after an explicit warmup call —
+    these rows feed the BENCH_ci.json perf trajectory, so single-sample
+    (compile-polluted) timings are not acceptable.
+    """
+    from repro.kernels import (
+        prox_sorted_l1_kernel,
+        screen_scan,
+        slope_gradient,
+        slope_gradient_masked,
+        slope_loss_residual,
+        slope_residual_masked,
+    )
     from repro.kernels import ref as R
+
+    KERNEL_REPEATS = 5
+
+    def bench(fn):
+        fn()  # warmup: compile outside the timed repeats
+        return timed(fn, repeats=KERNEL_REPEATS)[1]
 
     rng = np.random.default_rng(0)
     n, p = (512, 8192) if full else (256, 2048)
     X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
     r = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
 
-    _, t_k = timed(lambda: slope_gradient(X, r))
-    _, t_r = timed(lambda: R.xt_matmul_ref(X, r))
+    t_k = bench(lambda: slope_gradient(X, r))
+    t_r = bench(lambda: R.xt_matmul_ref(X, r))
     row("kernel/xt_gemv", t_k * 1e6, f"interp_vs_jnp={t_k / t_r:.1f}x")
+
+    # mask-aware GEMVs at 1/8 working-set density: fully-masked (bn × bp)
+    # column blocks skip their MXU pass
+    mask = jnp.asarray(np.arange(p) % 8 == 0)
+    b = jnp.asarray(rng.normal(size=(p, 1)) / np.sqrt(p), jnp.float32)
+    yv = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+    t_m = bench(lambda: slope_gradient_masked(X, r, mask))
+    row("kernel/xt_gemv_masked", t_m * 1e6, f"masked_vs_dense={t_m / t_k:.2f}x")
+    t_d = bench(lambda: slope_residual_masked(X, b, yv, mask, family="ols"))
+    t_f = bench(lambda: slope_loss_residual(X, b, yv, family="ols")[1])
+    row("kernel/xb_residual_masked", t_d * 1e6, "1/8-density working set")
+    row("kernel/xb_loss_residual", t_f * 1e6, "fused loss+residual, one X pass")
 
     c = jnp.asarray(np.sort(np.abs(rng.normal(size=p)))[::-1].copy(), jnp.float32)
     lam = jnp.asarray(sequence("bh", p, 0.1), jnp.float32)
-    _, t_k = timed(lambda: screen_scan(c, lam))
-    _, t_r = timed(lambda: R.screen_scan_ref(c, lam))
+    t_k = bench(lambda: screen_scan(c, lam))
+    t_r = bench(lambda: R.screen_scan_ref(c, lam))
     row("kernel/screen_scan", t_k * 1e6, f"interp_vs_jnp={t_k / t_r:.1f}x")
 
     v = jnp.asarray(rng.normal(size=p), jnp.float32)
-    _, t_k = timed(lambda: prox_sorted_l1_kernel(v, lam))
+    t_k = bench(lambda: prox_sorted_l1_kernel(v, lam))
     from repro.core import prox_sorted_l1
 
-    _, t_r = timed(lambda: prox_sorted_l1(v, lam))
+    t_r = bench(lambda: prox_sorted_l1(v, lam))
     row("kernel/prox_sorted_l1", t_k * 1e6, f"interp_vs_lax={t_k / t_r:.1f}x")
 
 
@@ -205,6 +235,79 @@ def batched_engine(full: bool):
         f"speedup={t_loop / t_batch:.1f}x maxdiff={diff:.1e}")
 
 
+def compact_engine(full: bool):
+    """ISSUE 2 acceptance: compact working-set engine vs the masked engine
+    at a p ≫ n batched config.
+
+    Both arms run the SAME screened path; the masked arm pays O(n·p) per
+    FISTA iteration while the compact arm gathers the working set into a
+    static (n, W) bucket and pays O(n·W).  A third arm shrinks W below the
+    peak working set to demonstrate the in-graph `lax.cond` fallback to the
+    masked solve (flagged per step, results identical).
+    """
+    from repro.core import bh_sequence, fit_path, fit_path_batched, ols
+    from repro.data import make_regression
+
+    B, n = 8, 80
+    p = 4096 if full else 2048
+    W = 256
+    probs = [make_regression(n, p, k=5, rho=0.0, seed=s, noise=0.3)[:2]
+             for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    lam = np.asarray(bh_sequence(p, q=0.05))
+    # dense grid over the top of the path: the sparse p ≫ n regime where the
+    # strong rule keeps the working set ≪ W (peak |E| ≈ 60 here) and the
+    # masked engine wastes (p − W)/p of every matvec.  solver_tol is pushed
+    # hard so both backends land within the 1e-6 host-agreement bar; the
+    # sub-problems stay well-conditioned at this depth, so the Cauchy stop
+    # translates to ≲1e-7 coefficient precision
+    kw = dict(path_length=50, sigma_ratio=0.6, solver_tol=1e-14,
+              max_iter=60000, kkt_tol=1e-4)
+
+    # warm every compile cache, then best-of-repeats (BENCH_ci.json rows)
+    fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw)
+    fit_path_batched(Xs, ys, lam, ols, screening="strong", working_set=W, **kw)
+
+    masked, t_masked = timed(
+        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw),
+        repeats=2,
+    )
+    compact, t_compact = timed(
+        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong",
+                                 working_set=W, **kw),
+        repeats=2,
+    )
+    assert not compact.compact_fallback.any(), "W bucket too small for config"
+
+    host = [fit_path(Xs[b], ys[b], lam, ols, screening="strong", engine="host",
+                     early_stop=False, **kw) for b in range(B)]
+    diff_host = max(np.abs(host[b].betas - compact.betas[b]).max()
+                    for b in range(B))
+    diff_masked = np.abs(masked.betas - compact.betas).max()
+    row(f"compact_engine/masked_B{B}_p{p}", t_masked * 1e6,
+        "masked full-width engine")
+    row(f"compact_engine/compact_B{B}_p{p}_W{W}", t_compact * 1e6,
+        f"speedup={t_masked / t_compact:.1f}x maxdiff_host={diff_host:.1e} "
+        f"maxdiff_masked={diff_masked:.1e} ws_max={int(compact.ws_size.max())}")
+
+    # overflow: a bucket below the peak working set must fall back to the
+    # masked solve (in-graph lax.cond) and reproduce the masked results
+    W_small = 16
+    fit_path_batched(Xs, ys, lam, ols, screening="strong",
+                     working_set=W_small, **kw)  # warm the W=16 compile
+    over, t_over = timed(
+        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong",
+                                 working_set=W_small, **kw),
+        repeats=2,
+    )
+    assert over.compact_fallback.any(), "overflow case failed to trigger"
+    diff_over = np.abs(over.betas - masked.betas).max()
+    row(f"compact_engine/overflow_B{B}_p{p}_W{W_small}", t_over * 1e6,
+        f"fallback_steps={int(over.compact_fallback.any(axis=0).sum())}/"
+        f"{over.compact_fallback.shape[1]} maxdiff_masked={diff_over:.1e}")
+
+
 BENCHES = {
     "table1_speedup": table1_speedup,
     "fig1_fig2_efficiency": fig1_fig2_efficiency,
@@ -213,20 +316,28 @@ BENCHES = {
     "fig6_algorithms": fig6_algorithms,
     "kernels": kernels,
     "batched_engine": batched_engine,
+    "compact_engine": compact_engine,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--only", default=None, metavar="SECTION[,SECTION...]",
+                    help=f"comma-separated subset of {list(BENCHES)}")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact (CI: BENCH_ci.json)")
     args = ap.parse_args()
+    only = None
+    if args.only:
+        only = args.only.split(",")
+        unknown = [s for s in only if s not in BENCHES]
+        if unknown:
+            ap.error(f"unknown section(s) {unknown}; choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         fn(args.full)
     if args.json:

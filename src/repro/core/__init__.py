@@ -28,13 +28,15 @@ from .lambda_seq import (
     sigma_grid,
 )
 from .losses import Family, ols, logistic, poisson, multinomial, get_family
-from .solver import fista, fista_masked, FistaResult
+from .solver import fista, fista_masked, fista_compact, FistaResult
 from .engine import (
     path_engine,
     batched_path_engine,
+    compact_path_engine,
     fit_path_batched,
     cv_path,
     EnginePath,
+    CompactStats,
     BatchedPathResult,
     CvPathResult,
 )
@@ -51,8 +53,9 @@ __all__ = [
     "bh_sequence", "gaussian_sequence", "oscar_sequence", "lasso_sequence",
     "path_start_sigma", "sigma_grid",
     "Family", "ols", "logistic", "poisson", "multinomial", "get_family",
-    "fista", "fista_masked", "FistaResult",
-    "path_engine", "batched_path_engine", "fit_path_batched", "cv_path",
-    "EnginePath", "BatchedPathResult", "CvPathResult",
+    "fista", "fista_masked", "fista_compact", "FistaResult",
+    "path_engine", "batched_path_engine", "compact_path_engine",
+    "fit_path_batched", "cv_path",
+    "EnginePath", "CompactStats", "BatchedPathResult", "CvPathResult",
     "fit_path", "PathResult", "PathStep",
 ]

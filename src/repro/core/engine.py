@@ -46,12 +46,14 @@ from .kkt import kkt_violations_masked
 from .lambda_seq import path_start_sigma, sigma_grid
 from .losses import Family
 from .screening import screen_masked
-from .solver import default_L0, fista_masked
+from .solver import default_L0, fista_compact, fista_masked
 
 __all__ = [
     "EnginePath",
+    "CompactStats",
     "path_engine",
     "batched_path_engine",
+    "compact_path_engine",
     "fit_path_batched",
     "cv_path",
     "null_gradient",
@@ -75,12 +77,74 @@ class EnginePath(NamedTuple):
     #   with violations outstanding; the step's betas are NOT KKT-clean
 
 
+class CompactStats(NamedTuple):
+    """Per-step compact-engine telemetry (leading axes = problem, path point)."""
+
+    ws_size: jax.Array    # (B, L) int32 — peak working-set demand |E| per step
+    fell_back: jax.Array  # (B, L) bool — step ran the masked full-width
+    #   fallback because some batch member's |E| exceeded the W bucket
+
+
+# ---------------------------------------------------------------------------
+# Per-problem step primitives, shared by the masked and compact engines
+# ---------------------------------------------------------------------------
+
+def _screen_sets(grad, prev_active, sig_prev, sig, lam, *, p, m, screening):
+    """Strong set + initial working set E₀ for one path step (one problem)."""
+    pm = p * m
+    gap = (sig_prev - sig) * lam  # rank-space surrogate shift
+    keep_flat, _ = screen_masked(jnp.abs(grad.reshape(pm)), sig * lam,
+                                 jnp.ones((pm,), bool), gap)
+    strong_p = keep_flat.reshape(p, m).any(axis=1)
+    n_screened = strong_p.sum().astype(jnp.int32)
+    if screening == "strong":
+        E0 = strong_p | prev_active
+    else:  # "previous" (Algorithm 4)
+        E0 = jnp.where(prev_active.any(), prev_active, strong_p)
+    # mirror the host driver: once screening keeps most predictors
+    # (n ≳ p regime) just solve the full problem — keeps violation
+    # accounting identical between backends
+    E0 = jnp.where(E0.sum() >= 0.5 * p, jnp.ones((p,), bool), E0)
+    return strong_p, E0, n_screened
+
+
+def _kkt_step(grad, lam_next, E, strong_p, checked_full, *, p, m, kkt_tol,
+              screening):
+    """KKT violation mask for one problem; see Algorithms 3/4."""
+    pm = p * m
+    gflat = grad.reshape(pm)
+    ever = jnp.repeat(E, m)
+    ones_pm = jnp.ones((pm,), bool)
+    viol_full = kkt_violations_masked(gflat, lam_next, ever, ones_pm,
+                                      tol=kkt_tol)
+    if screening != "previous":
+        return viol_full, checked_full
+    # Algorithm 4: check the strong set first; only once it is clean,
+    # graduate (permanently) to full-set checks.
+    subset = jnp.repeat(strong_p, m)
+    viol_sub = kkt_violations_masked(gflat, lam_next, ever, subset,
+                                     tol=kkt_tol)
+    pre = ~checked_full
+    sub_has = viol_sub.any()
+    viol = jnp.where(pre & sub_has, viol_sub, viol_full)
+    return viol, checked_full | (pre & ~sub_has)
+
+
+def _new_violations(viol_flat, strong_p, prev_active, *, p, m, screening):
+    """Count the rule's failures: violations against the *strong* set
+    (paper §2.2.3); previous-set warm misses are algorithmic."""
+    rows = viol_flat.reshape(p, m).any(axis=1)
+    miss = rows & ~strong_p
+    if screening == "previous":
+        miss = miss & ~prev_active
+    return miss.sum().astype(jnp.int32)
+
+
 def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
             kkt_tol, max_refits) -> EnginePath:
     """Traced body shared by :func:`path_engine` and the vmapped batch form."""
     n, p = X.shape
     m = family.n_classes
-    pm = p * m
     dtype = X.dtype
     lam = lam.astype(dtype)
 
@@ -93,7 +157,6 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
     zeros = jnp.zeros((p, m), dtype)
     grad0 = lift(family.gradient(X, y, fam_shape(zeros)))
     null_dev = family.loss(X, y, fam_shape(zeros))
-    ones_pm = jnp.ones((pm,), bool)
 
     def solve(E, lam_next, beta, L):
         # The stack PAVA prox is a p·m-length sequential loop — under vmap
@@ -109,31 +172,10 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
         grad = lift(family.gradient(X, y, fam_shape(beta_new)))
         return beta_new, grad, res.iters.astype(jnp.int32), res.L
 
-    def kkt_check(grad, E, strong_p, checked_full, lam_next):
-        gflat = grad.reshape(pm)
-        ever = jnp.repeat(E, m)
-        viol_full = kkt_violations_masked(gflat, lam_next, ever, ones_pm,
-                                          tol=kkt_tol)
-        if screening != "previous":
-            return viol_full, checked_full
-        # Algorithm 4: check the strong set first; only once it is clean,
-        # graduate (permanently) to full-set checks.
-        subset = jnp.repeat(strong_p, m)
-        viol_sub = kkt_violations_masked(gflat, lam_next, ever, subset,
-                                         tol=kkt_tol)
-        pre = ~checked_full
-        sub_has = viol_sub.any()
-        viol = jnp.where(pre & sub_has, viol_sub, viol_full)
-        return viol, checked_full | (pre & ~sub_has)
-
-    def count_viol(viol_flat, strong_p, prev_active):
-        # Violations against the *strong* set are the rule's failures
-        # (paper §2.2.3); previous-set warm misses are algorithmic.
-        rows = viol_flat.reshape(p, m).any(axis=1)
-        miss = rows & ~strong_p
-        if screening == "previous":
-            miss = miss & ~prev_active
-        return miss.sum().astype(jnp.int32)
+    kkt_check = functools.partial(_kkt_step, p=p, m=m, kkt_tol=kkt_tol,
+                                  screening=screening)
+    count_viol = functools.partial(_new_violations, p=p, m=m,
+                                   screening=screening)
 
     def step(carry, sigs):
         beta, grad, prev_active, L_carry = carry
@@ -145,19 +187,9 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
             E0 = strong_p
             n_screened = jnp.int32(p)
         else:
-            gap = (sig_prev - sig) * lam  # rank-space surrogate shift
-            keep_flat, _ = screen_masked(jnp.abs(grad.reshape(pm)), lam_next,
-                                         ones_pm, gap)
-            strong_p = keep_flat.reshape(p, m).any(axis=1)
-            n_screened = strong_p.sum().astype(jnp.int32)
-            if screening == "strong":
-                E0 = strong_p | prev_active
-            else:
-                E0 = jnp.where(prev_active.any(), prev_active, strong_p)
-            # mirror the host driver: once screening keeps most predictors
-            # (n ≳ p regime) just solve the full problem — keeps violation
-            # accounting identical between backends
-            E0 = jnp.where(E0.sum() >= 0.5 * p, jnp.ones((p,), bool), E0)
+            strong_p, E0, n_screened = _screen_sets(
+                grad, prev_active, sig_prev, sig, lam, p=p, m=m,
+                screening=screening)
 
         beta1, grad1, it1, L1 = solve(E0, lam_next, beta, L_carry)
 
@@ -168,8 +200,8 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
             iters = it1
             unrepaired = jnp.bool_(False)
         else:
-            viol1, checked1 = kkt_check(grad1, E0, strong_p, jnp.bool_(False),
-                                        lam_next)
+            viol1, checked1 = kkt_check(grad1, lam_next, E0, strong_p,
+                                        jnp.bool_(False))
             state = dict(
                 beta=beta1, grad=grad1, L=L1,
                 E=E0 | viol1.reshape(p, m).any(axis=1),
@@ -184,8 +216,8 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
             def body(s):
                 beta2, grad2, it2, L2 = solve(s["E"], lam_next, s["beta"],
                                               s["L"])
-                viol2, checked2 = kkt_check(grad2, s["E"], strong_p,
-                                            s["checked"], lam_next)
+                viol2, checked2 = kkt_check(grad2, lam_next, s["E"],
+                                            strong_p, s["checked"])
                 return dict(
                     beta=beta2, grad=grad2, L=L2,
                     E=s["E"] | viol2.reshape(p, m).any(axis=1),
@@ -261,6 +293,211 @@ def batched_path_engine(X, y, lam, sigmas, family: Family, *,
     return jax.vmap(one)(X, y, sigmas)
 
 
+def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
+                    tol, kkt_tol, max_refits, width):
+    """Natively-batched compact-working-set engine.
+
+    Identical per-step semantics to ``vmap(_engine)`` with one structural
+    difference: the batch axis is threaded through the *data* while control
+    flow stays **scalar**.  That lets the overflow check reduce over the
+    batch (``any(|E| > W)``) before the ``lax.cond`` that picks between the
+    compact O(n·W) solve and the masked O(n·p) fallback — a per-member cond
+    under ``vmap`` would lower to ``lax.select`` and execute BOTH branches,
+    erasing the compact win.  The price: if any one batch member overflows
+    the W bucket, the whole batch pays the masked solve for that repair
+    round (conservative, correct, and rare once W is bucketed right).
+    """
+    B, n, p = X.shape
+    m = family.n_classes
+    dtype = X.dtype
+    lam = lam.astype(dtype)
+    W = width
+
+    def fam_shape(b):  # (p, m) -> the shape the family callbacks expect
+        return b[:, 0] if m == 1 else b
+
+    def lift(b):  # family shape -> (p, m)
+        return b[:, None] if m == 1 else b
+
+    zeros1 = jnp.zeros((p, m), dtype)
+
+    def grad_one(Xi, yi, beta):
+        return lift(family.gradient(Xi, yi, fam_shape(beta)))
+
+    def dev_one(Xi, yi, beta):
+        return family.loss(Xi, yi, fam_shape(beta))
+
+    grad0 = jax.vmap(lambda Xi, yi: grad_one(Xi, yi, zeros1))(X, y)
+    null_dev = jax.vmap(lambda Xi, yi: dev_one(Xi, yi, zeros1))(X, y)
+
+    solver_kw = dict(max_iter=max_iter, tol=tol, prox_method="parallel")
+
+    def solve_masked_one(Xi, yi, lam_next, beta, E, L):
+        res = fista_masked(Xi, yi, lam_next, fam_shape(beta), E, family,
+                           L0=L, **solver_kw)
+        return lift(res.beta), res.iters.astype(jnp.int32), res.L
+
+    def solve_compact_one(Xi, yi, lam_next, beta, E, L):
+        res = fista_compact(Xi, yi, lam_next, fam_shape(beta), E, family,
+                            width=W, L0=L, **solver_kw)
+        return lift(res.beta), res.iters.astype(jnp.int32), res.L
+
+    def solve_all(E, lam_next, beta, L):
+        need = E.sum(axis=1).astype(jnp.int32)
+        fell_back = jnp.any(need > W)  # scalar — keeps the cond a real branch
+        beta1, it1, L1 = lax.cond(
+            fell_back,
+            lambda args: jax.vmap(solve_masked_one)(X, y, *args),
+            lambda args: jax.vmap(solve_compact_one)(X, y, *args),
+            (lam_next, beta, E, L),
+        )
+        grad1 = jax.vmap(grad_one)(X, y, beta1)
+        return beta1, grad1, it1, L1, fell_back, need
+
+    kkt_one = functools.partial(_kkt_step, p=p, m=m, kkt_tol=kkt_tol,
+                                screening=screening)
+    nv_one = functools.partial(_new_violations, p=p, m=m, screening=screening)
+    screen_one = functools.partial(_screen_sets, p=p, m=m, screening=screening)
+
+    def step(carry, sigs):
+        beta, grad, prev_active, L_carry = carry
+        sig_prev, sig = sigs                      # (B,), (B,)
+        lam_next = sig[:, None] * lam[None, :]    # (B, p·m)
+
+        if screening == "none":
+            strong_p = jnp.ones((B, p), bool)
+            E0 = strong_p
+            n_screened = jnp.full((B,), p, jnp.int32)
+        else:
+            strong_p, E0, n_screened = jax.vmap(
+                screen_one, in_axes=(0, 0, 0, 0, None)
+            )(grad, prev_active, sig_prev, sig, lam)
+
+        beta1, grad1, it1, L1, fb1, need1 = solve_all(E0, lam_next, beta,
+                                                      L_carry)
+
+        if screening == "none":
+            beta_f, grad_f, L_f = beta1, grad1, L1
+            viol_count = jnp.zeros((B,), jnp.int32)
+            refits = jnp.zeros((B,), jnp.int32)
+            iters = it1
+            unrepaired = jnp.zeros((B,), bool)
+            fell_back = fb1
+            ws_max = need1
+        else:
+            viol1, checked1 = jax.vmap(kkt_one)(grad1, lam_next, E0, strong_p,
+                                                jnp.zeros((B,), bool))
+            state = dict(
+                beta=beta1, grad=grad1, L=L1,
+                E=E0 | viol1.reshape(B, p, m).any(axis=2),
+                checked=checked1,
+                has_viol=viol1.reshape(B, -1).any(axis=1),
+                viol_count=jax.vmap(nv_one)(viol1, strong_p, prev_active),
+                refits=jnp.zeros((B,), jnp.int32), iters=it1,
+                fell_back=fb1, ws_max=need1,
+            )
+
+            def cond(s):
+                return jnp.any(s["has_viol"] & (s["refits"] < max_refits))
+
+            def body(s):
+                # members already KKT-clean keep their state (mirrors the
+                # per-member select vmap applies to a batched while_loop).
+                # Their E is blanked for this round so only members still
+                # repairing count toward the overflow predicate — their
+                # (discarded) solve must not force the masked fallback.
+                active = s["has_viol"] & (s["refits"] < max_refits)
+                beta2, grad2, it2, L2, fb2, need2 = solve_all(
+                    s["E"] & active[:, None], lam_next, s["beta"], s["L"])
+                viol2, checked2 = jax.vmap(kkt_one)(grad2, lam_next, s["E"],
+                                                    strong_p, s["checked"])
+
+                def sel(new, old):
+                    a = active.reshape((B,) + (1,) * (new.ndim - 1))
+                    return jnp.where(a, new, old)
+
+                viol_rows = viol2.reshape(B, p, m).any(axis=2)
+                return dict(
+                    beta=sel(beta2, s["beta"]),
+                    grad=sel(grad2, s["grad"]),
+                    L=sel(L2, s["L"]),
+                    E=sel(s["E"] | viol_rows, s["E"]),
+                    checked=sel(checked2, s["checked"]),
+                    has_viol=sel(viol2.reshape(B, -1).any(axis=1),
+                                 s["has_viol"]),
+                    viol_count=s["viol_count"] + jnp.where(
+                        active, jax.vmap(nv_one)(viol2, strong_p, prev_active),
+                        0),
+                    refits=s["refits"] + active.astype(jnp.int32),
+                    iters=s["iters"] + jnp.where(active, it2, 0),
+                    fell_back=s["fell_back"] | fb2,
+                    ws_max=jnp.maximum(s["ws_max"], need2),
+                )
+
+            state = lax.while_loop(cond, body, state)
+            beta_f, grad_f, L_f = state["beta"], state["grad"], state["L"]
+            viol_count = state["viol_count"]
+            refits = state["refits"]
+            iters = state["iters"]
+            unrepaired = state["has_viol"]  # loop exited on the refit cap
+            fell_back = state["fell_back"]
+            ws_max = state["ws_max"]
+
+        active = (jnp.abs(beta_f) > 0).any(axis=2)
+        dev = jax.vmap(dev_one)(X, y, beta_f)
+        out = (beta_f, active.sum(axis=1).astype(jnp.int32), n_screened,
+               viol_count, refits, iters, dev, unrepaired, ws_max,
+               fell_back & jnp.ones((B,), bool))
+        return (beta_f, grad_f, active, L_f), out
+
+    L_init = jax.vmap(lambda Xi: default_L0(Xi, family))(X).astype(dtype)
+    carry0 = (jnp.zeros((B, p, m), dtype), grad0, jnp.zeros((B, p), bool),
+              L_init)
+    xs = (sigmas[:, :-1].T, sigmas[:, 1:].T)  # scan over the path axis
+    _, outs = lax.scan(step, carry0, xs)
+    betas, n_act, n_scr, viol, refits, iters, devs, unrep, ws, fb = outs
+
+    def pre(a, v):
+        a = jnp.moveaxis(a, 0, 1)  # (L-1, B, ...) -> (B, L-1, ...)
+        v = jnp.broadcast_to(jnp.asarray(v, a.dtype),
+                             (a.shape[0],) + a.shape[2:])
+        return jnp.concatenate([v[:, None], a], axis=1)
+
+    ep = EnginePath(
+        betas=pre(betas, jnp.zeros((p, m), dtype)),
+        n_active=pre(n_act, 0),
+        n_screened=pre(n_scr, 0),
+        n_violations=pre(viol, 0),
+        refits=pre(refits, 0),
+        solver_iters=pre(iters, 0),
+        deviance=jnp.concatenate([null_dev[:, None],
+                                  jnp.moveaxis(devs, 0, 1)], axis=1),
+        kkt_unrepaired=pre(unrep, False),
+    )
+    stats = CompactStats(ws_size=pre(ws, 0), fell_back=pre(fb, False))
+    return ep, stats
+
+
+_COMPACT_STATICS = _ENGINE_STATICS + ("width",)
+
+
+@functools.partial(jax.jit, static_argnames=_COMPACT_STATICS)
+def compact_path_engine(X, y, lam, sigmas, family: Family, *, width: int,
+                        screening: str = "strong", max_iter: int = 5000,
+                        tol: float = 1e-8, kkt_tol: float = 1e-4,
+                        max_refits: int = 32):
+    """Batched path engine with working sets compacted to a static ``width``
+    bucket: the inner solve costs O(n·W) instead of O(n·p), with a batch-wide
+    ``lax.cond`` fallback to the masked full-width solve on overflow.
+
+    ``X``: (B, n, p); ``y``: (B, n[, ...]); ``sigmas``: (B, L); ``lam``
+    shared.  Returns ``(EnginePath, CompactStats)`` with leading batch axes.
+    One compilation per (B, n, p, m, L, W, config).
+    """
+    return _compact_engine(X, y, lam, sigmas, family, screening, max_iter,
+                           tol, kkt_tol, max_refits, width)
+
+
 # ---------------------------------------------------------------------------
 # Host-facing wrappers
 # ---------------------------------------------------------------------------
@@ -281,6 +518,9 @@ class BatchedPathResult:
     kkt_unrepaired: np.ndarray  # (B, L) bool — see EnginePath.kkt_unrepaired
     total_time: float
     n_samples: int            # rows per problem (early-stop rules need it)
+    working_set: int | None = None        # W bucket (None: masked engine)
+    ws_size: np.ndarray | None = None     # (B, L) peak |E| per step
+    compact_fallback: np.ndarray | None = None  # (B, L) masked-fallback steps
 
     @property
     def batch(self) -> int:
@@ -350,6 +590,33 @@ def _null_sigma_grids(Xs, ys, lam, family: Family, path_length, sigma_ratio):
     ])
 
 
+# Grow-on-overflow bucket memory: (n, p, m, family, screening) → last W that
+# overflowed, promoted to the next power of two.  Correctness never depends
+# on it (overflow steps fall back to the masked solve in-graph); it just
+# stops the NEXT same-shape call from paying the fallback again.
+_WS_BUCKETS: dict[tuple, int] = {}
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+def _ws_bucket(working_set, n: int, p: int, key: tuple) -> int:
+    """Resolve the static compact width W to a power-of-two bucket ≤ p."""
+    if isinstance(working_set, int):
+        if working_set < 1:
+            raise ValueError(f"working_set must be ≥ 1, got {working_set}")
+        return min(_next_pow2(working_set), p)
+    if working_set != "auto":
+        raise ValueError(
+            f"working_set must be None, an int or 'auto', got {working_set!r}")
+    if key in _WS_BUCKETS:
+        return min(_WS_BUCKETS[key], p)
+    # p ≫ n: the screened set tracks the active set, which cannot exceed n
+    # useful coefficients by much — 2n is a comfortable first bucket
+    return min(_next_pow2(max(2 * n, 64)), p)
+
+
 def fit_path_batched(
     Xs, ys, lam, family: Family, *,
     screening: str = "strong",
@@ -360,6 +627,7 @@ def fit_path_batched(
     max_iter: int = 5000,
     kkt_tol: float = 1e-4,
     max_refits: int = 32,
+    working_set: int | str | None = None,
 ) -> BatchedPathResult:
     """Fit B independent SLOPE paths in one compiled device program.
 
@@ -368,6 +636,14 @@ def fit_path_batched(
     Semantics match ``fit_path(..., engine="device")`` per problem.  Steps
     whose KKT repair hit ``max_refits`` are flagged in ``kkt_unrepaired``
     (and warned about) — raise the cap if that ever fires.
+
+    ``working_set`` selects the compact engine: an int requests a static
+    width bucket W (rounded up to a power of two, capped at p), ``"auto"``
+    picks ``min(2^⌈log₂ max(2n, 64)⌉, p)`` with grow-on-overflow memory, and
+    ``None`` keeps the masked full-width engine.  Compact solves cost
+    O(n·W) per FISTA iteration; any step where a batch member's working set
+    outgrows W falls back — correctly, in-graph — to the masked solve and
+    is flagged in ``compact_fallback``.
     """
     Xs = np.asarray(Xs)
     ys = np.asarray(ys)
@@ -389,18 +665,37 @@ def fit_path_batched(
             f"sigmas must be (L,) shared or (B, L) per-problem; got "
             f"{sigmas.shape} for B={B}")
 
+    n, p = Xs.shape[1], Xs.shape[2]
+    engine_kw = dict(screening=screening, max_iter=max_iter, tol=solver_tol,
+                     kkt_tol=kkt_tol, max_refits=max_refits)
     t0 = time.perf_counter()
-    res = batched_path_engine(
-        jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
-        jnp.asarray(sigmas), family, screening=screening, max_iter=max_iter,
-        tol=solver_tol, kkt_tol=kkt_tol, max_refits=max_refits,
-    )
+    W = None
+    stats = None
+    if working_set is None:
+        res = batched_path_engine(
+            jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
+            jnp.asarray(sigmas), family, **engine_kw)
+    else:
+        ws_key = (n, p, family.n_classes, family.name, screening)
+        W = _ws_bucket(working_set, n, p, ws_key)
+        res, stats = compact_path_engine(
+            jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
+            jnp.asarray(sigmas), family, width=W, **engine_kw)
     betas = np.asarray(res.betas)  # (B, L, p, m)
     wall = time.perf_counter() - t0
     if family.n_classes == 1:
         betas = betas[:, :, :, 0]
     unrepaired = np.asarray(res.kkt_unrepaired)
     _warn_unrepaired(unrepaired, max_refits)
+    ws_size = fallback = None
+    if stats is not None:
+        ws_size = np.asarray(stats.ws_size)
+        fallback = np.asarray(stats.fell_back)
+        # grow the bucket for the next same-shape "auto" call; explicit-int
+        # runs (e.g. a deliberately undersized overflow probe) must not
+        # seed "auto" with a bucket below its documented default
+        if working_set == "auto" and fallback.any() and W < p:
+            _WS_BUCKETS[ws_key] = min(_next_pow2(int(ws_size.max())), p)
     return BatchedPathResult(
         betas=betas,
         sigmas=sigmas,
@@ -413,7 +708,10 @@ def fit_path_batched(
         deviance=np.asarray(res.deviance),
         kkt_unrepaired=unrepaired,
         total_time=wall,
-        n_samples=Xs.shape[1],
+        n_samples=n,
+        working_set=W,
+        ws_size=ws_size,
+        compact_fallback=fallback,
     )
 
 
@@ -454,6 +752,7 @@ def cv_path(
     max_iter: int = 5000,
     kkt_tol: float = 1e-4,
     max_refits: int = 32,
+    working_set: int | str | None = None,
 ) -> CvPathResult:
     """K-fold CV: all fold paths fit as ONE batched device program.
 
@@ -461,6 +760,8 @@ def cv_path(
     training) so every training design has the same shape and the folds
     batch into a single compilation.  The σ grid is computed once from the
     full data and shared, so every fold is evaluated at the same penalty.
+    ``working_set`` selects the compact engine exactly as in
+    :func:`fit_path_batched` — the natural fit for CV's p ≫ n folds.
     """
     t0 = time.perf_counter()
     X = np.asarray(X)
@@ -486,6 +787,7 @@ def cv_path(
         np.stack(Xs), np.stack(ys_tr), lam, family, screening=screening,
         sigmas=sigmas, solver_tol=solver_tol,  # 1-D grid: shared across folds
         max_iter=max_iter, kkt_tol=kkt_tol, max_refits=max_refits,
+        working_set=working_set,
     )
 
     # one batched evaluation of all K × L held-out deviances (the fold and

@@ -38,6 +38,18 @@ class Family:
         """∇f(β) = Xᵀ r(Xβ, y); shape = beta.shape."""
         return X.T @ self.residual(X @ beta, y)
 
+    def loss_and_gradient(self, X, y, beta):
+        """(f(β), ∇f(β)) sharing ONE linear predictor z = Xβ.
+
+        Separate ``loss``/``gradient`` calls each build their own Xβ and
+        only merge if XLA's CSE happens to fire; this fuses the pair by
+        construction, so a FISTA step streams X for z once plus once for
+        the Xᵀr matvec.  The Pallas analogue is
+        :func:`repro.kernels.slope_loss_residual`.
+        """
+        z = X @ beta
+        return self.value(z, y), X.T @ self.residual(z, y)
+
     def lipschitz(self, X) -> jax.Array:
         """Upper bound on the gradient Lipschitz constant: c·‖X‖₂²."""
         s = _spectral_norm(X)

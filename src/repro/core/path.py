@@ -324,7 +324,8 @@ def _fit_path_host(
                 beta[E_idx] = beta_sub[:width]
 
             grad_full = np.asarray(
-                family.gradient(jnp.asarray(X), jnp.asarray(y), jnp.asarray(beta if m > 1 else beta[:, 0]))
+                family.gradient(jnp.asarray(X), jnp.asarray(y),
+                                jnp.asarray(_b(beta)))
             ).reshape(p, m)
 
             if screening == "none":
@@ -354,7 +355,8 @@ def _fit_path_host(
             refits += 1
 
         active = np.abs(beta).max(axis=1) > 0
-        dev = float(family.loss(jnp.asarray(X), jnp.asarray(y), jnp.asarray(beta if m > 1 else beta[:, 0])))
+        dev = float(family.loss(jnp.asarray(X), jnp.asarray(y),
+                                jnp.asarray(_b(beta))))
         total_viol += viol_count
         betas.append(beta.copy())
         steps.append(

@@ -9,7 +9,6 @@ scheme) is a strict improvement over plain FISTA and is on by default.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -20,7 +19,7 @@ from jax import lax
 from .losses import Family
 from .sorted_l1 import prox_sorted_l1_with_norm, sorted_l1_norm
 
-__all__ = ["fista", "fista_masked", "default_L0", "FistaResult"]
+__all__ = ["fista", "fista_masked", "fista_compact", "default_L0", "FistaResult"]
 
 
 def default_L0(X: jax.Array, family: Family) -> jax.Array:
@@ -78,6 +77,10 @@ def fista(
     ``L0`` overrides the initial curvature guess — the device path engine
     passes the previous path step's learned L so warm solves skip the
     backtracking ramp-up.
+
+    Convergence requires BOTH an objective plateau (|Δobj| ≤ tol·max(1,|obj|))
+    and a prox-gradient fixed-point residual ≤ √tol — coefficient-scale
+    accuracy tracks √tol, so tol=1e-14 certifies β to ≈1e-7.
     """
     dtype = X.dtype
     lam = lam.astype(dtype)
@@ -90,8 +93,9 @@ def fista(
 
     def step(state: _State) -> _State:
         z = state.z
-        fz = family.loss(X, y, z)
-        gz = family.gradient(X, y, z)
+        # fused forward pair: one linear predictor feeds both the loss and
+        # the residual for the gradient matvec (X streamed once for z)
+        fz, gz = family.loss_and_gradient(X, y, z)
 
         def bt_cond(carry):
             L, x_new, fx, J, ok, tries = carry
@@ -128,7 +132,15 @@ def fista(
             z_new = jnp.where(bad, x_new, z_new)
 
         obj_new = fx + J_new
-        done = jnp.abs(state.obj - obj_new) <= tol * jnp.maximum(1.0, jnp.abs(obj_new))
+        # two-part stop: the objective Cauchy test alone can fire while
+        # weakly-determined coefficients still drift (flat directions change
+        # the objective at O(step²)), so also require the prox-gradient
+        # fixed-point residual ‖x⁺ − z‖∞ ≲ √tol — that bounds coefficient
+        # error at the same scale the objective test bounds the value
+        plateau = jnp.abs(state.obj - obj_new) <= tol * jnp.maximum(1.0, jnp.abs(obj_new))
+        resid = jnp.max(jnp.abs(x_new - z))
+        stationary = resid <= jnp.sqrt(tol) * jnp.maximum(1.0, jnp.max(jnp.abs(x_new)))
+        done = plateau & stationary
         # mild decrease of L lets the step size recover after conservative phases
         return _State(x_new, z_new, t_new, L * 0.95, obj_new, state.it + 1, done)
 
@@ -168,10 +180,62 @@ def fista_masked(
 
     ``mask`` is a (p,) predictor mask; for multinomial families it applies
     to every class column of the (p, m) coefficient block.
+
+    Masked coordinates of the result are *exactly* 0 with no exit re-mask:
+    their columns of ``Xm`` are zero so their gradient vanishes, momentum
+    combines zeros into zeros, and the sorted-ℓ1 prox preserves exact zeros
+    (a pooled block containing a zero-magnitude coordinate has mean ≤ 0 and
+    clips to 0).  The invariant is asserted in ``tests/test_solver_path.py``.
     """
     mask_col = mask.astype(X.dtype)
     Xm = X * mask_col[None, :]
     beta0 = beta0 * (mask_col if beta0.ndim == 1 else mask_col[:, None])
-    res = fista(Xm, y, lam, beta0, family, **kw)
-    beta = res.beta * (mask_col if res.beta.ndim == 1 else mask_col[:, None])
+    return fista(Xm, y, lam, beta0, family, **kw)
+
+
+def fista_compact(
+    X: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    beta0: jax.Array,
+    mask: jax.Array,
+    family: Family,
+    *,
+    width: int,
+    **kw,
+) -> FistaResult:
+    """FISTA on the working set *compacted* to a static ``width`` bucket.
+
+    Where :func:`fista_masked` zeroes masked columns and still pays O(n·p)
+    per iteration, this gathers the ≤ ``width`` unmasked columns into a
+    device-resident (n, width) matrix — no host round-trip, no ``X * mask``
+    materialization — solves at width W, and scatters the coefficients back
+    to p-space.  Every FISTA iteration then costs O(n·W).
+
+    Correctness leans on the same rank alignment as the host driver's
+    gathered sub-problem: unmasked coefficients occupy the leading λ slots
+    (λ[:W·m]) because masked coordinates are exactly 0 and sort to the λ
+    tail.  Padding columns beyond ``mask.sum()`` are zeroed so they stay
+    inert.  **The caller must guarantee** ``mask.sum() <= width`` (the path
+    engine guards this with an overflow `lax.cond` falling back to
+    :func:`fista_masked`) and that ``support(beta0) ⊆ mask``.
+
+    ``width`` must be static (a Python int) — the path engine buckets it to
+    powers of two so a whole path reuses a handful of compilations.
+    """
+    n, p = X.shape
+    m = 1 if beta0.ndim == 1 else beta0.shape[1]
+    dtype = X.dtype
+    mask = mask.astype(bool)
+    # stable sort: unmasked columns first, ascending index (matches the
+    # host driver's np.nonzero gather order)
+    idx = jnp.argsort(~mask)[:width]
+    valid = (jnp.arange(width) < mask.sum()).astype(dtype)
+    Xc = jnp.take(X, idx, axis=1) * valid[None, :]
+    b0 = jnp.take(beta0, idx, axis=0)
+    b0 = b0 * (valid if b0.ndim == 1 else valid[:, None])
+    lam_c = lax.slice_in_dim(lam, 0, width * m)
+    res = fista(Xc, y, lam_c, b0, family, **kw)
+    bc = res.beta * (valid if res.beta.ndim == 1 else valid[:, None])
+    beta = jnp.zeros(beta0.shape, dtype).at[idx].set(bc)
     return FistaResult(beta, res.iters, res.objective, res.converged, res.L)

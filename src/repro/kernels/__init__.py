@@ -3,7 +3,10 @@ interpret mode on CPU; see ops.py for dispatch and ref.py for oracles)."""
 
 from .ops import (
     slope_gradient,
+    slope_gradient_masked,
     slope_residual,
+    slope_residual_masked,
+    slope_loss_residual,
     screen_scan,
     prox_pool,
     prox_sorted_l1_kernel,
@@ -11,7 +14,10 @@ from .ops import (
 
 __all__ = [
     "slope_gradient",
+    "slope_gradient_masked",
     "slope_residual",
+    "slope_residual_masked",
+    "slope_loss_residual",
     "screen_scan",
     "prox_pool",
     "prox_sorted_l1_kernel",

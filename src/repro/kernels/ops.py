@@ -17,11 +17,22 @@ import jax.numpy as jnp
 from . import ref as _ref
 from .prox_sorted_l1 import VMEM_ELEM_LIMIT, prox_pool_kernel_call
 from .screen_scan import DEFAULT_BLOCK, screen_scan_kernel_call
-from .slope_gemv import DEFAULT_BN, DEFAULT_BP, xb_residual, xt_matmul
+from .slope_gemv import (
+    DEFAULT_BN,
+    DEFAULT_BP,
+    xb_loss_residual,
+    xb_residual,
+    xb_residual_masked,
+    xt_matmul,
+    xt_matmul_masked,
+)
 
 __all__ = [
     "slope_gradient",
+    "slope_gradient_masked",
     "slope_residual",
+    "slope_residual_masked",
+    "slope_loss_residual",
     "screen_scan",
     "prox_pool",
     "prox_sorted_l1_kernel",
@@ -61,6 +72,31 @@ def slope_gradient(X, R, *, bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
     return out[:, 0] if squeeze else out
 
 
+@functools.partial(jax.jit, static_argnames=("bn", "bp", "use_kernel"))
+def slope_gradient_masked(X, R, mask, *, bn: int = DEFAULT_BN,
+                          bp: int = DEFAULT_BP, use_kernel: bool = True):
+    """∇f = (X ⊙ mask)ᵀ R with fully-masked column blocks skipped.
+
+    ``mask`` is a (p,) column mask (bool or 0/1); masked columns' gradient
+    rows are exactly 0.  Zero-padded mask columns keep the padding blocks
+    dead, so padding adds no compute.
+    """
+    squeeze = R.ndim == 1
+    R2 = R[:, None] if squeeze else R
+    if not use_kernel:
+        out = _ref.xt_matmul_masked_ref(X, R2, mask)
+        return out[:, 0] if squeeze else out
+    n, p = X.shape
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Rp = _pad_to(_pad_to(R2, bn_, 0), 128, 1)
+    Mp = _pad_to(mask.astype(X.dtype)[None, :], bp_, 1)
+    out = xt_matmul_masked(Xp, Rp, Mp, bn=bn_, bp=bp_, interpret=_interpret())
+    out = out[:p, : R2.shape[1]]
+    return out[:, 0] if squeeze else out
+
+
 @functools.partial(jax.jit, static_argnames=("family", "bn", "bp", "use_kernel"))
 def slope_residual(X, B, Y, *, family: str = "none", bn: int = DEFAULT_BN,
                    bp: int = DEFAULT_BP, use_kernel: bool = True):
@@ -83,6 +119,65 @@ def slope_residual(X, B, Y, *, family: str = "none", bn: int = DEFAULT_BN,
     )
     out = out[:n, :m]
     return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("family", "bn", "bp", "use_kernel"))
+def slope_residual_masked(X, B, Y, mask, *, family: str = "none",
+                          bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
+                          use_kernel: bool = True):
+    """r = ∂ℓ/∂z at z = (X ⊙ mask)·B, skipping fully-masked column blocks."""
+    squeeze = B.ndim == 1
+    B2 = B[:, None] if squeeze else B
+    Y2 = Y[:, None] if Y.ndim == 1 else Y
+    if not use_kernel:
+        out = _ref.xb_residual_masked_ref(X, B2, Y2, mask, family)
+        return out[:, 0] if squeeze else out
+    n, p = X.shape
+    m = B2.shape[1]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Bp = _pad_to(_pad_to(B2, bp_, 0), 128, 1)
+    Yp = _pad_to(_pad_to(Y2, bn_, 0), 128, 1)
+    Mp = _pad_to(mask.astype(X.dtype)[None, :], bp_, 1)
+    out = xb_residual_masked(
+        Xp, Bp, Yp, Mp, family=family, m_actual=m, bn=bn_, bp=bp_,
+        interpret=_interpret(),
+    )
+    out = out[:n, :m]
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("family", "bn", "bp", "use_kernel"))
+def slope_loss_residual(X, B, Y, *, family: str = "none", bn: int = DEFAULT_BN,
+                        bp: int = DEFAULT_BP, use_kernel: bool = True):
+    """(ℓ(z, y), r = ∂ℓ/∂z) at z = X·B in ONE pass over X.
+
+    The fused forward pair a FISTA step needs — the loss is the scalar sum
+    over rows, the residual feeds the gradient matvec.
+    """
+    squeeze = B.ndim == 1
+    B2 = B[:, None] if squeeze else B
+    Y2 = Y[:, None] if Y.ndim == 1 else Y
+    if not use_kernel:
+        r, rows = _ref.xb_loss_residual_ref(X, B2, Y2, family)
+        return jnp.sum(rows), (r[:, 0] if squeeze else r)
+    n, p = X.shape
+    m = B2.shape[1]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Bp = _pad_to(_pad_to(B2, bp_, 0), 128, 1)
+    Yp = _pad_to(_pad_to(Y2, bn_, 0), 128, 1)
+    r, rows = xb_loss_residual(
+        Xp, Bp, Yp, family=family, m_actual=m, bn=bn_, bp=bp_,
+        interpret=_interpret(),
+    )
+    # padded rows see z = 0, y = 0 — nonzero loss for e.g. logistic — so the
+    # reduction must slice the real rows first
+    loss = jnp.sum(rows[:n, 0])
+    r = r[:n, :m]
+    return loss, (r[:, 0] if squeeze else r)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "use_kernel"))

@@ -10,7 +10,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["xt_matmul_ref", "xb_residual_ref", "screen_scan_ref", "prox_pool_ref"]
+__all__ = [
+    "xt_matmul_ref",
+    "xt_matmul_masked_ref",
+    "xb_residual_ref",
+    "xb_residual_masked_ref",
+    "xb_loss_residual_ref",
+    "screen_scan_ref",
+    "prox_pool_ref",
+]
 
 
 def xt_matmul_ref(X: jax.Array, R: jax.Array) -> jax.Array:
@@ -18,6 +26,11 @@ def xt_matmul_ref(X: jax.Array, R: jax.Array) -> jax.Array:
     return jnp.einsum(
         "np,nm->pm", X, R, preferred_element_type=jnp.promote_types(X.dtype, jnp.float32)
     ).astype(X.dtype)
+
+
+def xt_matmul_masked_ref(X: jax.Array, R: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked gradient matvec: (X ⊙ mask)ᵀ R; ``mask`` is a (p,) column mask."""
+    return xt_matmul_ref(X * mask.astype(X.dtype)[None, :], R)
 
 
 def _epilogue(z: jax.Array, y: jax.Array, family: str) -> jax.Array:
@@ -45,6 +58,35 @@ def xb_residual_ref(X: jax.Array, B: jax.Array, y: jax.Array, family: str = "non
         "np,pm->nm", X, B, preferred_element_type=jnp.promote_types(X.dtype, jnp.float32)
     ).astype(X.dtype)
     return _epilogue(z, y, family).astype(X.dtype)
+
+
+def xb_residual_masked_ref(X: jax.Array, B: jax.Array, y: jax.Array,
+                           mask: jax.Array, family: str = "none") -> jax.Array:
+    """Masked residual: r at z = (X ⊙ mask)·B; ``mask`` is a (p,) column mask."""
+    return xb_residual_ref(X * mask.astype(X.dtype)[None, :], B, y, family)
+
+
+def _row_loss(z: jax.Array, y: jax.Array, family: str) -> jax.Array:
+    if family == "none":
+        return jnp.zeros(z.shape[:-1], z.dtype)
+    if family == "ols":
+        return jnp.sum(0.5 * jnp.square(z - y), axis=-1)
+    if family == "logistic":
+        return jnp.sum(jnp.logaddexp(0.0, z) - y * z, axis=-1)
+    if family == "poisson":
+        return jnp.sum(jnp.exp(z) - y * z, axis=-1)
+    if family == "multinomial":
+        return jax.nn.logsumexp(z, axis=-1) - jnp.sum(y * z, axis=-1)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def xb_loss_residual_ref(X: jax.Array, B: jax.Array, y: jax.Array,
+                         family: str = "none") -> tuple[jax.Array, jax.Array]:
+    """Fused forward pair: (r = ∂ℓ/∂z, per-row loss ℓ(z_i, y_i)) at z = X·B."""
+    z = jnp.einsum(
+        "np,pm->nm", X, B, preferred_element_type=jnp.promote_types(X.dtype, jnp.float32)
+    ).astype(X.dtype)
+    return _epilogue(z, y, family).astype(X.dtype), _row_loss(z, y, family)
 
 
 def screen_scan_ref(c: jax.Array, lam: jax.Array) -> jax.Array:

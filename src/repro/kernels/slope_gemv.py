@@ -10,6 +10,18 @@ y) alongside.
 Layouts (m = #classes; 1 for scalar GLMs, padded to the lane width by ops.py):
   xt_matmul:    X (n, p), R (n, m)      → G (p, m)     grid (p/bp, n/bn)
   xb_residual:  X (n, p), B (p, m), Y (n, m) → r (n, m) grid (n/bn, p/bp)
+
+Mask-aware variants (``*_masked``) take a (1, p) column mask alongside X and
+skip the MXU work of any (bn × bp) block whose bp-wide mask slice is all
+zero — the per-block summary is reduced from the mask tile in VMEM, so a
+screened working set of W columns costs ⌈W/bp⌉ column blocks of compute
+instead of p/bp.  (The block DMA still streams; true bandwidth compaction
+is the solver-level column gather in ``repro.core.solver.fista_compact`` —
+these kernels cover the masked full-width fallback path.)
+
+``xb_loss_residual`` fuses the loss reduction into the residual epilogue so
+one pass over X yields both ℓ(z, y) and r = ∂ℓ/∂z — the pair every FISTA
+step needs — instead of two separate streams of X.
 """
 
 from __future__ import annotations
@@ -21,7 +33,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["xt_matmul", "xb_residual", "DEFAULT_BN", "DEFAULT_BP"]
+__all__ = [
+    "xt_matmul",
+    "xt_matmul_masked",
+    "xb_residual",
+    "xb_residual_masked",
+    "xb_loss_residual",
+    "DEFAULT_BN",
+    "DEFAULT_BP",
+]
 
 DEFAULT_BN = 256
 DEFAULT_BP = 512
@@ -71,6 +91,65 @@ def xt_matmul(
         scratch_shapes=[pltpu.VMEM((bp, m), jnp.float32)],
         interpret=interpret,
     )(X, R)
+
+
+def _xt_matmul_masked_kernel(x_ref, r_ref, mask_ref, o_ref, acc_ref):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mb = mask_ref[...]  # (1, bp) — this column block's mask slice
+    # per-block summary: a fully-masked (bn × bp) block contributes nothing,
+    # so its MXU pass is skipped outright (the strong rule typically leaves
+    # W ≪ p columns alive → ⌈W/bp⌉ blocks of compute instead of p/bp)
+    @pl.when(jnp.any(mb > 0))
+    def _acc():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...] * mb,  # zero masked columns inside kept blocks
+            r_ref[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(nb == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def xt_matmul_masked(
+    X: jax.Array,
+    R: jax.Array,
+    mask: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """G = (X ⊙ mask)ᵀ R with fully-masked column blocks skipped.
+
+    ``mask`` is a (1, p) column mask in X's dtype (0/1); masked columns'
+    gradient rows come back exactly 0.  Caller pads to blocks.
+    """
+    n, p = X.shape
+    m = R.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    assert mask.shape == (1, p), mask.shape
+    grid = (p // bp, n // bn)
+    return pl.pallas_call(
+        _xt_matmul_masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda pb, nb: (nb, pb)),
+            pl.BlockSpec((bn, m), lambda pb, nb: (nb, 0)),
+            pl.BlockSpec((1, bp), lambda pb, nb: (0, pb)),
+        ],
+        out_specs=pl.BlockSpec((bp, m), lambda pb, nb: (pb, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, m), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, m), jnp.float32)],
+        interpret=interpret,
+    )(X, R, mask)
 
 
 def _epilogue(z, y, family: str, m_actual: int):
@@ -136,6 +215,162 @@ def xb_residual(
         ],
         out_specs=pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
         out_shape=jax.ShapeDtypeStruct((n, m), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
+        interpret=interpret,
+    )(X, B, Y)
+
+
+def _xb_residual_masked_kernel(x_ref, b_ref, y_ref, mask_ref, o_ref, acc_ref,
+                               *, family, m_actual):
+    pb = pl.program_id(1)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mb = mask_ref[...]  # (1, bp)
+
+    @pl.when(jnp.any(mb > 0))
+    def _acc():
+        acc_ref[...] += jnp.dot(x_ref[...] * mb, b_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(pb == pl.num_programs(1) - 1)
+    def _flush():
+        z = acc_ref[...]
+        o_ref[...] = _epilogue(z, y_ref[...].astype(jnp.float32), family,
+                               m_actual).astype(o_ref.dtype)
+
+
+def xb_residual_masked(
+    X: jax.Array,
+    B: jax.Array,
+    Y: jax.Array,
+    mask: jax.Array,
+    *,
+    family: str = "none",
+    m_actual: int | None = None,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """r = ∂ℓ/∂z at z = (X ⊙ mask)·B, skipping fully-masked column blocks.
+
+    The masked-FISTA invariant (coefficients of masked columns are exactly
+    0) makes the mask multiply redundant for solver calls, but the kernel
+    applies it anyway so the contract holds for arbitrary ``B``.
+    """
+    n, p = X.shape
+    m = B.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    assert mask.shape == (1, p), mask.shape
+    m_actual = m if m_actual is None else m_actual
+    grid = (n // bn, p // bp)
+    kernel = functools.partial(_xb_residual_masked_kernel, family=family,
+                               m_actual=m_actual)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda nb, pb: (nb, pb)),
+            pl.BlockSpec((bp, m), lambda nb, pb: (pb, 0)),
+            pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
+            pl.BlockSpec((1, bp), lambda nb, pb: (0, pb)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
+        interpret=interpret,
+    )(X, B, Y, mask)
+
+
+def _row_loss(z, y, family: str, m_actual: int):
+    """Per-row loss ℓ(z_i, y_i) from the same z the epilogue consumes.
+
+    Padded class lanes (≥ m_actual) are masked out so ops.py's 128-lane
+    padding contributes exactly 0 to the loss.
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, z.shape, dimension=z.ndim - 1)
+    lm = lane < m_actual
+    if family == "none":
+        return jnp.zeros(z.shape[:-1], z.dtype)
+    if family == "ols":
+        per = 0.5 * jnp.square(z - y)
+    elif family == "logistic":
+        per = jnp.logaddexp(0.0, z) - y * z
+    elif family == "poisson":
+        per = jnp.exp(z) - y * z
+    elif family == "multinomial":
+        zm = jnp.where(lm, z, -jnp.inf)
+        lse = jax.nn.logsumexp(zm, axis=-1)
+        return lse - jnp.sum(jnp.where(lm, y * z, 0.0), axis=-1)
+    else:
+        raise ValueError(f"unknown family {family!r}")
+    return jnp.sum(jnp.where(lm, per, 0.0), axis=-1)
+
+
+def _xb_loss_residual_kernel(x_ref, b_ref, y_ref, r_ref, loss_ref, acc_ref,
+                             *, family, m_actual):
+    pb = pl.program_id(1)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pb == pl.num_programs(1) - 1)
+    def _flush():
+        z = acc_ref[...]
+        y = y_ref[...].astype(jnp.float32)
+        r_ref[...] = _epilogue(z, y, family, m_actual).astype(r_ref.dtype)
+        rl = _row_loss(z, y, family, m_actual)  # (bn,)
+        loss_ref[...] = jnp.broadcast_to(rl[:, None],
+                                         loss_ref.shape).astype(loss_ref.dtype)
+
+
+def xb_loss_residual(
+    X: jax.Array,
+    B: jax.Array,
+    Y: jax.Array,
+    *,
+    family: str = "none",
+    m_actual: int | None = None,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One pass over X → (r, per-row loss); the FISTA forward pair fused.
+
+    Returns ``(r (n, m), loss_rows (n, m))`` — each row of ``loss_rows``
+    carries ℓ(z_i, y_i) broadcast across lanes; callers sum lane 0 over the
+    un-padded rows.  Reads X once where loss + gradient previously streamed
+    it twice.
+    """
+    n, p = X.shape
+    m = B.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    m_actual = m if m_actual is None else m_actual
+    grid = (n // bn, p // bp)
+    kernel = functools.partial(_xb_loss_residual_kernel, family=family,
+                               m_actual=m_actual)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda nb, pb: (nb, pb)),
+            pl.BlockSpec((bp, m), lambda nb, pb: (pb, 0)),
+            pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
+            pl.BlockSpec((bn, m), lambda nb, pb: (nb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), X.dtype),
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
         interpret=interpret,
     )(X, B, Y)

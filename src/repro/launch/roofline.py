@@ -20,7 +20,6 @@ from __future__ import annotations
 import json
 import pathlib
 import re
-from typing import Iterable
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -68,7 +67,6 @@ def collective_census(hlo_text: str) -> dict:
         sizes[name] = _shape_bytes(rtype)
         kind = op.removesuffix("-start").removesuffix("-done")
         if kind in _COLLECTIVES and not op.endswith("-done"):
-            lpar = line.find("(", m.end() - 1)
             args = line[m.end() - 1:]
             ops.append((kind, rtype, args, name))
 

@@ -16,7 +16,6 @@ unsharded, divisible dim over the batch axes.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["axis_rules", "param_sharding", "opt_sharding", "batch_sharding",
@@ -199,8 +198,6 @@ def batch_sharding(batch_shapes, mesh: Mesh, profile: str = "tp"):
         baxes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
     else:
         baxes = batch_axes(mesh)
-    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
-
     def one(leaf):
         spec = [None] * len(leaf.shape)
         # largest axis prefix that divides the batch dim

@@ -49,8 +49,10 @@ def init_attention(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
             "w_dkv": init_dense(ks[1], d, lo, dt),
             "w_krope": init_dense(ks[2], d, rope, dt),
             "kv_norm": jnp.ones((lo,), dt),
-            "w_uk": (jax.random.normal(ks[3], (lo, H, nope), jnp.float32) / jnp.sqrt(lo)).astype(dt),
-            "w_uv": (jax.random.normal(ks[4], (lo, H, vd), jnp.float32) / jnp.sqrt(lo)).astype(dt),
+            "w_uk": (jax.random.normal(ks[3], (lo, H, nope), jnp.float32)
+                     / jnp.sqrt(lo)).astype(dt),
+            "w_uv": (jax.random.normal(ks[4], (lo, H, vd), jnp.float32)
+                     / jnp.sqrt(lo)).astype(dt),
             "wo": init_dense(ks[5], H * vd, d, dt),
         }
     return {
@@ -148,7 +150,9 @@ def _sdpa(q, k, v, mask) -> jax.Array:
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
     scores = scores * scale + mask
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", probs, v, preferred_element_type=jnp.float32).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
 
 
 def _sdpa_flash(q, k, v, mask) -> jax.Array:
@@ -165,7 +169,7 @@ def _sdpa_flash(q, k, v, mask) -> jax.Array:
     mc = jnp.moveaxis(mask.reshape(Sm, nc, C), 1, 0)      # (nc,Sm,C)
 
     def step(carry, xs):
-        m, l, acc = carry
+        m, den, acc = carry
         k_c, v_c, mk = xs
         s = jnp.einsum("bqhd,bkhd->bhqk", q, k_c,
                        preferred_element_type=jnp.float32) * scale
@@ -173,17 +177,17 @@ def _sdpa_flash(q, k, v, mask) -> jax.Array:
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         w = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(w, axis=-1)
+        den = den * corr + jnp.sum(w, axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bhqk,bkhd->bhqd", w.astype(q.dtype), v_c,
             preferred_element_type=jnp.float32)
-        return (m_new, l, acc), None
+        return (m_new, den, acc), None
 
     m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
-    l0 = jnp.zeros((B, H, S), jnp.float32)
+    den0 = jnp.zeros((B, H, S), jnp.float32)
     a0 = jnp.zeros((B, H, S, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, mc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, den, acc), _ = jax.lax.scan(step, (m0, den0, a0), (kc, vc, mc))
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
     return jnp.moveaxis(out, 1, 2).astype(q.dtype)
 
 
@@ -330,7 +334,8 @@ def _mla_decode(x, p, cfg: ArchConfig, cache: dict, pos) -> tuple[jax.Array, dic
                        preferred_element_type=jnp.float32).astype(x.dtype)
     scores = (
         jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv.astype(x.dtype), preferred_element_type=jnp.float32)
-        + jnp.einsum("bqhr,bsr->bhqs", q_rope, krope.astype(x.dtype), preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, krope.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
     ) / jnp.sqrt(jnp.float32(nope + rope))
     valid = jnp.arange(ckv.shape[1]) <= pos
     scores = scores + jnp.where(valid, 0.0, _NEG)[None, None, None, :]

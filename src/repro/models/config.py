@@ -157,7 +157,8 @@ class ArchConfig:
     def _attn_params(self) -> int:
         d = self.d_model
         if self.attention == "mla":
-            lo, nope, rope, vd = self.mla_kv_lora, self.mla_qk_nope, self.mla_qk_rope, self.mla_v_dim
+            lo, nope, rope = self.mla_kv_lora, self.mla_qk_nope, self.mla_qk_rope
+            vd = self.mla_v_dim
             H = self.n_heads
             return (d * H * (nope + rope)          # Wq
                     + d * (lo + rope)              # W_dkv + W_k_rope

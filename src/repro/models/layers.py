@@ -12,8 +12,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .config import ArchConfig
-
 __all__ = [
     "shard", "set_axis_rules", "get_axis_rules",
     "rms_norm", "dense", "mlp", "init_mlp", "init_rms",

@@ -11,7 +11,6 @@ leading scan axis so the HLO is O(pattern), not O(depth) — essential for
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -29,7 +28,6 @@ from .attention import (
 from .config import ArchConfig
 from .layers import (
     dense,
-    init_dense,
     init_mlp,
     init_rms,
     mlp,
@@ -113,7 +111,8 @@ def _init_layer(key, cfg: ArchConfig, s: LayerSpec, cross: bool) -> dict:
         if s.mlp == "moe":
             p["moe"] = init_moe(ks[2], cfg)
         elif s.mlp == "dense_first":
-            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.moe.d_ff_first_dense, cfg.pdtype, cfg.mlp_act)
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.moe.d_ff_first_dense,
+                                cfg.pdtype, cfg.mlp_act)
         else:
             p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.pdtype, cfg.mlp_act)
     return p

@@ -18,13 +18,11 @@ returned for training.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from .config import ArchConfig, MoECfg
-from .layers import dense, init_dense, init_mlp, mlp, shard
+from .layers import init_dense, init_mlp, mlp
 
 __all__ = ["init_moe", "moe_layer"]
 
@@ -49,7 +47,8 @@ def init_moe(key, cfg: ArchConfig) -> dict:
         "experts": jax.vmap(one_expert)(ekeys),  # stacked (E, ...) leaves
     }
     if m.n_shared:
-        p["shared"] = init_mlp(ks[2], d, m.d_ff_shared or m.d_ff_expert * m.n_shared, dt, cfg.mlp_act)
+        p["shared"] = init_mlp(ks[2], d, m.d_ff_shared or m.d_ff_expert * m.n_shared,
+                               dt, cfg.mlp_act)
     return p
 
 

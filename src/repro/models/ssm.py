@@ -40,7 +40,8 @@ def init_ssm(key, cfg: ArchConfig) -> dict:
         "w_bc": init_dense(ks[2], d, 2 * gn, dt_p),
         "w_dt": init_dense(ks[3], d, H, dt_p),
         "conv_x": (jax.random.normal(ks[4], (di, s.conv_width), jnp.float32) * 0.1).astype(dt_p),
-        "conv_bc": (jax.random.normal(ks[6], (2 * gn, s.conv_width), jnp.float32) * 0.1).astype(dt_p),
+        "conv_bc": (jax.random.normal(ks[6], (2 * gn, s.conv_width), jnp.float32)
+                    * 0.1).astype(dt_p),
         "dt_bias": jnp.log(jnp.expm1(u)),  # softplus^-1(u), f32
         "A_log": jnp.log(jax.random.uniform(ks[7], (H,), jnp.float32, 1.0, 16.0)),
         "D": jnp.ones((H,), jnp.float32),
@@ -65,18 +66,18 @@ def _ssd_chunked(x, dt, A, Bm, Cm, s: SSMCfg, init_state=None):
     x (b,l,H,P) f32, dt (b,l,H) f32 (already softplus'ed), A (H,) f32 (<0),
     Bm/Cm (b,l,G,N) f32.  Returns (y (b,l,H,P), final_state (b,H,P,N)).
     """
-    b, l, H, P = x.shape
+    b, slen, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
-    Q = min(s.chunk, l)
-    l_orig = l
-    if l % Q:  # pad the tail chunk; dt=0 ⇒ decay 1, no state contribution
-        pad = Q - l % Q
+    Q = min(s.chunk, slen)
+    l_orig = slen
+    if slen % Q:  # pad the tail chunk; dt=0 ⇒ decay 1, no state contribution
+        pad = Q - slen % Q
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        l = l + pad
-    nc = l // Q
+        slen = slen + pad
+    nc = slen // Q
     rep = H // G
 
     def c(a, shape):  # reshape to chunks
@@ -94,8 +95,7 @@ def _ssd_chunked(x, dt, A, Bm, Cm, s: SSMCfg, init_state=None):
     # ---- intra-chunk (dual / attention-like) ----
     # M[i,j] = (C_i·B_j) · exp(cum_i − cum_j) · dt_j   for j ≤ i
     G_ij = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh, preferred_element_type=jnp.float32)
-    decay = jnp.exp(cum[:, :, :, None, :].swapaxes(2, 4) - cum[:, :, None, :, :].swapaxes(2, 4).swapaxes(3, 4))
-    # simpler/explicit: decay[b,c,h,i,j] = exp(cum[b,c,i,h] − cum[b,c,j,h])
+    # decay[b,c,h,i,j] = exp(cum[b,c,i,h] − cum[b,c,j,h])
     decay = jnp.exp(
         cum.transpose(0, 1, 3, 2)[:, :, :, :, None] - cum.transpose(0, 1, 3, 2)[:, :, :, None, :]
     )
@@ -129,7 +129,7 @@ def _ssd_chunked(x, dt, A, Bm, Cm, s: SSMCfg, init_state=None):
     y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch, S_prevs,
                          preferred_element_type=jnp.float32) * jnp.exp(cum)[..., None]
 
-    y = (y_intra + y_inter).reshape(b, l, H, P)[:, :l_orig]
+    y = (y_intra + y_inter).reshape(b, slen, H, P)[:, :l_orig]
     return y, S_final
 
 

@@ -28,7 +28,10 @@ class AdamWHyper:
 
 def adamw_init(params, hyper: AdamWHyper = AdamWHyper()):
     dt = jnp.dtype(hyper.state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
 
 

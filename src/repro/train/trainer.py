@@ -19,10 +19,6 @@ import dataclasses
 import signal
 import statistics
 import time
-from typing import Any, Callable
-
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 

@@ -2,7 +2,6 @@
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.data import SyntheticLM, make_regression
@@ -17,7 +16,6 @@ def test_lm_data_deterministic_across_restarts():
 
 
 def test_lm_data_host_sharding_partitions_global_batch():
-    full = SyntheticLM(vocab=50, seq_len=8, global_batch=8, seed=1)
     h0 = SyntheticLM(vocab=50, seq_len=8, global_batch=8, seed=1, n_hosts=2, host_id=0)
     h1 = SyntheticLM(vocab=50, seq_len=8, global_batch=8, seed=1, n_hosts=2, host_id=1)
     assert h0.batch(5)["tokens"].shape == (4, 8)

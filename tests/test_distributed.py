@@ -2,17 +2,12 @@
 host-device count never leaks into the main test process (smoke tests must
 see 1 device)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
-
-import jax
-import jax.numpy as jnp
 
 # subprocess-per-case with forced 8-device hosts: scheduled tier only
 pytestmark = pytest.mark.slow

@@ -83,6 +83,123 @@ def test_device_engine_early_stop_truncates_like_host():
     assert len(r.sigmas) < 100  # saturation rules applied post-hoc
 
 
+def test_multinomial_engine_agrees_with_host():
+    """Engine-vs-host on the multinomial family: the (p, m) mask-broadcast
+    logic in fista_masked/_engine (every class column of a screened
+    predictor shares the mask row) must reproduce the host driver's
+    gathered sub-problems, violations included."""
+    B, n, p, m = 2, 30, 36, 3
+    probs = [make_multinomial(n, p, k=4, m=m, rho=0.2, seed=s)[:2]
+             for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    fam = get_family("multinomial", m)
+    lam = np.asarray(bh_sequence(p * m, q=0.1))
+    kw = dict(path_length=8, solver_tol=1e-11, max_iter=20000, kkt_tol=1e-4)
+    batched = fit_path_batched(Xs, ys, lam, fam, screening="strong", **kw)
+    assert not batched.kkt_unrepaired.any()
+    for b in range(B):
+        single = fit_path(Xs[b], ys[b], lam, fam, screening="strong",
+                          engine="host", early_stop=False, **kw)
+        assert single.betas.shape == (8, p, m)
+        np.testing.assert_allclose(batched.betas[b], single.betas, atol=5e-3)
+        assert int(batched.total_violations[b]) == single.total_violations
+        np.testing.assert_allclose(
+            batched.n_screened[b], [s.n_screened for s in single.steps], atol=2)
+        np.testing.assert_allclose(
+            batched.n_active[b], [s.n_active for s in single.steps], atol=2)
+
+
+# ---------------------------------------------------------------------------
+# compact working-set engine (ISSUE 2 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_compact_engine_matches_masked():
+    """With W above the peak working set the compact engine must follow the
+    masked engine step for step — same betas, same violation accounting —
+    while solving at (n, W) instead of (n, p)."""
+    B, n, p = 3, 40, 96
+    Xs, ys = _batch_problems(B, n, p)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    masked = fit_path_batched(Xs, ys, lam, ols, **KW)
+    compact = fit_path_batched(Xs, ys, lam, ols, working_set=64, **KW)
+    assert compact.working_set == 64
+    assert compact.ws_size is not None and compact.ws_size.max() > 0
+    np.testing.assert_allclose(compact.betas, masked.betas, atol=1e-8)
+    np.testing.assert_array_equal(compact.n_violations, masked.n_violations)
+    np.testing.assert_array_equal(compact.n_screened, masked.n_screened)
+    # every non-fallback step honoured the bucket
+    honored = ~compact.compact_fallback
+    assert (compact.ws_size[honored] <= 64).all()
+
+
+def test_compact_engine_overflow_falls_back():
+    """A bucket below the peak working set must flip the scalar lax.cond to
+    the masked full-width solve — flagged per step, results identical."""
+    B, n, p = 3, 40, 96
+    Xs, ys = _batch_problems(B, n, p)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    masked = fit_path_batched(Xs, ys, lam, ols, **KW)
+    over = fit_path_batched(Xs, ys, lam, ols, working_set=4, **KW)
+    assert over.compact_fallback.any()  # overflow demonstrably happened
+    np.testing.assert_allclose(over.betas, masked.betas, atol=1e-8)
+    np.testing.assert_array_equal(over.n_violations, masked.n_violations)
+    # overflow recorded the true demand so the bucket cache can grow
+    assert over.ws_size.max() > 4
+
+
+def test_compact_engine_multinomial():
+    """Compact gather/scatter through the (p, m) coefficient block."""
+    B, n, p, m = 2, 30, 40, 3
+    probs = [make_multinomial(n, p, k=4, m=m, rho=0.2, seed=s)[:2]
+             for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    fam = get_family("multinomial", m)
+    lam = np.asarray(bh_sequence(p * m, q=0.1))
+    kw = dict(path_length=6, solver_tol=1e-10, max_iter=10000)
+    masked = fit_path_batched(Xs, ys, lam, fam, **kw)
+    compact = fit_path_batched(Xs, ys, lam, fam, working_set=16, **kw)
+    np.testing.assert_allclose(compact.betas, masked.betas, atol=1e-7)
+
+
+def test_compact_auto_bucket_grows_on_overflow():
+    """working_set='auto' starts at min(2^⌈log₂ max(2n, 64)⌉, p); an
+    overflowing auto run writes the grown bucket to the cache and the next
+    same-shape auto call picks it up.  Explicit-int runs never touch the
+    cache (an undersized overflow probe must not shrink auto's default)."""
+    from repro.core.engine import _WS_BUCKETS, _ws_bucket
+
+    B, n, p = 2, 20, 256
+    # dense signal + a σ grid deep enough that screening keeps ≥ p/2 and
+    # the engine widens E to full-p: guaranteed overflow of the 64 bucket
+    probs = [make_regression(n, p, k=20, rho=0.3, seed=s, noise=0.05)[:2]
+             for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    key = (n, p, 1, "ols", "strong")
+    _WS_BUCKETS.pop(key, None)
+    assert _ws_bucket("auto", n, p, key) == 64  # 2^⌈log₂ max(40, 64)⌉
+    kw = dict(path_length=12, solver_tol=1e-9, max_iter=5000)
+    res = fit_path_batched(Xs, ys, lam, ols, working_set="auto", **kw)
+    assert res.working_set == 64
+    assert res.compact_fallback.any()          # the 64 bucket overflowed
+    grown = _WS_BUCKETS[key]                   # ... and the cache grew
+    assert grown > 64
+    assert grown == min(2 ** (int(res.ws_size.max()) - 1).bit_length(), p)
+    # the next same-shape auto call starts from the grown bucket
+    res2 = fit_path_batched(Xs, ys, lam, ols, working_set="auto", **kw)
+    assert res2.working_set == grown
+    np.testing.assert_allclose(res2.betas, res.betas, atol=1e-8)
+    # explicit ints are pow-2 bucketed, capped at p, and never write the cache
+    _WS_BUCKETS.pop(key, None)
+    fit_path_batched(Xs, ys, lam, ols, working_set=4, **kw)
+    assert key not in _WS_BUCKETS
+    assert _ws_bucket(48, n, p, key) == 64
+    assert _ws_bucket(1024, n, p, key) == p
+
+
 def test_batched_multinomial_runs():
     B, n, p, m = 3, 30, 40, 3
     probs = [make_multinomial(n, p, k=4, m=m, rho=0.2, seed=s)[:2]

@@ -17,7 +17,10 @@ from repro.kernels import (
     prox_sorted_l1_kernel,
     screen_scan,
     slope_gradient,
+    slope_gradient_masked,
+    slope_loss_residual,
     slope_residual,
+    slope_residual_masked,
 )
 from repro.kernels import ref as R
 
@@ -47,6 +50,66 @@ def test_xb_residual_kernel(shape, family, rng):
     got = np.asarray(slope_residual(X, B, Y, family=family))
     want = np.asarray(R.xb_residual_ref(X, B, Y, family))
     np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_xt_matmul_masked_kernel(shape, rng):
+    """Mask-aware gradient GEMV: block-skip must not change the result, and
+    masked columns' gradient rows must be exactly 0."""
+    n, p, m = shape
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    Rm = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    # sparse mask leaves whole (bn × bp) blocks dead — the skip path
+    mask = np.zeros(p, bool)
+    mask[rng.choice(p, size=max(1, p // 8), replace=False)] = True
+    got = np.asarray(slope_gradient_masked(X, Rm, jnp.asarray(mask)))
+    want = np.asarray(R.xt_matmul_masked_ref(X, Rm, jnp.asarray(mask)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    assert (got[~mask] == 0.0).all()
+    # all-masked and all-alive extremes
+    dead = np.asarray(slope_gradient_masked(X, Rm, jnp.zeros(p, bool)))
+    assert (dead == 0.0).all()
+    alive = np.asarray(slope_gradient_masked(X, Rm, jnp.ones(p, bool)))
+    np.testing.assert_allclose(alive, np.asarray(slope_gradient(X, Rm)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("family", ["none", "ols", "logistic", "multinomial"])
+def test_xb_residual_masked_kernel(shape, family, rng):
+    n, p, m = shape
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(p, m)) / np.sqrt(p), jnp.float32)
+    Y = jnp.asarray(rng.integers(0, 2, size=(n, m)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, size=p).astype(bool))
+    got = np.asarray(slope_residual_masked(X, B, Y, mask, family=family))
+    want = np.asarray(R.xb_residual_masked_ref(X, B, Y, mask, family))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("family", ["ols", "logistic", "poisson", "multinomial"])
+def test_fused_loss_residual_kernel(shape, family, rng):
+    """One X pass must reproduce the separate loss + residual oracles."""
+    from repro.core import get_family
+
+    n, p, m = shape
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(p, m)) / np.sqrt(p), jnp.float32)
+    Y = jnp.asarray(rng.integers(0, 2, size=(n, m)), jnp.float32)
+    loss, r = slope_loss_residual(X, B, Y, family=family)
+    want_r, want_rows = R.xb_loss_residual_ref(X, B, Y, family)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(want_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(float(loss), float(jnp.sum(want_rows)),
+                               rtol=2e-4, atol=2e-4)
+    if family != "multinomial" and m == 1:
+        # cross-check against the Family value/residual pair the solver uses
+        fam = get_family(family)
+        z = X @ B[:, 0]
+        np.testing.assert_allclose(float(loss),
+                                   float(fam.value(z, Y[:, 0])),
+                                   rtol=2e-4, atol=2e-4)
 
 
 def test_gemv_1d_paths(rng):

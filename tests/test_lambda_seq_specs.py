@@ -1,7 +1,6 @@
 """λ sequences (paper §3.1.1) and the dry-run input-spec machinery."""
 
 import numpy as np
-import pytest
 
 import jax.numpy as jnp
 

@@ -63,7 +63,7 @@ def test_smoke_full_config_shapes_exist(name):
     """Full configs instantiate (shape-only, no allocation) with sane counts."""
     cfg = get_config(name)
     shapes = jax.eval_shape(lambda: init_params(cfg, KEY))
-    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    total = sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(shapes))
     analytic = cfg.n_params()
     assert abs(total - analytic) / analytic < 0.02, (total, analytic)
 

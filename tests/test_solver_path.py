@@ -8,6 +8,8 @@ import jax.numpy as jnp
 from repro.core import (
     bh_sequence,
     fista,
+    fista_compact,
+    fista_masked,
     fit_path,
     get_family,
     kkt_optimal,
@@ -99,6 +101,52 @@ def test_path_screened_set_contains_active():
         if s.n_active and not s.n_violations:
             assert s.n_screened + 1e-9 >= 0  # screened count recorded
     assert r.total_violations <= 2  # rare by Fig. 3
+
+
+@pytest.mark.parametrize("family_name,m", [("ols", 1), ("multinomial", 3)])
+def test_fista_masked_zero_invariant(family_name, m, rng):
+    """Masked coordinates come back EXACTLY 0 with no exit re-mask: zeroed
+    columns have identically-zero gradient and the sorted-ℓ1 prox preserves
+    exact zeros, so the solver never perturbs them (the re-mask this
+    replaces was a redundant (p, m) multiply per solve)."""
+    n, p = 40, 80
+    if family_name == "ols":
+        X, y, _ = make_regression(n, p, k=5, rho=0.3, seed=3)
+    else:
+        X, y, _ = make_multinomial(n, p, k=5, m=m, rho=0.3, seed=3)
+    fam = get_family(family_name, m)
+    # weak penalty so the unmasked columns actually activate
+    lam = np.asarray(bh_sequence(p * m, q=0.1)) * 0.05
+    mask = rng.random(p) < 0.15
+    mask[0] = True  # keep the working set non-empty
+    beta0 = np.zeros(p) if m == 1 else np.zeros((p, m))
+    res = fista_masked(jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam),
+                       jnp.asarray(beta0), jnp.asarray(mask), fam,
+                       max_iter=5000, tol=1e-12)
+    beta = np.asarray(res.beta)
+    assert (beta[~mask] == 0.0).all()  # exact, not just small
+    assert np.abs(beta[mask]).max() > 0  # the solve did something
+
+
+def test_fista_compact_matches_masked(rng):
+    """The compact (n, W) gather solve equals the masked full-width solve;
+    padding columns beyond |mask| stay inert."""
+    n, p, W = 40, 150, 16
+    X, y, _ = make_regression(n, p, k=5, rho=0.2, seed=9)
+    lam = np.asarray(bh_sequence(p, q=0.1)) * 1.5
+    mask = np.zeros(p, bool)
+    mask[rng.choice(p, size=9, replace=False)] = True
+    args = (jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam),
+            jnp.zeros(p), jnp.asarray(mask), ols)
+    kw = dict(max_iter=20000, tol=1e-14)
+    r_masked = fista_masked(*args, **kw)
+    r_compact = fista_compact(*args, width=W, **kw)
+    beta_c = np.asarray(r_compact.beta)
+    assert beta_c.shape == (p,)
+    assert (beta_c[~mask] == 0.0).all()
+    np.testing.assert_allclose(beta_c, np.asarray(r_masked.beta), atol=1e-9)
+    np.testing.assert_allclose(float(r_compact.objective),
+                               float(r_masked.objective), rtol=1e-10)
 
 
 def test_path_early_stop_on_saturation():

@@ -1,7 +1,6 @@
 """Sorted-ℓ1 norm + prox: oracle comparisons and subdifferential certificates."""
 
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

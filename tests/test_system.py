@@ -10,7 +10,6 @@
 import numpy as np
 import pytest
 
-import jax.numpy as jnp
 
 from repro.core import bh_sequence, fit_path, ols, get_family
 from repro.data import make_classification, make_regression
