@@ -59,9 +59,25 @@ def main(base_dir, opt_dir):
 
 
 def main_bench(prev_path, new_path):
-    """Diff two BENCH_ci.json row lists; markdown to stdout (job summary)."""
-    prev = {r["name"]: r for r in json.loads(pathlib.Path(prev_path).read_text())}
+    """Diff two BENCH_ci.json row lists; markdown to stdout (job summary).
+
+    Missing/corrupt previous artifacts are normal — the first CI run ever,
+    or the first run after a new benchmark section lands — so they produce
+    a clean "baseline recorded" summary instead of a traceback.
+    """
     new = json.loads(pathlib.Path(new_path).read_text())
+    try:
+        prev_rows = json.loads(pathlib.Path(prev_path).read_text())
+        prev = {r["name"]: r for r in prev_rows}
+    except (OSError, ValueError):
+        print("### Benchmark trajectory\n")
+        print(f"No previous artifact at `{prev_path}` — baseline recorded "
+              f"({len(new)} rows):\n")
+        print("| row | now µs |")
+        print("|---|---|")
+        for r in new:
+            print(f"| {r['name']} | {r['us_per_call']:.1f} |")
+        return 0
     print("### Benchmark trajectory (vs previous run)\n")
     print("| row | prev µs | now µs | Δ | |")
     print("|---|---|---|---|---|")

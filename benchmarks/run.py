@@ -13,11 +13,14 @@ Default sizes are scaled to finish on this CPU-only container in minutes;
   fig6_algorithms      paper Fig 6 — strong-set vs previous-set strategies
   kernels              Pallas kernels vs jnp oracle (interpret mode)
   batched_engine       device engine: fit_path_batched vs a loop of fit_path
+  compact_engine       compact working-set engine vs the masked engine
+  serve                PathService vs one-request-at-a-time on a request stream
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 
@@ -308,6 +311,105 @@ def compact_engine(full: bool):
         f"{over.compact_fallback.shape[1]} maxdiff_masked={diff_over:.1e}")
 
 
+def _serve_stream(stream: str, R: int, seed: int = 0):
+    """Deterministic request stream for the serve benchmark.
+
+    ``mixed`` draws a fresh (n, p) per request — realistic traffic where
+    nearly every problem has its own shape, so an unbatched baseline pays
+    one XLA compilation per request while the service funnels everything
+    into a handful of power-of-two buckets.  ``uniform`` repeats one shape:
+    the baseline then amortizes its single compilation and the comparison
+    isolates the pure batching/padding trade.
+    """
+    from repro.core import bh_sequence
+    from repro.data import make_regression
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(R):
+        if stream == "mixed":
+            n = int(rng.integers(33, 64))
+            p = int(rng.integers(40, 120))
+        else:
+            n, p = 40, 60
+        X, y, _ = make_regression(n, p, k=5, rho=0.2, seed=100 + i)
+        reqs.append((X, y, np.asarray(bh_sequence(p, q=0.1))))
+    return reqs
+
+
+def serve(full: bool, stream: str = "mixed"):
+    """ISSUE 3 acceptance: PathService (bucketed, micro-batched, compiled-
+    program cache) vs fitting the same stream one request at a time.
+
+    Both arms start COLD and their XLA compilations are counted: that is
+    the serving trade under test — the baseline compiles one program per
+    distinct request shape, the service one per bucket.  A steady-state
+    service row (same service, warm cache) shows the long-running floor.
+    """
+    from repro.core import fit_path_batched, ols
+    from repro.serve import PathService
+
+    R = 32 if full else 16
+    L = 40
+    reqs = _serve_stream(stream, R)
+    shapes = {X.shape for X, _, _ in reqs}
+    kw = dict(path_length=L, sigma_ratio=0.1, solver_tol=1e-8,
+              max_iter=20000, kkt_tol=1e-4)
+
+    # -- baseline: one-request-at-a-time on the device engine ---------------
+    lat_base = []
+    t0 = time.perf_counter()
+    for X, y, lam in reqs:
+        t1 = time.perf_counter()
+        fit_path_batched(X[None], y[None], lam, ols, **kw)
+        lat_base.append(time.perf_counter() - t1)
+    t_base = time.perf_counter() - t0
+    lat_base = np.asarray(lat_base) * 1e3
+    row(f"serve/baseline_{stream}_R{R}", t_base * 1e6,
+        f"rps={R / t_base:.2f} shapes={len(shapes)} "
+        f"p50_ms={np.percentile(lat_base, 50):.0f} "
+        f"p95_ms={np.percentile(lat_base, 95):.0f}")
+
+    # -- service: bucketed micro-batching, cold cache -----------------------
+    def run_stream(svc):
+        rids = [svc.submit(X, y, lam=lam, path_length=L, sigma_ratio=0.1,
+                           solver_tol=1e-8, max_iter=20000)
+                for X, y, lam in reqs]
+        svc.flush()
+        resps = [svc.poll(r) for r in rids]
+        assert all(r is not None for r in resps)
+        return resps
+
+    svc = PathService(max_batch=8, max_delay=10.0)
+    t0 = time.perf_counter()
+    run_stream(svc)
+    t_serve = time.perf_counter() - t0
+    st = svc.stats()
+    row(f"serve/service_{stream}_R{R}", t_serve * 1e6,
+        f"rps={R / t_serve:.2f} speedup={t_base / t_serve:.2f}x "
+        f"occupancy={st['occupancy_mean']:.2f} "
+        f"cache_hit_rate={st['cache']['hit_rate']:.2f} "
+        f"programs={st['cache']['size']} "
+        f"p50_ms={st['latency_ms_p50']:.0f} p95_ms={st['latency_ms_p95']:.0f}")
+
+    # -- service steady state: warm compiled-program cache ------------------
+    # a FRESH service sharing the warm cache, so this row's telemetry is
+    # pure steady-state (svc.stats() counters are lifetime-cumulative and
+    # would dilute hit rate/occupancy with the cold run's misses)
+    warm = PathService(max_batch=8, max_delay=10.0, cache=svc.cache)
+    pre = svc.cache.stats()  # cache counters are cache-lifetime: diff them
+    t0 = time.perf_counter()
+    run_stream(warm)
+    t_steady = time.perf_counter() - t0
+    st = warm.stats()
+    post = st["cache"]
+    lookups = (post["hits"] + post["misses"]) - (pre["hits"] + pre["misses"])
+    hit_rate = (post["hits"] - pre["hits"]) / max(1, lookups)
+    row(f"serve/service_steady_{stream}_R{R}", t_steady * 1e6,
+        f"rps={R / t_steady:.2f} cache_hit_rate={hit_rate:.2f} "
+        f"occupancy={st['occupancy_mean']:.2f}")
+
+
 BENCHES = {
     "table1_speedup": table1_speedup,
     "fig1_fig2_efficiency": fig1_fig2_efficiency,
@@ -317,6 +419,7 @@ BENCHES = {
     "kernels": kernels,
     "batched_engine": batched_engine,
     "compact_engine": compact_engine,
+    "serve": serve,
 }
 
 
@@ -326,6 +429,8 @@ def main() -> None:
                     help=f"comma-separated subset of {list(BENCHES)}")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--stream", default="mixed", choices=["mixed", "uniform"],
+                    help="serve section: request-shape distribution")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact (CI: BENCH_ci.json)")
     args = ap.parse_args()
@@ -339,7 +444,10 @@ def main() -> None:
     for name, fn in BENCHES.items():
         if only and name not in only:
             continue
-        fn(args.full)
+        if name == "serve":
+            fn(args.full, stream=args.stream)
+        else:
+            fn(args.full)
     if args.json:
         write_json(args.json)
 

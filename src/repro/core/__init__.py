@@ -35,6 +35,9 @@ from .engine import (
     compact_path_engine,
     fit_path_batched,
     cv_path,
+    cv_fold_indices,
+    cv_val_deviance,
+    cv_select,
     EnginePath,
     CompactStats,
     BatchedPathResult,
@@ -56,6 +59,7 @@ __all__ = [
     "fista", "fista_masked", "fista_compact", "FistaResult",
     "path_engine", "batched_path_engine", "compact_path_engine",
     "fit_path_batched", "cv_path",
+    "cv_fold_indices", "cv_val_deviance", "cv_select",
     "EnginePath", "CompactStats", "BatchedPathResult", "CvPathResult",
     "fit_path", "PathResult", "PathStep",
 ]

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..serve.buckets import BucketRegistry, next_pow2
 from .kkt import kkt_violations_masked
 from .lambda_seq import path_start_sigma, sigma_grid
 from .losses import Family
@@ -55,7 +56,11 @@ __all__ = [
     "batched_path_engine",
     "compact_path_engine",
     "fit_path_batched",
+    "grow_ws_bucket",
     "cv_path",
+    "cv_fold_indices",
+    "cv_val_deviance",
+    "cv_select",
     "null_gradient",
     "null_sigma_grid",
     "BatchedPathResult",
@@ -89,12 +94,27 @@ class CompactStats(NamedTuple):
 # Per-problem step primitives, shared by the masked and compact engines
 # ---------------------------------------------------------------------------
 
-def _screen_sets(grad, prev_active, sig_prev, sig, lam, *, p, m, screening):
+def _valid_masks(p, m, p_valid):
+    """Predictor- and coordinate-space validity masks for a (possibly
+    bucket-padded) problem.  ``p_valid=None`` means every column is real —
+    the masks are all-True constants and fold away at trace time; a traced
+    ``p_valid`` scalar marks columns ≥ p_valid as padding, excluded from
+    screening, KKT checks and the full-problem widening heuristic (their
+    coefficients are inert zeros either way — see repro.serve.buckets)."""
+    if p_valid is None:
+        return jnp.ones((p,), bool), jnp.ones((p * m,), bool)
+    valid_p = jnp.arange(p) < p_valid
+    return valid_p, jnp.repeat(valid_p, m)
+
+
+def _screen_sets(grad, prev_active, sig_prev, sig, lam, *, p, m, screening,
+                 p_valid=None):
     """Strong set + initial working set E₀ for one path step (one problem)."""
     pm = p * m
+    valid_p, valid_flat = _valid_masks(p, m, p_valid)
     gap = (sig_prev - sig) * lam  # rank-space surrogate shift
     keep_flat, _ = screen_masked(jnp.abs(grad.reshape(pm)), sig * lam,
-                                 jnp.ones((pm,), bool), gap)
+                                 valid_flat, gap)
     strong_p = keep_flat.reshape(p, m).any(axis=1)
     n_screened = strong_p.sum().astype(jnp.int32)
     if screening == "strong":
@@ -103,19 +123,21 @@ def _screen_sets(grad, prev_active, sig_prev, sig, lam, *, p, m, screening):
         E0 = jnp.where(prev_active.any(), prev_active, strong_p)
     # mirror the host driver: once screening keeps most predictors
     # (n ≳ p regime) just solve the full problem — keeps violation
-    # accounting identical between backends
-    E0 = jnp.where(E0.sum() >= 0.5 * p, jnp.ones((p,), bool), E0)
+    # accounting identical between backends.  "Full" means the valid
+    # columns; the threshold counts them, not the padded width.
+    p_eff = p if p_valid is None else p_valid
+    E0 = jnp.where(E0.sum() >= 0.5 * p_eff, valid_p, E0)
     return strong_p, E0, n_screened
 
 
 def _kkt_step(grad, lam_next, E, strong_p, checked_full, *, p, m, kkt_tol,
-              screening):
+              screening, p_valid=None):
     """KKT violation mask for one problem; see Algorithms 3/4."""
     pm = p * m
+    _, valid_flat = _valid_masks(p, m, p_valid)
     gflat = grad.reshape(pm)
     ever = jnp.repeat(E, m)
-    ones_pm = jnp.ones((pm,), bool)
-    viol_full = kkt_violations_masked(gflat, lam_next, ever, ones_pm,
+    viol_full = kkt_violations_masked(gflat, lam_next, ever, valid_flat,
                                       tol=kkt_tol)
     if screening != "previous":
         return viol_full, checked_full
@@ -141,7 +163,7 @@ def _new_violations(viol_flat, strong_p, prev_active, *, p, m, screening):
 
 
 def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
-            kkt_tol, max_refits) -> EnginePath:
+            kkt_tol, max_refits, p_valid=None) -> EnginePath:
     """Traced body shared by :func:`path_engine` and the vmapped batch form."""
     n, p = X.shape
     m = family.n_classes
@@ -173,7 +195,7 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
         return beta_new, grad, res.iters.astype(jnp.int32), res.L
 
     kkt_check = functools.partial(_kkt_step, p=p, m=m, kkt_tol=kkt_tol,
-                                  screening=screening)
+                                  screening=screening, p_valid=p_valid)
     count_viol = functools.partial(_new_violations, p=p, m=m,
                                    screening=screening)
 
@@ -183,13 +205,14 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
         lam_next = sig * lam
 
         if screening == "none":
-            strong_p = jnp.ones((p,), bool)
+            strong_p, _ = _valid_masks(p, m, p_valid)
             E0 = strong_p
-            n_screened = jnp.int32(p)
+            n_screened = (jnp.int32(p) if p_valid is None
+                          else jnp.asarray(p_valid, jnp.int32))
         else:
             strong_p, E0, n_screened = _screen_sets(
                 grad, prev_active, sig_prev, sig, lam, p=p, m=m,
-                screening=screening)
+                screening=screening, p_valid=p_valid)
 
         beta1, grad1, it1, L1 = solve(E0, lam_next, beta, L_carry)
 
@@ -265,36 +288,47 @@ _ENGINE_STATICS = ("family", "screening", "max_iter", "tol", "kkt_tol",
 
 
 @functools.partial(jax.jit, static_argnames=_ENGINE_STATICS)
-def path_engine(X, y, lam, sigmas, family: Family, *, screening: str = "strong",
+def path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
+                screening: str = "strong",
                 max_iter: int = 5000, tol: float = 1e-8,
                 kkt_tol: float = 1e-4, max_refits: int = 32) -> EnginePath:
     """Fit one full SLOPE path entirely on device (fixed σ grid, no early
-    stop).  One compilation per (n, p, m, len(sigmas), config)."""
+    stop).  One compilation per (n, p, m, len(sigmas), config).
+
+    ``p_valid`` (optional scalar) marks columns ≥ p_valid as bucket padding:
+    inert in the solve and excluded from screening/KKT accounting."""
     return _engine(X, y, lam, sigmas, family, screening, max_iter, tol,
-                   kkt_tol, max_refits)
+                   kkt_tol, max_refits, p_valid)
 
 
 @functools.partial(jax.jit, static_argnames=_ENGINE_STATICS)
-def batched_path_engine(X, y, lam, sigmas, family: Family, *,
+def batched_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
                         screening: str = "strong", max_iter: int = 5000,
                         tol: float = 1e-8, kkt_tol: float = 1e-4,
                         max_refits: int = 32) -> EnginePath:
     """vmap of :func:`path_engine` over the leading problem axis.
 
     ``X``: (B, n, p); ``y``: (B, n[, ...]); ``sigmas``: (B, L); ``lam`` is
-    shared (SLOPE's λ is a rank sequence, not per-problem data).  Returns an
-    :class:`EnginePath` whose arrays carry a leading batch axis.
+    either one shared (p·m,) sequence (SLOPE's λ is a rank sequence, not
+    per-problem data) or a per-problem (B, p·m) stack — the serve layer
+    uses the latter so requests with different native widths can share one
+    padded program.  ``p_valid`` (optional, (B,) int32) marks per-member
+    bucket padding.  Returns an :class:`EnginePath` whose arrays carry a
+    leading batch axis.
     """
+    lam_axis = 0 if lam.ndim == 2 else None
+    pv_axis = None if p_valid is None else 0
 
-    def one(Xi, yi, si):
-        return _engine(Xi, yi, lam, si, family, screening, max_iter, tol,
-                       kkt_tol, max_refits)
+    def one(Xi, yi, si, lami, pvi):
+        return _engine(Xi, yi, lami, si, family, screening, max_iter, tol,
+                       kkt_tol, max_refits, pvi)
 
-    return jax.vmap(one)(X, y, sigmas)
+    return jax.vmap(one, in_axes=(0, 0, 0, lam_axis, pv_axis))(
+        X, y, sigmas, lam, p_valid)
 
 
 def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
-                    tol, kkt_tol, max_refits, width):
+                    tol, kkt_tol, max_refits, width, p_valid=None):
     """Natively-batched compact-working-set engine.
 
     Identical per-step semantics to ``vmap(_engine)`` with one structural
@@ -311,6 +345,9 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
     m = family.n_classes
     dtype = X.dtype
     lam = lam.astype(dtype)
+    if lam.ndim == 1:  # shared rank sequence -> per-member view
+        lam = jnp.broadcast_to(lam, (B,) + lam.shape)
+    pv_axis = None if p_valid is None else 0
     W = width
 
     def fam_shape(b):  # (p, m) -> the shape the family callbacks expect
@@ -354,24 +391,35 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
         grad1 = jax.vmap(grad_one)(X, y, beta1)
         return beta1, grad1, it1, L1, fell_back, need
 
-    kkt_one = functools.partial(_kkt_step, p=p, m=m, kkt_tol=kkt_tol,
-                                screening=screening)
     nv_one = functools.partial(_new_violations, p=p, m=m, screening=screening)
-    screen_one = functools.partial(_screen_sets, p=p, m=m, screening=screening)
+
+    def screen_one(grad_i, prev_i, sp_i, s_i, lam_i, pv_i):
+        return _screen_sets(grad_i, prev_i, sp_i, s_i, lam_i, p=p, m=m,
+                            screening=screening, p_valid=pv_i)
+
+    def kkt_one(grad_i, lam_i, E_i, strong_i, checked_i, pv_i):
+        return _kkt_step(grad_i, lam_i, E_i, strong_i, checked_i, p=p, m=m,
+                         kkt_tol=kkt_tol, screening=screening, p_valid=pv_i)
+
+    kkt_all = jax.vmap(kkt_one, in_axes=(0, 0, 0, 0, 0, pv_axis))
 
     def step(carry, sigs):
         beta, grad, prev_active, L_carry = carry
         sig_prev, sig = sigs                      # (B,), (B,)
-        lam_next = sig[:, None] * lam[None, :]    # (B, p·m)
+        lam_next = sig[:, None] * lam             # (B, p·m)
 
         if screening == "none":
-            strong_p = jnp.ones((B, p), bool)
+            if p_valid is None:
+                strong_p = jnp.ones((B, p), bool)
+                n_screened = jnp.full((B,), p, jnp.int32)
+            else:
+                strong_p = jnp.arange(p)[None, :] < p_valid[:, None]
+                n_screened = jnp.asarray(p_valid, jnp.int32)
             E0 = strong_p
-            n_screened = jnp.full((B,), p, jnp.int32)
         else:
             strong_p, E0, n_screened = jax.vmap(
-                screen_one, in_axes=(0, 0, 0, 0, None)
-            )(grad, prev_active, sig_prev, sig, lam)
+                screen_one, in_axes=(0, 0, 0, 0, 0, pv_axis)
+            )(grad, prev_active, sig_prev, sig, lam, p_valid)
 
         beta1, grad1, it1, L1, fb1, need1 = solve_all(E0, lam_next, beta,
                                                       L_carry)
@@ -385,8 +433,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
             fell_back = fb1
             ws_max = need1
         else:
-            viol1, checked1 = jax.vmap(kkt_one)(grad1, lam_next, E0, strong_p,
-                                                jnp.zeros((B,), bool))
+            viol1, checked1 = kkt_all(grad1, lam_next, E0, strong_p,
+                                      jnp.zeros((B,), bool), p_valid)
             state = dict(
                 beta=beta1, grad=grad1, L=L1,
                 E=E0 | viol1.reshape(B, p, m).any(axis=2),
@@ -409,8 +457,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                 active = s["has_viol"] & (s["refits"] < max_refits)
                 beta2, grad2, it2, L2, fb2, need2 = solve_all(
                     s["E"] & active[:, None], lam_next, s["beta"], s["L"])
-                viol2, checked2 = jax.vmap(kkt_one)(grad2, lam_next, s["E"],
-                                                    strong_p, s["checked"])
+                viol2, checked2 = kkt_all(grad2, lam_next, s["E"],
+                                          strong_p, s["checked"], p_valid)
 
                 def sel(new, old):
                     a = active.reshape((B,) + (1,) * (new.ndim - 1))
@@ -482,7 +530,8 @@ _COMPACT_STATICS = _ENGINE_STATICS + ("width",)
 
 
 @functools.partial(jax.jit, static_argnames=_COMPACT_STATICS)
-def compact_path_engine(X, y, lam, sigmas, family: Family, *, width: int,
+def compact_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
+                        width: int,
                         screening: str = "strong", max_iter: int = 5000,
                         tol: float = 1e-8, kkt_tol: float = 1e-4,
                         max_refits: int = 32):
@@ -491,11 +540,13 @@ def compact_path_engine(X, y, lam, sigmas, family: Family, *, width: int,
     ``lax.cond`` fallback to the masked full-width solve on overflow.
 
     ``X``: (B, n, p); ``y``: (B, n[, ...]); ``sigmas``: (B, L); ``lam``
-    shared.  Returns ``(EnginePath, CompactStats)`` with leading batch axes.
-    One compilation per (B, n, p, m, L, W, config).
+    shared (p·m,) or per-member (B, p·m); ``p_valid`` (optional, (B,)
+    int32) marks bucket padding per member.  Returns ``(EnginePath,
+    CompactStats)`` with leading batch axes.  One compilation per
+    (B, n, p, m, L, W, config).
     """
     return _compact_engine(X, y, lam, sigmas, family, screening, max_iter,
-                           tol, kkt_tol, max_refits, width)
+                           tol, kkt_tol, max_refits, width, p_valid)
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +572,8 @@ class BatchedPathResult:
     working_set: int | None = None        # W bucket (None: masked engine)
     ws_size: np.ndarray | None = None     # (B, L) peak |E| per step
     compact_fallback: np.ndarray | None = None  # (B, L) masked-fallback steps
+    pad_shape: tuple | None = None        # (slots, N, P) executed shape when
+    #   pad="bucket" routed the batch through the serve layer's buckets
 
     @property
     def batch(self) -> int:
@@ -583,8 +636,10 @@ def null_sigma_grid(X, y, lam, family: Family, *, path_length: int,
 
 def _null_sigma_grids(Xs, ys, lam, family: Family, path_length, sigma_ratio):
     """Per-problem σ grids (stacked :func:`null_sigma_grid`)."""
+    lam = np.asarray(lam)
     return np.stack([
-        null_sigma_grid(Xs[b], ys[b], lam, family, path_length=path_length,
+        null_sigma_grid(Xs[b], ys[b], lam[b] if lam.ndim == 2 else lam,
+                        family, path_length=path_length,
                         sigma_ratio=sigma_ratio)
         for b in range(Xs.shape[0])
     ])
@@ -593,12 +648,13 @@ def _null_sigma_grids(Xs, ys, lam, family: Family, path_length, sigma_ratio):
 # Grow-on-overflow bucket memory: (n, p, m, family, screening) → last W that
 # overflowed, promoted to the next power of two.  Correctness never depends
 # on it (overflow steps fall back to the masked solve in-graph); it just
-# stops the NEXT same-shape call from paying the fallback again.
-_WS_BUCKETS: dict[tuple, int] = {}
+# stops the NEXT same-shape call from paying the fallback again.  A proper
+# thread-safe bounded registry (PR 3) shared with repro.serve: the path
+# service resolves compact widths through this same instance, so a service
+# batch that overflows grows the bucket the next direct call sees.
+_WS_BUCKETS = BucketRegistry(name="working_set", capacity=256)
 
-
-def _next_pow2(x: int) -> int:
-    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+_next_pow2 = next_pow2  # promoted to repro.serve.buckets; alias kept local
 
 
 def _ws_bucket(working_set, n: int, p: int, key: tuple) -> int:
@@ -610,11 +666,29 @@ def _ws_bucket(working_set, n: int, p: int, key: tuple) -> int:
     if working_set != "auto":
         raise ValueError(
             f"working_set must be None, an int or 'auto', got {working_set!r}")
-    if key in _WS_BUCKETS:
-        return min(_WS_BUCKETS[key], p)
+    grown = _WS_BUCKETS.get(key)
+    if grown is not None:
+        return min(grown, p)
     # p ≫ n: the screened set tracks the active set, which cannot exceed n
     # useful coefficients by much — 2n is a comfortable first bucket
     return min(_next_pow2(max(2 * n, 64)), p)
+
+
+def grow_ws_bucket(ws_key: tuple, ws_size, fell_back, W: int,
+                   p_cap: int) -> bool:
+    """Grow the shared working-set registry after an overflowing "auto" run.
+
+    ``ws_size``/``fell_back`` are the run's CompactStats arrays (real
+    members only); ``p_cap`` bounds the promoted bucket.  The ONE growth
+    rule, shared by :func:`fit_path_batched` and the path service so the
+    two front-ends can never desynchronize the registry they share.
+    Returns True if the bucket grew.
+    """
+    if W >= p_cap or not np.asarray(fell_back).any():
+        return False
+    _WS_BUCKETS[ws_key] = min(_next_pow2(int(np.asarray(ws_size).max())),
+                              p_cap)
+    return True
 
 
 def fit_path_batched(
@@ -628,6 +702,7 @@ def fit_path_batched(
     kkt_tol: float = 1e-4,
     max_refits: int = 32,
     working_set: int | str | None = None,
+    pad: str | None = None,
 ) -> BatchedPathResult:
     """Fit B independent SLOPE paths in one compiled device program.
 
@@ -637,6 +712,10 @@ def fit_path_batched(
     whose KKT repair hit ``max_refits`` are flagged in ``kkt_unrepaired``
     (and warned about) — raise the cap if that ever fires.
 
+    ``lam`` is one shared (p·m,) rank sequence or a per-problem (B, p·m)
+    stack (what the serve layer uses to co-batch requests of different
+    native widths inside one padded program).
+
     ``working_set`` selects the compact engine: an int requests a static
     width bucket W (rounded up to a power of two, capped at p), ``"auto"``
     picks ``min(2^⌈log₂ max(2n, 64)⌉, p)`` with grow-on-overflow memory, and
@@ -644,6 +723,15 @@ def fit_path_batched(
     O(n·W) per FISTA iteration; any step where a batch member's working set
     outgrows W falls back — correctly, in-graph — to the masked solve and
     is flagged in ``compact_fallback``.
+
+    ``pad="bucket"`` routes the batch through the serve layer's canonical
+    execution shapes (:mod:`repro.serve.buckets`): rows/columns/batch slots
+    are padded to power-of-two buckets with inert zeros, screening and KKT
+    checks are restricted to the valid prefix (``p_valid``), and results
+    come back unpadded.  Problems then share compiled programs across
+    nearby shapes — and, because the :class:`~repro.serve.service.PathService`
+    resolves shapes through the same policy, a padded direct call is
+    bit-identical to the same request served through the service.
     """
     Xs = np.asarray(Xs)
     ys = np.asarray(ys)
@@ -652,12 +740,20 @@ def fit_path_batched(
     if ys.shape[:2] != Xs.shape[:2]:
         raise ValueError(
             f"ys must be (B, n[, ...]) matching Xs {Xs.shape[:2]}, got {ys.shape}")
+    if pad not in (None, "bucket"):
+        raise ValueError(f"pad must be None or 'bucket', got {pad!r}")
     lam = np.asarray(lam)
+    B, n, p = Xs.shape
+    m = family.n_classes
+    if lam.ndim == 2 and lam.shape != (B, p * m):
+        raise ValueError(
+            f"per-problem lam must be (B, p·m) = {(B, p * m)}, got {lam.shape}")
+    if lam.ndim not in (1, 2):
+        raise ValueError(f"lam must be (p·m,) or (B, p·m), got {lam.shape}")
     if sigmas is None:
         sigmas = _null_sigma_grids(Xs, ys, lam, family, path_length,
                                    sigma_ratio)
     sigmas = np.asarray(sigmas)
-    B = Xs.shape[0]
     if sigmas.ndim == 1:  # one shared grid, like fit_path's 1-D sigmas
         sigmas = np.tile(sigmas, (B, 1))
     if sigmas.shape[0] != B or sigmas.ndim != 2:
@@ -665,7 +761,24 @@ def fit_path_batched(
             f"sigmas must be (L,) shared or (B, L) per-problem; got "
             f"{sigmas.shape} for B={B}")
 
-    n, p = Xs.shape[1], Xs.shape[2]
+    p_valid = None
+    pad_shape = None
+    Xs_run, ys_run, lam_run, sig_run = Xs, ys, lam, sigmas
+    n_run, p_run = n, p
+    if pad == "bucket":
+        from ..serve.buckets import default_policy, pad_batch
+
+        policy = default_policy()
+        n_run, p_run = policy.shape_bucket(n, p, family.name)
+        slots = policy.batch_bucket(B)
+        lam2 = lam if lam.ndim == 2 else np.broadcast_to(lam, (B, p * m))
+        pb = pad_batch(
+            [(Xs[b], ys[b], lam2[b], sigmas[b]) for b in range(B)],
+            n_rows=n_run, n_cols=p_run, n_slots=slots, n_classes=m)
+        Xs_run, ys_run, lam_run, sig_run = pb.Xs, pb.ys, pb.lam, pb.sigmas
+        p_valid = jnp.asarray(pb.p_valid)
+        pad_shape = (slots, n_run, p_run)
+
     engine_kw = dict(screening=screening, max_iter=max_iter, tol=solver_tol,
                      kkt_tol=kkt_tol, max_refits=max_refits)
     t0 = time.perf_counter()
@@ -673,45 +786,59 @@ def fit_path_batched(
     stats = None
     if working_set is None:
         res = batched_path_engine(
-            jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
-            jnp.asarray(sigmas), family, **engine_kw)
+            jnp.asarray(Xs_run), jnp.asarray(ys_run), jnp.asarray(lam_run),
+            jnp.asarray(sig_run), family, p_valid, **engine_kw)
     else:
-        ws_key = (n, p, family.n_classes, family.name, screening)
-        W = _ws_bucket(working_set, n, p, ws_key)
+        ws_key = (n_run, p_run, m, family.name, screening)
+        W = _ws_bucket(working_set, n_run, p_run, ws_key)
         res, stats = compact_path_engine(
-            jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
-            jnp.asarray(sigmas), family, width=W, **engine_kw)
-    betas = np.asarray(res.betas)  # (B, L, p, m)
+            jnp.asarray(Xs_run), jnp.asarray(ys_run), jnp.asarray(lam_run),
+            jnp.asarray(sig_run), family, p_valid, width=W, **engine_kw)
+    res = EnginePath(*(np.asarray(a) for a in res))
     wall = time.perf_counter() - t0
-    if family.n_classes == 1:
+    if stats is not None:
+        stats = CompactStats(*(np.asarray(a) for a in stats))
+    if pad_shape is not None:  # drop dummy slots + padded columns
+        res = EnginePath(
+            betas=res.betas[:B, :, :p, :],
+            n_active=res.n_active[:B], n_screened=res.n_screened[:B],
+            n_violations=res.n_violations[:B], refits=res.refits[:B],
+            solver_iters=res.solver_iters[:B], deviance=res.deviance[:B],
+            kkt_unrepaired=res.kkt_unrepaired[:B])
+        if stats is not None:
+            stats = CompactStats(ws_size=stats.ws_size[:B],
+                                 fell_back=stats.fell_back[:B])
+    betas = res.betas  # (B, L, p, m)
+    if m == 1:
         betas = betas[:, :, :, 0]
-    unrepaired = np.asarray(res.kkt_unrepaired)
+    unrepaired = res.kkt_unrepaired
     _warn_unrepaired(unrepaired, max_refits)
     ws_size = fallback = None
     if stats is not None:
-        ws_size = np.asarray(stats.ws_size)
-        fallback = np.asarray(stats.fell_back)
+        ws_size = stats.ws_size
+        fallback = stats.fell_back
         # grow the bucket for the next same-shape "auto" call; explicit-int
         # runs (e.g. a deliberately undersized overflow probe) must not
         # seed "auto" with a bucket below its documented default
-        if working_set == "auto" and fallback.any() and W < p:
-            _WS_BUCKETS[ws_key] = min(_next_pow2(int(ws_size.max())), p)
+        if working_set == "auto":
+            grow_ws_bucket(ws_key, ws_size, fallback, W, p_run)
     return BatchedPathResult(
         betas=betas,
         sigmas=sigmas,
         lam=lam,
-        n_active=np.asarray(res.n_active),
-        n_screened=np.asarray(res.n_screened),
-        n_violations=np.asarray(res.n_violations),
-        refits=np.asarray(res.refits),
-        solver_iters=np.asarray(res.solver_iters),
-        deviance=np.asarray(res.deviance),
+        n_active=res.n_active,
+        n_screened=res.n_screened,
+        n_violations=res.n_violations,
+        refits=res.refits,
+        solver_iters=res.solver_iters,
+        deviance=res.deviance,
         kkt_unrepaired=unrepaired,
         total_time=wall,
         n_samples=n,
         working_set=W,
         ws_size=ws_size,
         compact_fallback=fallback,
+        pad_shape=pad_shape,
     )
 
 
@@ -736,10 +863,89 @@ class CvPathResult:
     lam: np.ndarray
     val_deviance: np.ndarray      # (K, L) held-out deviance per fold
     mean_val_deviance: np.ndarray  # (L,)
-    best_index: int
+    best_index: int               # per the requested selection rule
     best_sigma: float
     fold_paths: BatchedPathResult
     total_time: float
+    se_val_deviance: np.ndarray | None = None  # (L,) SE over folds
+    best_index_min: int = 0       # argmin of the mean deviance
+    best_index_1se: int = 0       # sparsest σ within 1 SE of the minimum
+    selection: str = "min"
+
+
+def cv_fold_indices(y, n_folds: int, *, family: Family | None = None,
+                    stratify="auto"):
+    """Equal-size fold assignment shared by :func:`cv_path` and the serve
+    layer's CV requests.
+
+    Every validation fold has exactly ⌊n/K⌋ rows (remainder rows are always
+    in training) so all K training designs share ONE shape and batch into a
+    single compiled program.  ``stratify=True`` deals class-sorted rows
+    round-robin across folds so each fold sees the full-data class mix —
+    essential for binomial/multinomial families, where a contiguous fold
+    can end up single-class (its held-out deviance is then degenerate).
+    ``"auto"`` stratifies exactly for those families.  Returns
+    ``(trains, vals)``: two lists of K index arrays.
+    """
+    y = np.asarray(y)
+    n = y.shape[0]
+    if not 2 <= n_folds <= n:
+        raise ValueError(f"n_folds must be in [2, {n}], got {n_folds}")
+    if stratify == "auto":
+        stratify = family is not None and family.name in ("logistic",
+                                                          "multinomial")
+    fold = n // n_folds
+    if not stratify:
+        vals = [np.arange(k * fold, (k + 1) * fold) for k in range(n_folds)]
+    else:
+        classes = np.asarray(np.rint(y), np.int64)
+        order = np.argsort(classes, kind="stable")  # group rows by class
+        assign = np.empty(n, np.int64)
+        assign[order] = np.arange(n) % n_folds      # deal round-robin
+        # trim each fold to exactly ⌊n/K⌋ rows; trimmed rows join the
+        # always-in-training remainder, same as the contiguous scheme
+        vals = [np.nonzero(assign == k)[0][:fold] for k in range(n_folds)]
+    trains = [np.setdiff1d(np.arange(n), v) for v in vals]
+    return trains, vals
+
+
+def cv_val_deviance(X, y, val_indices, fold_betas, family: Family):
+    """Held-out deviance (K, L) for stacked per-fold path coefficients.
+
+    One batched evaluation of all K × L deviances (the fold and path axes
+    share shapes, so this is two nested vmaps, not K·L dispatches).  Shared
+    by :func:`cv_path` and the serve layer's CV aggregation so both compute
+    bit-identical selection criteria from the same fold fits.
+    """
+    X = np.asarray(X)
+    y = np.asarray(y)
+    Xv = jnp.asarray(np.stack([X[v] for v in val_indices]))
+    yv = jnp.asarray(np.stack([y[v] for v in val_indices]))
+
+    def fold_devs(Xvk, yvk, betas_k):
+        return jax.vmap(lambda b: family.loss(Xvk, yvk, b))(betas_k)
+
+    return np.asarray(jax.vmap(fold_devs)(Xv, yv, jnp.asarray(fold_betas)))
+
+
+def cv_select(val_dev: np.ndarray):
+    """Deviance-based λ selection from a (K, L) held-out deviance table.
+
+    Returns ``(mean, se, best_min, best_1se)``: the fold mean and its
+    standard error per path point, the argmin index, and the 1-SE index —
+    the *sparsest* grid point (largest σ, smallest index) whose mean
+    deviance is within one standard error of the minimum.  The 1-SE rule
+    trades a statistically-insignificant deviance increase for a sparser,
+    more stable model (the ROADMAP's deviance-based 1-SE rule).
+    """
+    val_dev = np.asarray(val_dev)
+    K = val_dev.shape[0]
+    mean = val_dev.mean(axis=0)
+    se = val_dev.std(axis=0, ddof=1) / np.sqrt(K)
+    best_min = int(np.argmin(mean))
+    thresh = mean[best_min] + se[best_min]
+    best_1se = int(np.argmax(mean <= thresh))  # first index ⇔ largest σ
+    return mean, se, best_min, best_1se
 
 
 def cv_path(
@@ -753,54 +959,50 @@ def cv_path(
     kkt_tol: float = 1e-4,
     max_refits: int = 32,
     working_set: int | str | None = None,
+    stratify="auto",
+    selection: str = "min",
+    pad: str | None = None,
 ) -> CvPathResult:
     """K-fold CV: all fold paths fit as ONE batched device program.
 
-    Folds are contiguous blocks of ⌊n/K⌋ rows (remainder rows are always in
-    training) so every training design has the same shape and the folds
-    batch into a single compilation.  The σ grid is computed once from the
-    full data and shared, so every fold is evaluated at the same penalty.
-    ``working_set`` selects the compact engine exactly as in
-    :func:`fit_path_batched` — the natural fit for CV's p ≫ n folds.
+    Every validation fold holds exactly ⌊n/K⌋ rows (remainder rows always
+    in training) so the K training designs share one shape and batch into a
+    single compilation; ``stratify`` controls class-balanced fold
+    assignment (``"auto"``: on for binomial/multinomial — see
+    :func:`cv_fold_indices`).  The σ grid is computed once from the full
+    data and shared, so every fold is evaluated at the same penalty.
+
+    ``selection`` picks the reported ``best_index``: ``"min"`` (lowest mean
+    held-out deviance) or ``"1se"`` (sparsest σ within one standard error
+    of it); both candidates are always reported.  ``working_set`` selects
+    the compact engine exactly as in :func:`fit_path_batched` — the natural
+    fit for CV's p ≫ n folds — and ``pad="bucket"`` routes the fold batch
+    through the serve layer's canonical execution shapes.
     """
+    if selection not in ("min", "1se"):
+        raise ValueError(f"selection must be 'min' or '1se', got {selection!r}")
     t0 = time.perf_counter()
     X = np.asarray(X)
     y = np.asarray(y)
-    n = X.shape[0]
     lam = np.asarray(lam)
-    if not 2 <= n_folds <= n:
-        raise ValueError(f"n_folds must be in [2, {n}], got {n_folds}")
-    fold = n // n_folds
 
     sigmas = null_sigma_grid(X, y, lam, family, path_length=path_length,
                              sigma_ratio=sigma_ratio)
 
-    Xs, ys_tr, vals = [], [], []
-    for k in range(n_folds):
-        val = np.arange(k * fold, (k + 1) * fold)
-        train = np.setdiff1d(np.arange(n), val)
-        Xs.append(X[train])
-        ys_tr.append(y[train])
-        vals.append(val)
-
+    trains, vals = cv_fold_indices(y, n_folds, family=family,
+                                   stratify=stratify)
     res = fit_path_batched(
-        np.stack(Xs), np.stack(ys_tr), lam, family, screening=screening,
+        np.stack([X[tr] for tr in trains]),
+        np.stack([y[tr] for tr in trains]),
+        lam, family, screening=screening,
         sigmas=sigmas, solver_tol=solver_tol,  # 1-D grid: shared across folds
         max_iter=max_iter, kkt_tol=kkt_tol, max_refits=max_refits,
-        working_set=working_set,
+        working_set=working_set, pad=pad,
     )
 
-    # one batched evaluation of all K × L held-out deviances (the fold and
-    # path axes share shapes, so this is two nested vmaps, not K·L dispatches)
-    Xv = jnp.asarray(np.stack([X[v] for v in vals]))
-    yv = jnp.asarray(np.stack([y[v] for v in vals]))
-
-    def fold_devs(Xvk, yvk, betas_k):
-        return jax.vmap(lambda b: family.loss(Xvk, yvk, b))(betas_k)
-
-    val_dev = np.asarray(jax.vmap(fold_devs)(Xv, yv, jnp.asarray(res.betas)))
-    mean_dev = val_dev.mean(axis=0)
-    best = int(np.argmin(mean_dev))
+    val_dev = cv_val_deviance(X, y, vals, res.betas, family)
+    mean_dev, se_dev, best_min, best_1se = cv_select(val_dev)
+    best = best_1se if selection == "1se" else best_min
     return CvPathResult(
         sigmas=sigmas,
         lam=lam,
@@ -810,4 +1012,8 @@ def cv_path(
         best_sigma=float(sigmas[best]),
         fold_paths=res,
         total_time=time.perf_counter() - t0,
+        se_val_deviance=se_dev,
+        best_index_min=best_min,
+        best_index_1se=best_1se,
+        selection=selection,
     )

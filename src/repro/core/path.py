@@ -14,7 +14,13 @@ loop (screen → masked FISTA → KKT repair) runs inside one compiled
 the backend the batched/CV entry points build on.  ``engine="auto"``
 currently selects "host" for this single-problem API (gathered sub-problems
 beat masked full-width solves once p is large); batched workloads should
-call :func:`repro.core.engine.fit_path_batched` directly.
+call :func:`repro.core.engine.fit_path_batched` directly, and *streams* of
+heterogeneous single fits belong on :class:`repro.serve.PathService`, which
+micro-batches them into the device engine.  ``pad="bucket"`` (device
+backend) pads a single problem to the serve layer's canonical power-of-two
+execution shape so heterogeneous one-off fits share compiled programs —
+and return bit-identical results to the same request routed through the
+service.
 
 Both backends honour the same ``fit_path`` signature and return the same
 :class:`PathResult` contract, and agree within solver tolerance (see
@@ -165,6 +171,7 @@ def fit_path(
     verbose: bool = False,
     engine: Literal["auto", "host", "device"] = "auto",
     max_refits: int = 32,
+    pad: str | None = None,
 ) -> PathResult:
     """Fit a full SLOPE path.
 
@@ -178,7 +185,9 @@ def fit_path(
     caps the device engine's bounded KKT repair loop (a hit is warned
     about); the host loop always repairs until clean and ignores it.
     ``verbose`` is host-only: the device backend runs the whole path as one
-    compiled call, so there is nothing to print per step.
+    compiled call, so there is nothing to print per step.  ``pad="bucket"``
+    (device backend only) executes at the serve layer's canonical
+    power-of-two bucket shape — see the module docstring.
     """
     if engine not in ("auto", "host", "device"):
         raise ValueError(f"engine must be 'auto', 'host' or 'device', got {engine!r}")
@@ -186,12 +195,16 @@ def fit_path(
         raise ValueError(f"unknown screening mode {screening!r}")
     if engine == "auto":
         engine = "host"
+    if pad is not None and engine != "device":
+        raise ValueError("pad='bucket' requires engine='device' (the host "
+                         "driver gathers sub-problems; it has no use for "
+                         "canonical padded shapes)")
     if engine == "device":
         return _fit_path_device(
             X, y, lam, family, screening=screening, path_length=path_length,
             sigma_ratio=sigma_ratio, sigmas=sigmas, solver_tol=solver_tol,
             max_iter=max_iter, kkt_tol=kkt_tol, early_stop=early_stop,
-            max_refits=max_refits,
+            max_refits=max_refits, pad=pad,
         )
     return _fit_path_host(
         X, y, lam, family, screening=screening, path_length=path_length,
@@ -203,8 +216,8 @@ def fit_path(
 
 def _fit_path_device(X, y, lam, family, *, screening, path_length,
                      sigma_ratio, sigmas, solver_tol, max_iter, kkt_tol,
-                     early_stop, max_refits):
-    from .engine import _warn_unrepaired
+                     early_stop, max_refits, pad=None):
+    from .engine import _warn_unrepaired, fit_path_batched
 
     t0 = time.perf_counter()
     X = np.asarray(X)
@@ -217,6 +230,16 @@ def _fit_path_device(X, y, lam, family, *, screening, path_length,
         sigmas = null_sigma_grid(X, y, lam, family, path_length=path_length,
                                  sigma_ratio=sigma_ratio)
     sigmas = np.asarray(sigmas)
+    if pad == "bucket":
+        # route through the batched entry point's canonical bucket padding
+        # (B padded to ≥ 2 inert slots): shares compiled programs across
+        # nearby shapes, bit-identical to the PathService serving this
+        # request (same policy, same execution shape)
+        res = fit_path_batched(
+            X[None], y[None], lam, family, screening=screening,
+            sigmas=sigmas, solver_tol=solver_tol, max_iter=max_iter,
+            kkt_tol=kkt_tol, max_refits=max_refits, pad="bucket")
+        return res.path_results(early_stop=early_stop)[0]
     ep = path_engine(
         jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam), jnp.asarray(sigmas),
         family, screening=screening, max_iter=max_iter, tol=solver_tol,

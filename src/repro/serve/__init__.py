@@ -1,0 +1,50 @@
+"""repro.serve — shape-bucketed SLOPE path serving.
+
+The layer between a stream of heterogeneous fit requests and the batched
+device engine: power-of-two shape bucketing with inert zero padding
+(:mod:`~repro.serve.buckets`), admission queues with fill/deadline
+micro-batching and λ-sequence canonicalization
+(:mod:`~repro.serve.batcher`), an AOT compiled-program cache with warmup
+and eviction stats (:mod:`~repro.serve.cache`), and the synchronous
+``submit``/``poll`` front-end (:mod:`~repro.serve.service`).
+
+Import layering: ``buckets`` is NumPy-only and is imported *by*
+``repro.core.engine`` (the working-set bucket registry lives there), so it
+loads eagerly; the other modules import ``repro.core`` and load lazily via
+module ``__getattr__`` to stay clear of the initialisation cycle.
+"""
+
+from .buckets import (
+    BucketRegistry,
+    PaddedBatch,
+    ShapeBucketPolicy,
+    default_policy,
+    next_pow2,
+    pad_batch,
+)
+
+_LAZY = {
+    "ProgramCache": "cache",
+    "ProgramSpec": "cache",
+    "CompiledProgram": "cache",
+    "MicroBatcher": "batcher",
+    "LambdaCanonicalizer": "batcher",
+    "Pending": "batcher",
+    "PathService": "service",
+    "PathResponse": "service",
+    "CvResponse": "service",
+}
+
+__all__ = [
+    "BucketRegistry", "PaddedBatch", "ShapeBucketPolicy", "default_policy",
+    "next_pow2", "pad_batch", *sorted(_LAZY),
+]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(f".{_LAZY[name]}", __name__),
+                       name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,144 @@
+"""Admission queue and micro-batcher for the path service.
+
+Requests land in per-group FIFO queues — a *group* is everything that can
+legally share one compiled program: same family, same padded bucket shape,
+same path length and solver statics.  A group flushes when it **fills**
+(``max_batch`` requests waiting) or when its oldest request passes its
+**deadline** (``max_delay`` seconds in the queue).  The service is
+synchronous, so deadline flushes happen on the next ``submit``/``poll``
+call rather than on a timer thread — the deadline bounds added latency
+under load, not wall-clock staleness of an abandoned queue.
+
+λ-sequence canonicalization lives here too: requests that *name* a sequence
+(``("bh", q)`` etc.) resolve through one memoised table, so equal specs map
+to the same immutable array (one hash, byte-equal padded operands) instead
+of freshly generated near-duplicates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict, deque
+
+import numpy as np
+
+from ..core.lambda_seq import (
+    bh_sequence,
+    gaussian_sequence,
+    lasso_sequence,
+    oscar_sequence,
+)
+
+__all__ = ["Pending", "MicroBatcher", "LambdaCanonicalizer"]
+
+
+@dataclasses.dataclass
+class Pending:
+    """One queued request: opaque payload plus admission bookkeeping."""
+
+    rid: int
+    item: object
+    submitted: float   # service clock at admission
+    deadline: float    # submitted + max_delay
+
+
+class MicroBatcher:
+    """Per-group FIFO queues with fill- and deadline-triggered flushing."""
+
+    def __init__(self, max_batch: int = 8, max_delay: float = 0.02):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be ≥ 1, got {max_batch}")
+        if max_delay < 0:
+            raise ValueError(f"max_delay must be ≥ 0, got {max_delay}")
+        self.max_batch = max_batch
+        self.max_delay = max_delay
+        self._queues: OrderedDict[object, deque[Pending]] = OrderedDict()
+        self._lock = threading.Lock()
+
+    def admit(self, key, rid: int, item, now: float) -> bool:
+        """Queue one request; True ⇒ the group just filled and should flush."""
+        with self._lock:
+            q = self._queues.get(key)
+            if q is None:
+                q = deque()
+                self._queues[key] = q
+            q.append(Pending(rid, item, now, now + self.max_delay))
+            return len(q) >= self.max_batch
+
+    def due(self, now: float) -> list:
+        """Groups whose oldest request has passed its deadline."""
+        with self._lock:
+            return [k for k, q in self._queues.items()
+                    if q and q[0].deadline <= now]
+
+    def take(self, key, limit: int | None = None) -> list[Pending]:
+        """Pop up to ``limit`` (default ``max_batch``) requests, FIFO."""
+        limit = self.max_batch if limit is None else limit
+        with self._lock:
+            q = self._queues.get(key)
+            if not q:
+                self._queues.pop(key, None)
+                return []
+            batch = [q.popleft() for _ in range(min(limit, len(q)))]
+            if not q:
+                del self._queues[key]
+            return batch
+
+    def groups(self) -> list:
+        with self._lock:
+            return [k for k, q in self._queues.items() if q]
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+
+_SEQUENCES = {
+    "bh": bh_sequence,
+    "gaussian": gaussian_sequence,
+    "oscar": oscar_sequence,
+    "lasso": lasso_sequence,
+}
+
+
+class LambdaCanonicalizer:
+    """Memoised named-λ-sequence table: ``(kind, q, size) → one array``.
+
+    The returned arrays are read-only — every request naming the same spec
+    shares the same bytes, so padded batches built from them are byte-equal
+    and the program inputs (not just the program) are canonical.
+    """
+
+    def __init__(self):
+        self._memo: dict[tuple, np.ndarray] = {}
+        self._lock = threading.Lock()
+
+    def get(self, kind: str, q: float, size: int,
+            n: int | None = None) -> np.ndarray:
+        # n parameterizes only the gaussian recursion; keying every other
+        # kind on it would duplicate byte-identical arrays per problem size
+        key = (kind, float(q), int(size), n if kind == "gaussian" else None)
+        with self._lock:
+            lam = self._memo.get(key)
+            if lam is None:
+                fn = _SEQUENCES.get(kind)
+                if fn is None:
+                    raise ValueError(
+                        f"unknown λ sequence {kind!r}; choose from "
+                        f"{sorted(_SEQUENCES)}")
+                if kind == "lasso":
+                    lam = np.asarray(fn(size), np.float64)
+                elif kind == "gaussian":
+                    if n is None:
+                        raise ValueError("gaussian sequences need n")
+                    lam = np.asarray(fn(size, n, q), np.float64)
+                else:
+                    lam = np.asarray(fn(size, q), np.float64)
+                lam.flags.writeable = False
+                self._memo[key] = lam
+            return lam
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._memo)

@@ -1,0 +1,178 @@
+"""Keyed compiled-executable cache for the path service.
+
+The engine's jitted entry points already memoise compilations inside JAX,
+but a serving layer needs more than a hidden dispatch cache: it needs to
+**warm** programs before traffic arrives, **account** for compile time and
+hit rates, and **bound** resident executables with real eviction.  So this
+cache compiles ahead-of-time — ``jit(engine).lower(shapes...).compile()``
+on :class:`jax.ShapeDtypeStruct` specs, no example data needed — and owns
+the resulting executables outright (AOT executables bypass JAX's dispatch
+cache, so evicting an entry actually frees the program).
+
+AOT-compiled and jit-dispatched runs of the same program are bitwise
+identical (same HLO, same pipeline — asserted in ``tests/test_serve.py``),
+which is what lets the service guarantee served results match direct
+``fit_path_batched(pad="bucket")`` calls exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+import jax
+
+from ..core.losses import Family
+
+__all__ = ["ProgramSpec", "CompiledProgram", "ProgramCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """Static description of one compiled path program (the cache key).
+
+    ``working_set=None`` selects the masked full-width engine; an int is the
+    *resolved* static compact width W (power-of-two, resolution happens in
+    the service/engine, not here).  ``n_rows``/``n_cols`` are the padded
+    bucket shape, ``batch`` the padded slot count.
+    """
+
+    family: Family
+    batch: int
+    n_rows: int
+    n_cols: int
+    path_length: int
+    screening: str = "strong"
+    solver_tol: float = 1e-8
+    max_iter: int = 5000
+    kkt_tol: float = 1e-4
+    max_refits: int = 32
+    working_set: int | None = None
+    dtype: str = "float64"
+    y_dtype: str = "float64"
+
+    def short(self) -> str:
+        w = f"W{self.working_set}" if self.working_set else "masked"
+        return (f"{self.family.name}/B{self.batch}n{self.n_rows}"
+                f"p{self.n_cols}L{self.path_length}/{w}")
+
+
+class CompiledProgram:
+    """One AOT-compiled engine executable plus its call convention."""
+
+    def __init__(self, spec: ProgramSpec, compiled, build_seconds: float):
+        self.spec = spec
+        self.build_seconds = build_seconds
+        self.calls = 0
+        self._compiled = compiled
+
+    def __call__(self, Xs, ys, lam, sigmas, p_valid):
+        import jax.numpy as jnp
+
+        self.calls += 1
+        return self._compiled(
+            jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
+            jnp.asarray(sigmas), jnp.asarray(p_valid, jnp.int32))
+
+
+def _build(spec: ProgramSpec) -> tuple:
+    """Lower + compile the engine for ``spec`` from shape specs alone."""
+    from ..core.engine import batched_path_engine, compact_path_engine
+
+    m = spec.family.n_classes
+    f = np.dtype(spec.dtype)
+    B, N, P, L = spec.batch, spec.n_rows, spec.n_cols, spec.path_length
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((B, N, P), f),                      # Xs
+        sds((B, N), np.dtype(spec.y_dtype)),    # ys
+        sds((B, P * m), f),                     # per-member λ
+        sds((B, L), f),                         # per-member σ grids
+    )
+    pv = sds((B,), np.int32)
+    kw = dict(screening=spec.screening, max_iter=spec.max_iter,
+              tol=spec.solver_tol, kkt_tol=spec.kkt_tol,
+              max_refits=spec.max_refits)
+    t0 = time.perf_counter()
+    if spec.working_set is None:
+        lowered = batched_path_engine.lower(*args, spec.family, pv, **kw)
+    else:
+        lowered = compact_path_engine.lower(*args, spec.family, pv,
+                                            width=spec.working_set, **kw)
+    compiled = lowered.compile()
+    return compiled, time.perf_counter() - t0
+
+
+class ProgramCache:
+    """Bounded LRU cache of :class:`CompiledProgram` executables.
+
+    ``get`` compiles on miss (slow — seconds) and returns ``(program,
+    hit)``; ``warmup`` pre-compiles a list of specs so the first real
+    request never pays XLA latency.  All mutation happens under one lock;
+    compilation itself holds the lock too (simpler, and the service flushes
+    batches from one thread — concurrent builders would just duplicate
+    work).
+    """
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be ≥ 1, got {capacity}")
+        self.capacity = capacity
+        self._data: OrderedDict[ProgramSpec, CompiledProgram] = OrderedDict()
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._build_seconds = 0.0
+
+    def get(self, spec: ProgramSpec) -> tuple[CompiledProgram, bool]:
+        with self._lock:
+            prog = self._data.get(spec)
+            if prog is not None:
+                self._data.move_to_end(spec)
+                self._hits += 1
+                return prog, True
+            self._misses += 1
+            compiled, dt = _build(spec)
+            prog = CompiledProgram(spec, compiled, dt)
+            self._build_seconds += dt
+            self._data[spec] = prog
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self._evictions += 1
+            return prog, False
+
+    def warmup(self, specs) -> dict[str, float]:
+        """Compile every spec now; returns ``{spec.short(): build_seconds}``
+        (0.0 for specs that were already resident)."""
+        out = {}
+        for spec in specs:
+            prog, hit = self.get(spec)
+            out[spec.short()] = 0.0 if hit else prog.build_seconds
+        return out
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, spec: ProgramSpec) -> bool:
+        with self._lock:
+            return spec in self._data
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self._hits + self._misses
+            return {
+                "size": len(self._data),
+                "capacity": self.capacity,
+                "hits": self._hits,
+                "misses": self._misses,
+                "hit_rate": self._hits / total if total else 0.0,
+                "evictions": self._evictions,
+                "build_seconds": round(self._build_seconds, 3),
+                "programs": {s.short(): p.calls for s, p in self._data.items()},
+            }

@@ -1,0 +1,515 @@
+"""`PathService` — a synchronous, shape-bucketed SLOPE path service.
+
+The front door for a stream of heterogeneous fit requests::
+
+    svc = PathService(max_batch=8, max_delay=0.02)
+    rid = svc.submit(X, y, family=ols, lam_kind="bh", lam_q=0.1)
+    ...                       # more submits; groups flush as they fill
+    svc.flush()               # or wait for deadlines
+    resp = svc.poll(rid)      # PathResponse with native-shape betas
+
+Requests are padded into power-of-two buckets (:mod:`repro.serve.buckets`),
+micro-batched per compiled-program group (:mod:`repro.serve.batcher`), and
+executed through an AOT compiled-program cache (:mod:`repro.serve.cache`).
+Per-request results are unpadded back to native shapes before they are
+returned, with KKT status and queue/solve/occupancy telemetry attached.
+
+Guarantees and their boundaries:
+
+* A served request returns **bit-identical** coefficients to a direct
+  ``fit_path_batched(X[None], y[None], ..., pad="bucket")`` call: both
+  resolve execution shapes through the same policy/registry and batch
+  slots are bitwise member-invariant (B ≥ 2).  Exception: under the
+  *compact* backend, a co-batched neighbour overflowing the working-set
+  bucket sends the whole batch to the masked fallback for that repair
+  round — results then agree with the direct call only to solver
+  tolerance, and the response flags it in ``compact_fallback``.
+* The service is synchronous: deadlines are enforced on the next
+  ``submit``/``poll``/``flush`` call, bounding queueing latency under
+  load (there is no timer thread to wake an idle queue).
+
+CV requests (``cv_folds=K``) expand into K same-shape fold fits that ride
+the same queues as plain fits — they batch with anything else in their
+bucket — and aggregate into a :class:`CvResponse` (deviance-based min and
+1-SE selection) once every fold has been served.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict, deque
+
+import numpy as np
+
+from ..core.engine import (
+    CompactStats,
+    EnginePath,
+    _ws_bucket,
+    _WS_BUCKETS,
+    cv_fold_indices,
+    cv_select,
+    cv_val_deviance,
+    grow_ws_bucket,
+    null_sigma_grid,
+)
+from ..core.losses import Family, ols
+from .batcher import LambdaCanonicalizer, MicroBatcher
+from .buckets import ShapeBucketPolicy, default_policy, pad_batch
+from .cache import ProgramCache, ProgramSpec
+
+__all__ = ["PathService", "PathResponse", "CvResponse"]
+
+
+@dataclasses.dataclass
+class _Item:
+    """One admitted request, λ/σ already canonicalized, at native shape."""
+
+    X: np.ndarray
+    y: np.ndarray
+    lam: np.ndarray        # native (p·m,)
+    sigmas: np.ndarray     # native (L,)
+    family: Family
+    working_set: int | str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class _GroupKey:
+    """Everything that must match for two requests to share one compiled
+    program (and hence one batch slot assignment)."""
+
+    family: Family
+    n_rows: int
+    n_cols: int
+    path_length: int
+    screening: str
+    solver_tol: float
+    max_iter: int
+    kkt_tol: float
+    max_refits: int
+    working_set: int | str | None   # None | resolved pow2 int | "auto"
+    dtype: str
+    y_dtype: str
+
+
+@dataclasses.dataclass
+class PathResponse:
+    """One served path fit, unpadded to the request's native shape."""
+
+    rid: int
+    betas: np.ndarray            # (L, p) or (L, p, m)
+    sigmas: np.ndarray           # (L,)
+    lam: np.ndarray              # (p·m,)
+    n_samples: int
+    n_active: np.ndarray         # (L,)
+    n_screened: np.ndarray
+    n_violations: np.ndarray
+    refits: np.ndarray
+    solver_iters: np.ndarray
+    deviance: np.ndarray
+    kkt_unrepaired: np.ndarray   # (L,) bool per path step
+    kkt_ok: bool                 # no step hit the repair cap unclean
+    working_set: int | None
+    ws_size: np.ndarray | None
+    compact_fallback: np.ndarray | None
+    queue_s: float               # admission → flush
+    solve_s: float               # batch device wall (shared by the batch)
+    batch_size: int              # real requests in the flushed batch
+    batch_occupancy: float       # real requests / executed slots
+    padding_ratio: float         # padded n·p over native n·p
+    cache_hit: bool              # compiled program was already resident
+
+    @property
+    def total_violations(self) -> int:
+        return int(self.n_violations.sum())
+
+    def path_result(self, *, early_stop: bool = True):
+        """The same :class:`repro.core.path.PathResult` contract
+        ``fit_path`` returns, early stopping applied post-hoc."""
+        from ..core.path import engine_to_path_result
+
+        betas = self.betas
+        if betas.ndim == 2:
+            betas = betas[:, :, None]
+        ep = EnginePath(
+            betas=betas, n_active=self.n_active, n_screened=self.n_screened,
+            n_violations=self.n_violations, refits=self.refits,
+            solver_iters=self.solver_iters, deviance=self.deviance,
+            kkt_unrepaired=self.kkt_unrepaired,
+        )
+        return engine_to_path_result(ep, self.sigmas, self.lam, self.solve_s,
+                                     early_stop=early_stop, n=self.n_samples)
+
+
+@dataclasses.dataclass
+class CvResponse:
+    """Aggregated K-fold CV request (fold fits served like plain fits)."""
+
+    rid: int
+    sigmas: np.ndarray             # (L,) shared grid
+    lam: np.ndarray
+    val_deviance: np.ndarray       # (K, L)
+    mean_val_deviance: np.ndarray  # (L,)
+    se_val_deviance: np.ndarray    # (L,)
+    best_index: int                # per the request's selection rule
+    best_sigma: float
+    best_index_min: int
+    best_index_1se: int
+    selection: str
+    fold_responses: list[PathResponse]
+
+
+@dataclasses.dataclass
+class _CvPending:
+    fold_rids: list[int]
+    val_indices: list[np.ndarray]
+    X: np.ndarray
+    y: np.ndarray
+    lam: np.ndarray
+    sigmas: np.ndarray
+    family: Family
+    selection: str
+
+
+class PathService:
+    """Shape-bucketed micro-batching front-end over the device path engine.
+
+    ``max_batch`` requests per group trigger a fill flush; a lone request
+    flushes once ``max_delay`` seconds old (checked on the next service
+    call).  ``max_batch`` is padded up to the policy's batch bucket, so the
+    executed program always has the same slot count — unused slots carry
+    inert dummy problems.
+    """
+
+    def __init__(self, *, max_batch: int = 8, max_delay: float = 0.02,
+                 policy: ShapeBucketPolicy | None = None,
+                 cache: ProgramCache | None = None,
+                 canonicalizer: LambdaCanonicalizer | None = None,
+                 clock=time.perf_counter):
+        # explicit None checks: the cache and canonicalizer define __len__,
+        # so a freshly shared (still empty) instance is falsy
+        self.policy = policy if policy is not None else default_policy()
+        self.cache = cache if cache is not None else ProgramCache()
+        self.canonicalizer = (canonicalizer if canonicalizer is not None
+                              else LambdaCanonicalizer())
+        self.slots = self.policy.batch_bucket(max_batch)
+        self._batcher = MicroBatcher(max_batch=max_batch, max_delay=max_delay)
+        self._clock = clock
+        self._lock = threading.RLock()
+        self._next_rid = 0
+        # finished-but-unclaimed responses are bounded: clients that never
+        # poll must not pin betas arrays forever (oldest evicted, counted)
+        self.max_unclaimed = 4096
+        self._done: OrderedDict[int, PathResponse] = OrderedDict()
+        self._cv: dict[int, _CvPending] = {}
+        self._cv_hold: OrderedDict[int, PathResponse] = OrderedDict()
+        self._cv_fold_rids: set[int] = set()
+        self._results_evicted = 0
+        # telemetry
+        self._submitted = 0
+        self._completed = 0
+        self._batches = 0
+        self._flush_fill = 0
+        self._flush_deadline = 0
+        self._flush_forced = 0
+        # bounded: a long-running service must not accumulate one entry per
+        # request forever — percentiles are over the recent window
+        self._occupancies: deque = deque(maxlen=4096)
+        self._latencies: deque = deque(maxlen=4096)
+        self._padding_ratios: deque = deque(maxlen=4096)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, X, y, *, family: Family = ols,
+               lam: np.ndarray | None = None,
+               lam_kind: str = "bh", lam_q: float = 0.1,
+               sigmas: np.ndarray | None = None,
+               path_length: int = 100, sigma_ratio: float | None = None,
+               screening: str = "strong", solver_tol: float = 1e-8,
+               max_iter: int = 5000, kkt_tol: float = 1e-4,
+               max_refits: int = 32,
+               working_set: int | str | None = None,
+               cv_folds: int | None = None, stratify="auto",
+               selection: str = "min", _cv_fold: bool = False) -> int:
+        """Queue one fit (or, with ``cv_folds``, one K-fold CV) request.
+
+        Returns a request id for :meth:`poll`.  λ can be an explicit array
+        (length p·m) or a named sequence (``lam_kind``/``lam_q``) resolved
+        through the canonicalizer; the σ grid defaults to the paper's
+        recipe evaluated on the *native* (unpadded) problem, so served
+        results match direct ``fit_path_batched(pad="bucket")`` calls
+        bit-for-bit.
+        """
+        X = np.asarray(X)
+        y = np.asarray(y)
+        if X.ndim != 2 or y.shape[0] != X.shape[0]:
+            raise ValueError(f"X must be (n, p) with matching y; got "
+                             f"{X.shape} / {y.shape}")
+        n, p = X.shape
+        m = family.n_classes
+        if lam is None:
+            lam = self.canonicalizer.get(lam_kind, lam_q, p * m, n=n)
+        lam = np.asarray(lam)
+        if lam.shape != (p * m,):
+            raise ValueError(f"lam must have p·m = {p * m} entries, got "
+                             f"{lam.shape}")
+        if cv_folds is not None:
+            return self._submit_cv(
+                X, y, lam, family, n_folds=cv_folds, stratify=stratify,
+                selection=selection, sigmas=sigmas, path_length=path_length,
+                sigma_ratio=sigma_ratio, screening=screening,
+                solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
+                max_refits=max_refits, working_set=working_set)
+        if sigmas is None:
+            sigmas = null_sigma_grid(X, y, lam, family,
+                                     path_length=path_length,
+                                     sigma_ratio=sigma_ratio)
+        sigmas = np.asarray(sigmas)
+        N, P = self.policy.shape_bucket(n, p, family.name)
+        ws = working_set
+        if isinstance(ws, bool) or not (ws is None or ws == "auto"
+                                        or isinstance(ws, int)):
+            raise ValueError(f"working_set must be None, an int or 'auto', "
+                             f"got {ws!r}")
+        if isinstance(ws, int):
+            # resolve through the engine's own rule (validation + pow2 cap)
+            # so the service can never diverge from the direct path
+            ws = _ws_bucket(ws, N, P, (N, P, m, family.name, screening))
+        key = _GroupKey(
+            family=family, n_rows=N, n_cols=P, path_length=len(sigmas),
+            screening=screening, solver_tol=solver_tol, max_iter=max_iter,
+            kkt_tol=kkt_tol, max_refits=max_refits, working_set=ws,
+            dtype=X.dtype.name, y_dtype=y.dtype.name)
+        item = _Item(X=X, y=y, lam=lam, sigmas=sigmas, family=family,
+                     working_set=ws)
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._submitted += 1
+            if _cv_fold:
+                # register BEFORE admission: admitting can flush this very
+                # group (fill, or a deadline on a neighbour) synchronously,
+                # and the flush routes responses by this membership
+                self._cv_fold_rids.add(rid)
+            now = self._clock()
+            if self._batcher.admit(key, rid, item, now):
+                self._flush_group(key, trigger="fill")
+            self._flush_due(now)
+            return rid
+
+    def _submit_cv(self, X, y, lam, family, *, n_folds, stratify, selection,
+                   sigmas, path_length, sigma_ratio, screening, solver_tol,
+                   max_iter, kkt_tol, max_refits, working_set) -> int:
+        if sigmas is None:
+            sigmas = null_sigma_grid(X, y, lam, family,
+                                     path_length=path_length,
+                                     sigma_ratio=sigma_ratio)
+        sigmas = np.asarray(sigmas)
+        trains, vals = cv_fold_indices(y, n_folds, family=family,
+                                       stratify=stratify)
+        fold_rids = [
+            self.submit(X[tr], y[tr], family=family, lam=lam, sigmas=sigmas,
+                        screening=screening, solver_tol=solver_tol,
+                        max_iter=max_iter, kkt_tol=kkt_tol,
+                        max_refits=max_refits, working_set=working_set,
+                        _cv_fold=True)
+            for tr in trains
+        ]
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._submitted += 1
+            self._cv[rid] = _CvPending(
+                fold_rids=fold_rids, val_indices=vals, X=X, y=y, lam=lam,
+                sigmas=sigmas, family=family, selection=selection)
+            return rid
+
+    # -- flushing -----------------------------------------------------------
+
+    def flush(self) -> int:
+        """Force-flush every pending group; returns batches executed."""
+        with self._lock:
+            count = 0
+            for key in self._batcher.groups():
+                while self._flush_group(key, trigger="forced"):
+                    count += 1
+            return count
+
+    def _flush_due(self, now: float) -> None:
+        for key in self._batcher.due(now):
+            self._flush_group(key, trigger="deadline")
+
+    def _flush_group(self, key: _GroupKey, *, trigger: str) -> bool:
+        batch = self._batcher.take(key)
+        if not batch:
+            return False
+        now = self._clock()
+        family = key.family
+        m = family.n_classes
+        N, P, L = key.n_rows, key.n_cols, key.path_length
+        W = key.working_set
+        ws_key = None
+        if W == "auto":
+            ws_key = (N, P, m, family.name, key.screening)
+            W = _ws_bucket("auto", N, P, ws_key)
+        spec = ProgramSpec(
+            family=family, batch=self.slots, n_rows=N, n_cols=P,
+            path_length=L, screening=key.screening,
+            solver_tol=key.solver_tol, max_iter=key.max_iter,
+            kkt_tol=key.kkt_tol, max_refits=key.max_refits, working_set=W,
+            dtype=key.dtype, y_dtype=key.y_dtype)
+        pb = pad_batch([(it.item.X, it.item.y, it.item.lam, it.item.sigmas)
+                        for it in batch],
+                       n_rows=N, n_cols=P, n_slots=self.slots, n_classes=m)
+        prog, hit = self.cache.get(spec)
+        t0 = self._clock()
+        out = prog(pb.Xs, pb.ys, pb.lam, pb.sigmas, pb.p_valid)
+        stats = None
+        if W is not None:
+            out, stats = out
+        ep = EnginePath(*(np.asarray(a) for a in out))
+        if stats is not None:
+            stats = CompactStats(*(np.asarray(a) for a in stats))
+        wall = self._clock() - t0
+        B_real = pb.n_batch
+        # grow-on-overflow through the same helper (and the same registry)
+        # fit_path_batched(working_set="auto") uses
+        if ws_key is not None and stats is not None:
+            grow_ws_bucket(ws_key, stats.ws_size[:B_real],
+                           stats.fell_back[:B_real], W, P)
+        occupancy = B_real / self.slots
+        with self._lock:
+            self._batches += 1
+            self._occupancies.append(occupancy)
+            counter = {"fill": "_flush_fill", "deadline": "_flush_deadline",
+                       "forced": "_flush_forced"}[trigger]
+            setattr(self, counter, getattr(self, counter) + 1)
+            for i, pending in enumerate(batch):
+                item = pending.item
+                n_i, p_i = item.X.shape
+                betas = ep.betas[i][:, :p_i, :]
+                if m == 1:
+                    betas = betas[:, :, 0]
+                unrep = ep.kkt_unrepaired[i]
+                pad_ratio = (N * P) / (n_i * p_i)
+                resp = PathResponse(
+                    rid=pending.rid, betas=betas, sigmas=item.sigmas,
+                    lam=item.lam, n_samples=n_i,
+                    n_active=ep.n_active[i], n_screened=ep.n_screened[i],
+                    n_violations=ep.n_violations[i], refits=ep.refits[i],
+                    solver_iters=ep.solver_iters[i],
+                    deviance=ep.deviance[i], kkt_unrepaired=unrep,
+                    kkt_ok=not bool(unrep.any()), working_set=W,
+                    ws_size=None if stats is None else stats.ws_size[i],
+                    compact_fallback=(None if stats is None
+                                      else stats.fell_back[i]),
+                    queue_s=max(0.0, now - pending.submitted), solve_s=wall,
+                    batch_size=B_real, batch_occupancy=occupancy,
+                    padding_ratio=pad_ratio, cache_hit=hit)
+                self._completed += 1
+                self._latencies.append(resp.queue_s + wall)
+                self._padding_ratios.append(pad_ratio)
+                if pending.rid in self._cv_fold_rids:
+                    self._store(self._cv_hold, pending.rid, resp)
+                else:
+                    self._store(self._done, pending.rid, resp)
+        return True
+
+    def _store(self, table: OrderedDict, rid: int, resp) -> None:
+        table[rid] = resp
+        while len(table) > self.max_unclaimed:
+            old, _ = table.popitem(last=False)
+            # an evicted fold orphans its CV request; drop the membership
+            # so the set cannot grow unboundedly with abandoned folds
+            self._cv_fold_rids.discard(old)
+            self._results_evicted += 1
+
+    # -- collection ---------------------------------------------------------
+
+    def poll(self, rid: int, *, flush: bool = False):
+        """Collect a finished request (None while still pending).
+
+        ``flush=True`` force-flushes first — the synchronous way to say
+        "I need this result now" without waiting for fill or deadline.
+        Responses are handed out once; polling again returns None.
+        """
+        if flush:
+            self.flush()
+        with self._lock:
+            self._flush_due(self._clock())
+            if rid in self._cv:
+                return self._collect_cv(rid)
+            return self._done.pop(rid, None)
+
+    def _collect_cv(self, rid: int):
+        cv = self._cv[rid]
+        if not all(r in self._cv_hold for r in cv.fold_rids):
+            return None
+        del self._cv[rid]
+        folds = [self._cv_hold.pop(r) for r in cv.fold_rids]
+        self._cv_fold_rids.difference_update(cv.fold_rids)
+        betas = np.stack([f.betas for f in folds])
+        val_dev = cv_val_deviance(cv.X, cv.y, cv.val_indices, betas,
+                                  cv.family)
+        mean, se, best_min, best_1se = cv_select(val_dev)
+        best = best_1se if cv.selection == "1se" else best_min
+        self._completed += 1
+        return CvResponse(
+            rid=rid, sigmas=cv.sigmas, lam=cv.lam, val_deviance=val_dev,
+            mean_val_deviance=mean, se_val_deviance=se, best_index=best,
+            best_sigma=float(cv.sigmas[best]), best_index_min=best_min,
+            best_index_1se=best_1se, selection=cv.selection,
+            fold_responses=folds)
+
+    # -- warmup & telemetry -------------------------------------------------
+
+    def warmup(self, shapes, *, family: Family = ols, path_length: int = 100,
+               screening: str = "strong", solver_tol: float = 1e-8,
+               max_iter: int = 5000, kkt_tol: float = 1e-4,
+               max_refits: int = 32,
+               working_set: int | str | None = None,
+               dtype: str = "float64", y_dtype: str = "float64") -> dict:
+        """Pre-compile the programs a list of native ``(n, p)`` shapes will
+        need, so the first live request pays no XLA latency."""
+        specs = []
+        for n, p in shapes:
+            N, P = self.policy.shape_bucket(n, p, family.name)
+            W = working_set
+            if W is not None:
+                ws_key = (N, P, family.n_classes, family.name, screening)
+                W = _ws_bucket(W, N, P, ws_key)
+            specs.append(ProgramSpec(
+                family=family, batch=self.slots, n_rows=N, n_cols=P,
+                path_length=path_length, screening=screening,
+                solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
+                max_refits=max_refits, working_set=W, dtype=dtype,
+                y_dtype=y_dtype))
+        return self.cache.warmup(specs)
+
+    def stats(self) -> dict:
+        """Service-level telemetry: throughput, occupancy, latency
+        percentiles, cache and bucket-registry counters."""
+        with self._lock:
+            lat = np.asarray(self._latencies) * 1e3
+            occ = np.asarray(self._occupancies)
+            pads = np.asarray(self._padding_ratios)
+            return {
+                "submitted": self._submitted,
+                "completed": self._completed,
+                "pending": self._batcher.pending() + len(self._cv),
+                "unclaimed": len(self._done) + len(self._cv_hold),
+                "results_evicted": self._results_evicted,
+                "batches": self._batches,
+                "flush_fill": self._flush_fill,
+                "flush_deadline": self._flush_deadline,
+                "flush_forced": self._flush_forced,
+                "slots": self.slots,
+                "occupancy_mean": float(occ.mean()) if occ.size else 0.0,
+                "padding_ratio_mean": float(pads.mean()) if pads.size else 0.0,
+                "latency_ms_p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
+                "latency_ms_p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
+                "cache": self.cache.stats(),
+                "ws_buckets": {k: v for k, v in _WS_BUCKETS.stats().items()
+                               if k != "entries"},
+            }
