@@ -199,7 +199,8 @@ def batched_engine(full: bool):
     gathers; the batched arm is ONE compiled device program (lax.scan over
     the path × vmap over problems).  Default sizes are the CI smoke config.
     """
-    from repro.core import bh_sequence, fit_path, fit_path_batched, ols
+    from repro.api import PathSpec, Problem, SolverPolicy, slope_path
+    from repro.core import bh_sequence
     from repro.data import make_regression
 
     B = 8
@@ -211,24 +212,27 @@ def batched_engine(full: bool):
     # dense grid over the top decade of the path — the resolution regime CV
     # and stability selection explore, and where the host driver's per-step
     # dispatch dominates its per-step compute
-    kw = dict(path_length=L, sigma_ratio=0.1, solver_tol=1e-8,
-              max_iter=20000, kkt_tol=1e-4)
+    spec = PathSpec(lam=lam, path_length=L, sigma_ratio=0.1,
+                    early_stop=False)
+    host_pol = SolverPolicy(backend="host", solver_tol=1e-8,
+                            max_iter=20000, kkt_tol=1e-4)
+    masked_pol = SolverPolicy(backend="masked", solver_tol=1e-8,
+                              max_iter=20000, kkt_tol=1e-4)
+    batch = Problem(Xs, ys)
 
     # warm both compile caches (steady-state timing, as everywhere else
     # here), then best-of-repeats like the other sections — this row backs
     # the BENCH_ci.json perf trajectory, so one-shot noise is not OK
-    fit_path(Xs[0], ys[0], lam, ols, screening="strong", engine="host",
-             early_stop=False, **kw)
-    fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw)
+    slope_path(Problem(Xs[0], ys[0]), spec, host_pol)
+    slope_path(batch, spec, masked_pol)
 
     loop, t_loop = timed(
-        lambda: [fit_path(Xs[b], ys[b], lam, ols, screening="strong",
-                          engine="host", early_stop=False, **kw)
+        lambda: [slope_path(Problem(Xs[b], ys[b]), spec, host_pol)
                  for b in range(B)],
         repeats=2,
     )
     batched, t_batch = timed(
-        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw),
+        lambda: slope_path(batch, spec, masked_pol),
         repeats=2,
     )
 
@@ -248,7 +252,8 @@ def compact_engine(full: bool):
     peak working set to demonstrate the in-graph `lax.cond` fallback to the
     masked solve (flagged per step, results identical).
     """
-    from repro.core import bh_sequence, fit_path, fit_path_batched, ols
+    from repro.api import PathSpec, Problem, SolverPolicy, slope_path
+    from repro.core import bh_sequence
     from repro.data import make_regression
 
     B, n = 8, 80
@@ -259,32 +264,36 @@ def compact_engine(full: bool):
     Xs = np.stack([X for X, _ in probs])
     ys = np.stack([y for _, y in probs])
     lam = np.asarray(bh_sequence(p, q=0.05))
+    batch = Problem(Xs, ys)
     # dense grid over the top of the path: the sparse p ≫ n regime where the
     # strong rule keeps the working set ≪ W (peak |E| ≈ 60 here) and the
     # masked engine wastes (p − W)/p of every matvec.  solver_tol is pushed
     # hard so both backends land within the 1e-6 host-agreement bar; the
     # sub-problems stay well-conditioned at this depth, so the Cauchy stop
     # translates to ≲1e-7 coefficient precision
-    kw = dict(path_length=50, sigma_ratio=0.6, solver_tol=1e-14,
-              max_iter=60000, kkt_tol=1e-4)
+    spec = PathSpec(lam=lam, path_length=50, sigma_ratio=0.6,
+                    early_stop=False)
+    tol = dict(solver_tol=1e-14, max_iter=60000, kkt_tol=1e-4)
+    masked_pol = SolverPolicy(backend="masked", **tol)
+    compact_pol = SolverPolicy(backend="compact", working_set=W, **tol)
 
     # warm every compile cache, then best-of-repeats (BENCH_ci.json rows)
-    fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw)
-    fit_path_batched(Xs, ys, lam, ols, screening="strong", working_set=W, **kw)
+    slope_path(batch, spec, masked_pol)
+    slope_path(batch, spec, compact_pol)
 
     masked, t_masked = timed(
-        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong", **kw),
+        lambda: slope_path(batch, spec, masked_pol),
         repeats=2,
     )
     compact, t_compact = timed(
-        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong",
-                                 working_set=W, **kw),
+        lambda: slope_path(batch, spec, compact_pol),
         repeats=2,
     )
     assert not compact.compact_fallback.any(), "W bucket too small for config"
 
-    host = [fit_path(Xs[b], ys[b], lam, ols, screening="strong", engine="host",
-                     early_stop=False, **kw) for b in range(B)]
+    host_pol = SolverPolicy(backend="host", **tol)
+    host = [slope_path(Problem(Xs[b], ys[b]), spec, host_pol)
+            for b in range(B)]
     diff_host = max(np.abs(host[b].betas - compact.betas[b]).max()
                     for b in range(B))
     diff_masked = np.abs(masked.betas - compact.betas).max()
@@ -297,11 +306,10 @@ def compact_engine(full: bool):
     # overflow: a bucket below the peak working set must fall back to the
     # masked solve (in-graph lax.cond) and reproduce the masked results
     W_small = 16
-    fit_path_batched(Xs, ys, lam, ols, screening="strong",
-                     working_set=W_small, **kw)  # warm the W=16 compile
+    over_pol = SolverPolicy(backend="compact", working_set=W_small, **tol)
+    slope_path(batch, spec, over_pol)        # warm the W=16 compile
     over, t_over = timed(
-        lambda: fit_path_batched(Xs, ys, lam, ols, screening="strong",
-                                 working_set=W_small, **kw),
+        lambda: slope_path(batch, spec, over_pol),
         repeats=2,
     )
     assert over.compact_fallback.any(), "overflow case failed to trigger"
@@ -385,12 +393,18 @@ def serve(full: bool, stream: str = "mixed"):
     run_stream(svc)
     t_serve = time.perf_counter() - t0
     st = svc.stats()
+    # planner/program decisions + registry growth ride the perf row so the
+    # BENCH_ci.json trajectory shows WHAT executed, not just how fast
+    plans = "|".join(f"{k}:{v}" for k, v in sorted(st["plans"].items()))
+    wsb = st["ws_buckets"]
     row(f"serve/service_{stream}_R{R}", t_serve * 1e6,
         f"rps={R / t_serve:.2f} speedup={t_base / t_serve:.2f}x "
         f"occupancy={st['occupancy_mean']:.2f} "
         f"cache_hit_rate={st['cache']['hit_rate']:.2f} "
         f"programs={st['cache']['size']} "
-        f"p50_ms={st['latency_ms_p50']:.0f} p95_ms={st['latency_ms_p95']:.0f}")
+        f"p50_ms={st['latency_ms_p50']:.0f} p95_ms={st['latency_ms_p95']:.0f} "
+        f"plans={plans} "
+        f"ws_buckets={wsb['size']}sz/{wsb['updates']}upd/{wsb['hits']}hit")
 
     # -- service steady state: warm compiled-program cache ------------------
     # a FRESH service sharing the warm cache, so this row's telemetry is
@@ -408,6 +422,26 @@ def serve(full: bool, stream: str = "mixed"):
     row(f"serve/service_steady_{stream}_R{R}", t_steady * 1e6,
         f"rps={R / t_steady:.2f} cache_hit_rate={hit_rate:.2f} "
         f"occupancy={st['occupancy_mean']:.2f}")
+
+
+def resolve_only(spec: str) -> list[str]:
+    """Parse ``--only``'s comma list: strip whitespace, drop empty items,
+    dedupe preserving first-seen order, and reject unknown sweep names with
+    a clear error (silently skipping a typo'd sweep poisons the perf
+    trajectory with a half-empty BENCH_ci.json)."""
+    names: list[str] = []
+    unknown: list[str] = []
+    for name in (s.strip() for s in spec.split(",")):
+        if not name or name in names:
+            continue
+        (names if name in BENCHES else unknown).append(name)
+    if unknown:
+        raise ValueError(
+            f"unknown sweep name(s) {unknown}; choose from {sorted(BENCHES)}")
+    if not names:
+        raise ValueError("--only named no sweeps; choose from "
+                         f"{sorted(BENCHES)}")
+    return names
 
 
 BENCHES = {
@@ -434,16 +468,15 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact (CI: BENCH_ci.json)")
     args = ap.parse_args()
-    only = None
+    names = list(BENCHES)
     if args.only:
-        only = args.only.split(",")
-        unknown = [s for s in only if s not in BENCHES]
-        if unknown:
-            ap.error(f"unknown section(s) {unknown}; choose from {list(BENCHES)}")
+        try:
+            names = resolve_only(args.only)
+        except ValueError as e:
+            ap.error(str(e))
     print("name,us_per_call,derived")
-    for name, fn in BENCHES.items():
-        if only and name not in only:
-            continue
+    for name in names:
+        fn = BENCHES[name]
         if name == "serve":
             fn(args.full, stream=args.stream)
         else:

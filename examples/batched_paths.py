@@ -1,4 +1,4 @@
-"""Batched path engine: many SLOPE paths as one compiled device program.
+"""Batched path engine through the declarative front door.
 
     PYTHONPATH=src python examples/batched_paths.py
 
@@ -8,6 +8,10 @@ engine fits in a single ``lax.scan`` × ``vmap`` program:
 1. a batch of B independent (X, y) problems (bootstrap replicates here),
 2. K-fold cross-validation over one σ grid, with the best σ selected from
    held-out deviance.
+
+Everything goes through ``repro.api.slope_path``: a ``Problem`` +
+``PathSpec`` + ``SolverPolicy`` triple, with ``backend="auto"`` resolved by
+the planner (``res.plan.explain()`` says what ran and why).
 """
 
 import jax
@@ -18,7 +22,7 @@ import time
 
 import numpy as np
 
-from repro.core import bh_sequence, cv_path, fit_path, fit_path_batched, ols
+from repro.api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
 from repro.data import make_regression
 
 
@@ -26,27 +30,31 @@ def main():
     rng = np.random.default_rng(0)
     n, p, k, B = 50, 80, 6, 8
     X, y, beta_true = make_regression(n, p, k=k, rho=0.2, seed=0, noise=0.4)
-    lam = np.asarray(bh_sequence(p, q=0.1))
+    lam = LambdaSpec("bh", q=0.1)
     # dense grid over the top decade of the path: the resolution regime
     # model selection explores, and where batching pays off most on CPU
-    kw = dict(path_length=40, sigma_ratio=0.1, solver_tol=1e-9, max_iter=10000)
+    spec = PathSpec(lam=lam, path_length=40, sigma_ratio=0.1)
+    policy = SolverPolicy(solver_tol=1e-9, max_iter=10000)
 
     # -- 1. bootstrap replicates, fitted as ONE compiled program ------------
     idx = rng.integers(0, n, size=(B, n))
-    Xs = X[idx]                      # (B, n, p) resampled designs
-    ys = y[idx]
+    batch = Problem(X[idx], y[idx])          # (B, n, p) resampled designs
+    single = Problem(X, y)
     # warm the compile caches first: both arms are timed steady-state
-    fit_path_batched(Xs, ys, lam, ols, **kw)
-    fit_path(Xs[0], ys[0], lam, ols, early_stop=False, **kw)
+    slope_path(batch, spec, policy)
+    host_spec = PathSpec(lam=lam, path_length=40, sigma_ratio=0.1,
+                         early_stop=False)
+    slope_path(Problem(X[idx][0], y[idx][0]), host_spec, policy)
     t0 = time.perf_counter()
-    res = fit_path_batched(Xs, ys, lam, ols, **kw)
+    res = slope_path(batch, spec, policy)
     t_batched = time.perf_counter() - t0
+    print(res.plan.explain())
     t0 = time.perf_counter()
     for b in range(B):
-        fit_path(Xs[b], ys[b], lam, ols, early_stop=False, **kw)
+        slope_path(Problem(X[idx][b], y[idx][b]), host_spec, policy)
     t_loop = time.perf_counter() - t0
-    print(f"bootstrap B={B}: batched {t_batched:.2f}s vs looped {t_loop:.2f}s "
-          f"({t_loop / t_batched:.1f}x)")
+    print(f"\nbootstrap B={B}: batched {t_batched:.2f}s vs looped "
+          f"{t_loop:.2f}s ({t_loop / t_batched:.1f}x)")
 
     # bootstrap support stability: fraction of replicates selecting each
     # true predictor at the last path point
@@ -55,36 +63,44 @@ def main():
     print(f"true-support selection frequency across replicates: {stab:.2f}")
 
     # -- 2. K-fold CV on a shared sigma grid --------------------------------
-    cv = cv_path(X, y, lam, ols, n_folds=5, **kw)
+    cv = slope_path(single,
+                    PathSpec(lam=lam, path_length=40, sigma_ratio=0.1,
+                             cv_folds=5),
+                    policy)
     print(f"\n5-fold CV in {cv.total_time:.2f}s — "
           f"best sigma {cv.best_sigma:.4f} (index {cv.best_index}, "
           f"mean held-out deviance {cv.mean_val_deviance[cv.best_index]:.3f} "
-          f"vs null {cv.mean_val_deviance[0]:.3f})")
+          f"vs null {cv.mean_val_deviance[0]:.3f}) "
+          f"[{cv.plan.summary()}]")
 
     # -- 3. compact working-set engine at p >> n ----------------------------
-    # the masked engine pays O(n*p) per FISTA iteration; with a working-set
-    # bucket the screened columns are gathered on device into (n, W) and the
-    # solve costs O(n*W).  Overflowing steps fall back to the masked solve
-    # in-graph (flagged in compact_fallback) and the bucket grows for the
-    # next same-shape call.
+    # with p >= 2n the planner picks the compact engine on its own: the
+    # masked engine pays O(n*p) per FISTA iteration, the compact engine
+    # gathers the screened columns into (n, W) on device and pays O(n*W).
+    # Overflowing steps fall back to the masked solve in-graph (flagged in
+    # compact_fallback) and the shared bucket registry grows for the next
+    # same-shape call.
     n2, p2 = 60, 1024
     X2, y2, _ = make_regression(n2, p2, k=5, rho=0.0, seed=3, noise=0.3)
     idx2 = rng.integers(0, n2, size=(B, n2))
-    lam2 = np.asarray(bh_sequence(p2, q=0.05))
-    kw2 = dict(path_length=40, sigma_ratio=0.5, solver_tol=1e-9,
-               max_iter=10000)
-    fit_path_batched(X2[idx2], y2[idx2], lam2, ols, **kw2)
-    fit_path_batched(X2[idx2], y2[idx2], lam2, ols, working_set="auto", **kw2)
+    batch2 = Problem(X2[idx2], y2[idx2])
+    spec2 = PathSpec(lam=LambdaSpec("bh", q=0.05), path_length=40,
+                     sigma_ratio=0.5)
+    masked_policy = SolverPolicy(backend="masked", solver_tol=1e-9,
+                                 max_iter=10000)
+    auto_policy = SolverPolicy(solver_tol=1e-9, max_iter=10000)
+    slope_path(batch2, spec2, masked_policy)
+    slope_path(batch2, spec2, auto_policy)
     t0 = time.perf_counter()
-    masked = fit_path_batched(X2[idx2], y2[idx2], lam2, ols, **kw2)
+    masked = slope_path(batch2, spec2, masked_policy)
     t_masked = time.perf_counter() - t0
     t0 = time.perf_counter()
-    compact = fit_path_batched(X2[idx2], y2[idx2], lam2, ols,
-                               working_set="auto", **kw2)
+    compact = slope_path(batch2, spec2, auto_policy)
     t_compact = time.perf_counter() - t0
     diff = np.abs(masked.betas - compact.betas).max()
-    print(f"\ncompact W={compact.working_set} at p={p2}: {t_compact:.2f}s vs "
-          f"masked {t_masked:.2f}s ({t_masked / t_compact:.1f}x), "
+    print(f"\nplanner chose {compact.plan.summary()} at p={p2}: "
+          f"{t_compact:.2f}s vs masked {t_masked:.2f}s "
+          f"({t_masked / t_compact:.1f}x), "
           f"peak working set {int(compact.ws_size.max())}, "
           f"fallback steps {int(compact.compact_fallback.sum())}, "
           f"max |beta| diff {diff:.1e}")

@@ -9,9 +9,11 @@ service pads requests into power-of-two buckets, micro-batches same-bucket
 requests into one compiled program, and caches compiled executables — so a
 whole stream funnels through a handful of compilations.
 
-Served results are bit-identical to direct ``fit_path_batched(...,
-pad="bucket")`` calls: the service and the engine resolve execution shapes
-through the same bucket policy.
+Requests are the same declarative ``(Problem, PathSpec, SolverPolicy)``
+triples the direct ``repro.api.slope_path`` front door takes, so served
+results are bit-identical to direct ``pad="bucket"`` execution of the same
+specs, and ``svc.stats()["plans"]`` shows which execution plans actually
+ran.
 """
 
 import jax
@@ -22,7 +24,7 @@ import time
 
 import numpy as np
 
-from repro.core import bh_sequence, fit_path_batched, ols
+from repro.api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
 from repro.data import make_regression
 from repro.serve import PathService
 
@@ -33,7 +35,7 @@ def make_stream(R, rng):
         n = int(rng.integers(33, 64))
         p = int(rng.integers(40, 120))
         X, y, _ = make_regression(n, p, k=5, rho=0.2, seed=i)
-        reqs.append((X, y, np.asarray(bh_sequence(p, q=0.1))))
+        reqs.append(Problem(X, y))
     return reqs
 
 
@@ -41,22 +43,31 @@ def main():
     rng = np.random.default_rng(0)
     R = 12
     reqs = make_stream(R, rng)
-    shapes = sorted({X.shape for X, _, _ in reqs})
+    shapes = sorted({pb.X.shape for pb in reqs})
     print(f"{R} requests over {len(shapes)} distinct shapes: {shapes}\n")
-    kw = dict(path_length=40, sigma_ratio=0.1, solver_tol=1e-8,
-              max_iter=20000)
+    # early_stop=False: served responses always carry the full σ grid, so
+    # the one-at-a-time arm and the bitwise comparison run the same grid
+    spec = PathSpec(lam=LambdaSpec("bh", q=0.1), path_length=40,
+                    sigma_ratio=0.1, early_stop=False)
+    policy = SolverPolicy(solver_tol=1e-8, max_iter=20000)
+    # baseline arm: the device engine one request at a time, native shapes —
+    # a fresh XLA compilation per distinct (n, p)
+    unbatched = SolverPolicy(backend="masked", solver_tol=1e-8,
+                             max_iter=20000)
+    padded = SolverPolicy(backend="masked", pad="bucket", solver_tol=1e-8,
+                          max_iter=20000)
 
     # -- one-request-at-a-time baseline: a compile per distinct shape -------
     t0 = time.perf_counter()
-    base = [fit_path_batched(X[None], y[None], lam, ols, kkt_tol=1e-4, **kw)
-            for X, y, lam in reqs]
+    base = [slope_path(pb, spec, unbatched) for pb in reqs]
     t_base = time.perf_counter() - t0
-    print(f"one-at-a-time: {t_base:.1f}s  ({R / t_base:.2f} req/s)")
+    print(f"one-at-a-time: {t_base:.1f}s  ({R / t_base:.2f} req/s)  "
+          f"[{base[0].plan.summary()}]")
 
     # -- served: bucketed, micro-batched, compiled-program cache ------------
     svc = PathService(max_batch=8, max_delay=0.05)
     t0 = time.perf_counter()
-    rids = [svc.submit(X, y, lam=lam, **kw) for X, y, lam in reqs]
+    rids = [svc.submit(problem=pb, path=spec, policy=policy) for pb in reqs]
     svc.flush()
     resps = [svc.poll(r) for r in rids]
     t_serve = time.perf_counter() - t0
@@ -65,19 +76,18 @@ def main():
           f"{t_base / t_serve:.1f}x) — {st['cache']['size']} compiled "
           f"programs, occupancy {st['occupancy_mean']:.2f}, "
           f"p50 {st['latency_ms_p50']:.0f}ms / p95 {st['latency_ms_p95']:.0f}ms")
+    print(f"executed plans: {st['plans']}")
 
-    # served == direct padded call, bit for bit
-    X, y, lam = reqs[0]
-    direct = fit_path_batched(X[None], y[None], lam, ols, pad="bucket",
-                              kkt_tol=1e-4, **kw)
-    assert np.array_equal(resps[0].betas, direct.betas[0])
-    diff = float(np.abs(resps[0].betas - base[0].betas[0]).max())
+    # served == direct padded call of the SAME spec triple, bit for bit
+    direct = slope_path(reqs[0], spec, padded)
+    assert np.array_equal(resps[0].betas, direct.betas)
+    diff = float(np.abs(resps[0].betas - base[0].betas).max())
     print(f"\nserved betas == direct pad='bucket' betas (bitwise); "
           f"vs native shape max|Δ| = {diff:.1e} (solver tolerance)")
 
     # steady state: the cache is warm, requests just batch and run
     t0 = time.perf_counter()
-    rids = [svc.submit(X, y, lam=lam, **kw) for X, y, lam in reqs]
+    rids = [svc.submit(problem=pb, path=spec, policy=policy) for pb in reqs]
     svc.flush()
     assert all(svc.poll(r) is not None for r in rids)
     t_steady = time.perf_counter() - t0
@@ -86,9 +96,11 @@ def main():
 
     # -- a CV request rides the same queues as plain fits -------------------
     X, y, _ = make_regression(60, 50, k=4, rho=0.0, seed=99, noise=0.3)
-    lam = np.asarray(bh_sequence(50, q=0.1))
-    rid = svc.submit(X, y, lam=lam, cv_folds=4, selection="1se",
-                     path_length=25, solver_tol=1e-9, max_iter=5000)
+    rid = svc.submit(
+        problem=Problem(X, y),
+        path=PathSpec(lam=LambdaSpec("bh", q=0.1), path_length=25,
+                      cv_folds=4, selection="1se"),
+        policy=SolverPolicy(solver_tol=1e-9, max_iter=5000))
     cv = svc.poll(rid, flush=True)
     print(f"\n4-fold CV via the service: best σ (1-SE rule) = "
           f"{cv.best_sigma:.4f} at index {cv.best_index} "

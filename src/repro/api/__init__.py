@@ -1,0 +1,47 @@
+"""repro.api — the declarative front door for SLOPE path fitting.
+
+One spec triple describes any fit this repo can run::
+
+    from repro.api import Problem, PathSpec, LambdaSpec, SolverPolicy, slope_path
+
+    problem = Problem(X, y, family=ols)            # data + family (+ weights)
+    spec = PathSpec(lam=LambdaSpec("bh", q=0.1))   # penalty + σ grid + CV
+    policy = SolverPolicy()                        # backend="auto" → planned
+
+    print(plan_execution(problem, spec, policy).explain())  # why each choice
+    res = slope_path(problem, spec, policy)        # PathResult / Batched / Cv
+
+The planner (:mod:`repro.api.plan`) resolves ``"auto"`` knobs into an
+explicit :class:`ExecutionPlan`; :class:`SlopE` wraps the same machinery in
+estimator-style ``fit``/``predict``/``coef_``.  The legacy entry points
+(``repro.core.fit_path`` / ``fit_path_batched`` / ``cv_path`` and
+``PathService.submit(X, y, ...)``) are thin shims over this layer — old
+kwargs keep working bit-identically and warn once per knob (see
+``docs/MIGRATION.md`` for the mapping).
+"""
+
+from .estimator import SlopE
+from .fit import default_service, slope_path
+from .plan import ExecutionPlan, plan_execution
+from .specs import (
+    LambdaSpec,
+    PathSpec,
+    Problem,
+    SolverPolicy,
+    as_lambda_spec,
+    shared_canonicalizer,
+)
+
+__all__ = [
+    "Problem",
+    "LambdaSpec",
+    "PathSpec",
+    "SolverPolicy",
+    "ExecutionPlan",
+    "plan_execution",
+    "slope_path",
+    "SlopE",
+    "as_lambda_spec",
+    "default_service",
+    "shared_canonicalizer",
+]

@@ -1,0 +1,47 @@
+"""Legacy-kwarg deprecation plumbing for the PR-1..3 entry points.
+
+The old string knobs (``engine=``, ``pad=``, ``working_set=``,
+``cv_path(stratify=..., selection=...)``) keep working — the shims in
+:mod:`repro.core.path` / :mod:`repro.core.engine` translate them into
+(:class:`~repro.api.specs.Problem`, :class:`~repro.api.specs.PathSpec`,
+:class:`~repro.api.specs.SolverPolicy`) triples — but each one warns
+exactly ONCE per process per (function, kwarg) pair.  Python's default
+warning filters dedupe per call site, which hides repeat offenders in
+loops and spams distinct ones; one warning per knob is the contract the
+shim tests pin (``tests/test_api.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+__all__ = ["warn_legacy", "reset_legacy_warnings", "UNSET"]
+
+# sentinel distinguishing "caller never passed this kwarg" from an explicit
+# legacy value (the legacy defaults themselves must not warn)
+UNSET = object()
+
+_WARNED: set[tuple[str, str]] = set()
+_LOCK = threading.Lock()
+
+
+def warn_legacy(func: str, kwarg: str, replacement: str) -> None:
+    """Emit one DeprecationWarning per (func, kwarg) per process."""
+    key = (func, kwarg)
+    with _LOCK:
+        if key in _WARNED:
+            return
+        _WARNED.add(key)
+    warnings.warn(
+        f"{func}({kwarg}=...) is deprecated; express it as {replacement} and "
+        f"call repro.api.slope_path (see docs/MIGRATION.md)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset_legacy_warnings() -> None:
+    """Forget which legacy kwargs already warned (test isolation hook)."""
+    with _LOCK:
+        _WARNED.clear()

@@ -1,0 +1,120 @@
+"""``SlopE`` — an estimator-style wrapper over the declarative front door.
+
+The familiar fit/predict shape (R's ``SLOPE(x, y, ...)``, scikit-learn's
+``Estimator.fit``) on top of :func:`repro.api.fit.slope_path`::
+
+    est = SlopE(family=logistic, lam=LambdaSpec("bh", q=0.1))
+    est.fit(X, y)            # K-fold CV (default 5) picks σ, then refits
+    est.predict(X_new)       # family-appropriate predictions
+    est.coef_                # (p,) or (p, m) at the selected σ
+
+With ``cv=None`` no model selection happens: the full path is fitted and
+``coef_`` is taken at the last (least-regularized) grid point — pass
+``cv=K`` (or a ``PathSpec`` with ``cv_folds``) for a principled choice.
+All heavy lifting — planning, backends, screening — is the front door's;
+the estimator only selects and stores.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .fit import slope_path
+from .specs import LambdaSpec, PathSpec, Problem, SolverPolicy, as_lambda_spec
+
+__all__ = ["SlopE"]
+
+
+class SlopE:
+    """SLOPE path estimator: CV-select σ, refit, predict.
+
+    Parameters mirror the spec dataclasses: ``lam`` takes a
+    :class:`~repro.api.specs.LambdaSpec`, a recipe name or an explicit
+    array; ``path``/``policy`` override the full specs (a ``path`` with
+    ``cv_folds`` set wins over ``cv=``).
+    """
+
+    def __init__(self, *, family=None, lam=None, path: PathSpec | None = None,
+                 policy: SolverPolicy | None = None, cv: int | None = 5,
+                 selection: str = "min"):
+        from ..core.losses import ols
+
+        self.family = family if family is not None else ols
+        self.lam = as_lambda_spec(lam) if lam is not None else LambdaSpec()
+        self.path = path
+        self.policy = policy if policy is not None else SolverPolicy()
+        self.cv = cv
+        self.selection = selection
+
+    # -- fitting ------------------------------------------------------------
+
+    def _path_spec(self) -> PathSpec:
+        if self.path is not None:
+            return self.path
+        return PathSpec(lam=self.lam, cv_folds=self.cv,
+                        selection=self.selection)
+
+    def fit(self, X, y, *, weights=None) -> "SlopE":
+        problem = Problem(X, y, family=self.family, weights=weights)
+        if problem.batched:
+            raise ValueError("SlopE fits one (n, p) problem; use "
+                             "slope_path for batches")
+        spec = self._path_spec()
+        if spec.cv_folds:
+            self.cv_ = slope_path(problem, spec, self.policy)
+            # refit the full data on the CV grid; σ index stays aligned
+            refit_spec = PathSpec(lam=spec.lam, sigmas=self.cv_.sigmas,
+                                  early_stop=False)
+            self.path_ = slope_path(problem, refit_spec, self.policy)
+            self.sigma_index_ = int(self.cv_.best_index)
+            self.sigma_ = float(self.cv_.best_sigma)
+        else:
+            self.cv_ = None
+            self.path_ = slope_path(problem, spec, self.policy)
+            self.sigma_index_ = len(self.path_.sigmas) - 1
+            self.sigma_ = float(self.path_.sigmas[self.sigma_index_])
+        # the plan of the fit coef_ came from; the CV selection run's plan
+        # (fold-batched, usually a different backend) is at self.cv_.plan
+        self.plan_ = self.path_.plan
+        self.coef_ = np.asarray(self.path_.betas[self.sigma_index_])
+        return self
+
+    # -- prediction ---------------------------------------------------------
+
+    def _check_fitted(self):
+        if not hasattr(self, "coef_"):
+            raise ValueError("this SlopE instance is not fitted yet; call "
+                             "fit(X, y) first")
+
+    def decision_function(self, X) -> np.ndarray:
+        """The linear predictor z = Xβ at the selected σ."""
+        self._check_fitted()
+        return np.asarray(X) @ self.coef_
+
+    def predict(self, X) -> np.ndarray:
+        """Family-appropriate predictions: the mean response for OLS and
+        Poisson, hard class labels for logistic/multinomial."""
+        z = self.decision_function(X)
+        name = self.family.name
+        if name == "ols":
+            return z
+        if name == "poisson":
+            return np.exp(z)
+        if name == "logistic":
+            return (z > 0).astype(np.int64)
+        if name == "multinomial":
+            return np.argmax(z, axis=-1)
+        raise ValueError(f"no prediction rule for family {name!r}")
+
+    def predict_proba(self, X) -> np.ndarray:
+        """Class probabilities (logistic and multinomial families)."""
+        z = self.decision_function(X)
+        if self.family.name == "logistic":
+            p1 = 1.0 / (1.0 + np.exp(-z))
+            return np.stack([1.0 - p1, p1], axis=-1)
+        if self.family.name == "multinomial":
+            z = z - z.max(axis=-1, keepdims=True)
+            e = np.exp(z)
+            return e / e.sum(axis=-1, keepdims=True)
+        raise ValueError(
+            f"predict_proba is for classifiers, not {self.family.name!r}")

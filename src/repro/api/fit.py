@@ -1,0 +1,154 @@
+"""``slope_path`` — the one declarative front door for SLOPE path fitting.
+
+Every way this repo can fit a regularization path — gathered host driver,
+masked/compact batched device engines, K-fold CV, canonical-bucket padding,
+the micro-batching path service — is reachable from one call::
+
+    from repro.api import Problem, PathSpec, SolverPolicy, slope_path
+
+    res = slope_path(Problem(X, y, family=ols),
+                     PathSpec(lam=LambdaSpec("bh", q=0.1), path_length=50),
+                     SolverPolicy())          # backend="auto" → planned
+
+``slope_path`` resolves the spec triple through
+:func:`repro.api.plan.plan_execution` and dispatches to the SAME private
+implementations the legacy entry points (``fit_path``,
+``fit_path_batched``, ``cv_path`` — now thin shims over this layer) used,
+so planner-selected execution is bit-identical to the equivalent explicit
+legacy kwargs.  The resolved :class:`~repro.api.plan.ExecutionPlan` is
+attached to every result as ``.plan`` (``res.plan.explain()`` says why).
+
+Returns by spec shape: a :class:`~repro.core.path.PathResult` for one
+``(n, p)`` problem, a :class:`~repro.core.engine.BatchedPathResult` for a
+``(B, n, p)`` batch, a :class:`~repro.core.engine.CvPathResult` when
+``PathSpec.cv_folds`` is set — and, for ``SolverPolicy(backend="serve")``,
+the service's :class:`~repro.serve.service.PathResponse` /
+:class:`~repro.serve.service.CvResponse` (telemetry included), bit-identical
+to the direct padded call by the serve layer's contract.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from .plan import ExecutionPlan, plan_execution
+from .specs import PathSpec, Problem, SolverPolicy, apply_weights
+
+__all__ = ["slope_path", "default_service"]
+
+_SERVICE_LOCK = threading.Lock()
+_DEFAULT_SERVICE = None
+
+
+def default_service():
+    """The process-wide :class:`~repro.serve.PathService` backing
+    ``SolverPolicy(backend="serve")`` calls (created on first use)."""
+    global _DEFAULT_SERVICE
+    with _SERVICE_LOCK:
+        if _DEFAULT_SERVICE is None:
+            from ..serve.service import PathService
+
+            _DEFAULT_SERVICE = PathService()
+        return _DEFAULT_SERVICE
+
+
+def _ws_arg(plan: ExecutionPlan, policy: SolverPolicy):
+    """The engine-facing working_set knob for a resolved plan.
+
+    The RAW policy value is passed through (not the plan's previewed W):
+    the engines re-resolve "auto" through the same shared registry, which
+    keeps grow-on-overflow semantics identical to the legacy entry points.
+    """
+    if plan.mode != "compact":
+        return None
+    ws = policy.working_set
+    return "auto" if ws is None or ws == "auto" else ws
+
+
+def slope_path(problem: Problem, path: PathSpec | None = None,
+               policy: SolverPolicy | None = None, *,
+               plan: ExecutionPlan | None = None):
+    """Fit a SLOPE path for a declarative ``(problem, path, policy)`` triple.
+
+    ``plan`` overrides the planner (pass a pre-computed
+    :func:`~repro.api.plan.plan_execution` result to skip re-planning);
+    otherwise the triple is planned here and the plan is threaded through
+    to the executing layer (including the service).  Served responses
+    always carry the full σ grid — apply early stopping through
+    ``resp.path_result(early_stop=True)``.
+    """
+    from ..core.engine import _cv_path, _fit_path_batched
+    from ..core.path import _fit_path_device, _fit_path_host
+
+    if not isinstance(problem, Problem):
+        raise TypeError(f"problem must be a repro.api.Problem, got "
+                        f"{type(problem).__name__}")
+    path = path if path is not None else PathSpec()
+    policy = policy if policy is not None else SolverPolicy()
+    pln = plan if plan is not None else plan_execution(problem, path, policy)
+
+    if pln.backend == "serve":
+        return _serve_path(problem, path, policy, pln)
+
+    X, y = apply_weights(problem)
+    family = problem.family
+    n, p, m = problem.n, problem.p, family.n_classes
+    lam = path.lam.resolve(p * m, n=n)
+    if getattr(lam, "ndim", 1) == 2 and not problem.batched:
+        raise ValueError(
+            f"a per-problem (B, p·m) λ stack (got {lam.shape}) needs a "
+            f"batched (B, n, p) problem; this Problem is a single (n, p)")
+
+    kw = dict(screening=policy.screening, path_length=path.path_length,
+              sigma_ratio=path.sigma_ratio, sigmas=path.sigmas,
+              solver_tol=policy.solver_tol, max_iter=policy.max_iter,
+              kkt_tol=policy.kkt_tol)
+
+    if path.cv_folds:
+        if path.sigmas is not None:
+            raise ValueError(
+                "PathSpec.sigmas cannot be combined with cv_folds for "
+                "direct execution: the CV grid is computed once from the "
+                "full data so every fold shares it")
+        kw.pop("sigmas")
+        res = _cv_path(X, y, lam, family, n_folds=path.cv_folds,
+                       max_refits=policy.max_refits,
+                       working_set=_ws_arg(pln, policy),
+                       stratify=path.stratify, selection=path.selection,
+                       pad=pln.pad, **kw)
+    elif pln.mode == "gathered":
+        res = _fit_path_host(X, y, lam, family, early_stop=path.early_stop,
+                             verbose=policy.verbose, **kw)
+    elif problem.batched:
+        res = _fit_path_batched(X, y, lam, family,
+                                max_refits=policy.max_refits,
+                                working_set=_ws_arg(pln, policy),
+                                pad=pln.pad, **kw)
+    elif pln.mode == "masked":
+        # identical call path to the legacy fit_path(engine="device")
+        res = _fit_path_device(X, y, lam, family, early_stop=path.early_stop,
+                               max_refits=policy.max_refits, pad=pln.pad,
+                               **kw)
+    else:  # compact, single problem: batch of one through the device engine
+        batched = _fit_path_batched(X[None], y[None], lam, family,
+                                    max_refits=policy.max_refits,
+                                    working_set=_ws_arg(pln, policy),
+                                    pad=pln.pad, **kw)
+        res = batched.path_results(early_stop=path.early_stop)[0]
+    res.plan = pln
+    return res
+
+
+def _serve_path(problem: Problem, path: PathSpec, policy: SolverPolicy,
+                pln: ExecutionPlan):
+    """Route one spec triple through the default PathService and wait."""
+    if problem.batched:
+        raise ValueError(
+            "backend='serve' takes single (n, p) problems — submit batch "
+            "members individually; the service micro-batches them")
+    svc = default_service()
+    rid = svc.submit(problem=problem, path=path, policy=policy, plan=pln)
+    resp = svc.poll(rid, flush=True)
+    if resp is not None:
+        resp.plan = pln  # same introspection surface as direct results
+    return resp

@@ -47,7 +47,15 @@ from .kkt import kkt_violations_masked
 from .lambda_seq import path_start_sigma, sigma_grid
 from .losses import Family
 from .screening import screen_masked
-from .solver import default_L0, fista_compact, fista_masked
+from .solver import (
+    DEFAULT_KKT_TOL,
+    DEFAULT_MAX_REFITS,
+    DEFAULT_PATH_MAX_ITER,
+    DEFAULT_PATH_TOL,
+    default_L0,
+    fista_compact,
+    fista_masked,
+)
 
 __all__ = [
     "EnginePath",
@@ -574,6 +582,8 @@ class BatchedPathResult:
     compact_fallback: np.ndarray | None = None  # (B, L) masked-fallback steps
     pad_shape: tuple | None = None        # (slots, N, P) executed shape when
     #   pad="bucket" routed the batch through the serve layer's buckets
+    plan: object | None = None            # repro.api ExecutionPlan when the
+    #   fit was dispatched through slope_path (None for direct impl calls)
 
     @property
     def batch(self) -> int:
@@ -691,16 +701,16 @@ def grow_ws_bucket(ws_key: tuple, ws_size, fell_back, W: int,
     return True
 
 
-def fit_path_batched(
+def _fit_path_batched(
     Xs, ys, lam, family: Family, *,
     screening: str = "strong",
     path_length: int = 100,
     sigma_ratio: float | None = None,
     sigmas: np.ndarray | None = None,
-    solver_tol: float = 1e-8,
-    max_iter: int = 5000,
-    kkt_tol: float = 1e-4,
-    max_refits: int = 32,
+    solver_tol: float = DEFAULT_PATH_TOL,
+    max_iter: int = DEFAULT_PATH_MAX_ITER,
+    kkt_tol: float = DEFAULT_KKT_TOL,
+    max_refits: int = DEFAULT_MAX_REFITS,
     working_set: int | str | None = None,
     pad: str | None = None,
 ) -> BatchedPathResult:
@@ -871,6 +881,7 @@ class CvPathResult:
     best_index_min: int = 0       # argmin of the mean deviance
     best_index_1se: int = 0       # sparsest σ within 1 SE of the minimum
     selection: str = "min"
+    plan: object | None = None    # repro.api ExecutionPlan (slope_path only)
 
 
 def cv_fold_indices(y, n_folds: int, *, family: Family | None = None,
@@ -948,16 +959,16 @@ def cv_select(val_dev: np.ndarray):
     return mean, se, best_min, best_1se
 
 
-def cv_path(
+def _cv_path(
     X, y, lam, family: Family, *,
     n_folds: int = 5,
     screening: str = "strong",
     path_length: int = 100,
     sigma_ratio: float | None = None,
-    solver_tol: float = 1e-8,
-    max_iter: int = 5000,
-    kkt_tol: float = 1e-4,
-    max_refits: int = 32,
+    solver_tol: float = DEFAULT_PATH_TOL,
+    max_iter: int = DEFAULT_PATH_MAX_ITER,
+    kkt_tol: float = DEFAULT_KKT_TOL,
+    max_refits: int = DEFAULT_MAX_REFITS,
     working_set: int | str | None = None,
     stratify="auto",
     selection: str = "min",
@@ -991,7 +1002,7 @@ def cv_path(
 
     trains, vals = cv_fold_indices(y, n_folds, family=family,
                                    stratify=stratify)
-    res = fit_path_batched(
+    res = _fit_path_batched(
         np.stack([X[tr] for tr in trains]),
         np.stack([y[tr] for tr in trains]),
         lam, family, screening=screening,
@@ -1016,4 +1027,135 @@ def cv_path(
         best_index_min=best_min,
         best_index_1se=best_1se,
         selection=selection,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points — thin shims over the declarative repro.api layer
+# ---------------------------------------------------------------------------
+
+# "kwarg not passed" sentinel (legacy defaults must not warn).  Local on
+# purpose: importing repro.api.compat.UNSET at module level would run
+# repro.api/__init__ while repro.core is still initialising (api.plan pulls
+# engine attributes) — each shim module only ever compares its own sentinel.
+_UNSET = object()
+
+
+def _legacy_backend(working_set):
+    """Map the legacy ``working_set`` knob onto a SolverPolicy backend."""
+    if working_set is None:
+        return "masked", "auto"
+    if working_set == "auto" or (isinstance(working_set, int)
+                                 and not isinstance(working_set, bool)):
+        return "compact", working_set
+    raise ValueError(
+        f"working_set must be None, an int or 'auto', got {working_set!r}")
+
+
+def fit_path_batched(
+    Xs, ys, lam, family: Family, *,
+    screening: str = "strong",
+    path_length: int = 100,
+    sigma_ratio: float | None = None,
+    sigmas: np.ndarray | None = None,
+    solver_tol: float = DEFAULT_PATH_TOL,
+    max_iter: int = DEFAULT_PATH_MAX_ITER,
+    kkt_tol: float = DEFAULT_KKT_TOL,
+    max_refits: int = DEFAULT_MAX_REFITS,
+    working_set: int | str | None = _UNSET,
+    pad: str | None = _UNSET,
+) -> BatchedPathResult:
+    """Fit B independent SLOPE paths in one compiled device program.
+
+    Legacy entry point, now a thin shim over :func:`repro.api.slope_path`:
+    the kwargs are translated into a ``(Problem, PathSpec, SolverPolicy)``
+    triple and dispatch through the same planned layer (results are
+    bit-identical to PR-1..3 behaviour).  ``working_set=`` and ``pad=``
+    have spec-field replacements and warn once per process — see
+    ``docs/MIGRATION.md``.
+    """
+    from ..api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
+    from ..api.compat import warn_legacy
+
+    if working_set is _UNSET:
+        working_set = None
+    else:
+        warn_legacy("fit_path_batched", "working_set",
+                    "SolverPolicy(backend='compact', working_set=...)")
+    if pad is _UNSET:
+        pad = None
+    else:
+        warn_legacy("fit_path_batched", "pad", "SolverPolicy(pad=...)")
+    Xs = np.asarray(Xs)
+    ys = np.asarray(ys)
+    if Xs.ndim != 3:
+        raise ValueError(f"Xs must be (B, n, p), got {Xs.shape}")
+    if ys.shape[:2] != Xs.shape[:2]:
+        raise ValueError(
+            f"ys must be (B, n[, ...]) matching Xs {Xs.shape[:2]}, got {ys.shape}")
+    backend, ws = _legacy_backend(working_set)
+    return slope_path(
+        Problem(Xs, ys, family=family),
+        PathSpec(lam=LambdaSpec.explicit(lam), path_length=path_length,
+                 sigma_ratio=sigma_ratio, sigmas=sigmas),
+        SolverPolicy(backend=backend, working_set=ws, pad=pad,
+                     screening=screening, solver_tol=solver_tol,
+                     max_iter=max_iter, kkt_tol=kkt_tol,
+                     max_refits=max_refits),
+    )
+
+
+def cv_path(
+    X, y, lam, family: Family, *,
+    n_folds: int = 5,
+    screening: str = "strong",
+    path_length: int = 100,
+    sigma_ratio: float | None = None,
+    solver_tol: float = DEFAULT_PATH_TOL,
+    max_iter: int = DEFAULT_PATH_MAX_ITER,
+    kkt_tol: float = DEFAULT_KKT_TOL,
+    max_refits: int = DEFAULT_MAX_REFITS,
+    working_set: int | str | None = _UNSET,
+    stratify=_UNSET,
+    selection: str = _UNSET,
+    pad: str | None = _UNSET,
+) -> CvPathResult:
+    """K-fold CV: all fold paths fit as ONE batched device program.
+
+    Legacy entry point, now a thin shim over :func:`repro.api.slope_path`
+    with ``PathSpec(cv_folds=...)`` — results are bit-identical to the
+    PR-1..3 implementation.  ``working_set=``, ``stratify=``,
+    ``selection=`` and ``pad=`` have spec-field replacements and warn once
+    per process — see ``docs/MIGRATION.md``.
+    """
+    from ..api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
+    from ..api.compat import warn_legacy
+
+    if working_set is _UNSET:
+        working_set = None
+    else:
+        warn_legacy("cv_path", "working_set",
+                    "SolverPolicy(backend='compact', working_set=...)")
+    if stratify is _UNSET:
+        stratify = "auto"
+    else:
+        warn_legacy("cv_path", "stratify", "PathSpec(stratify=...)")
+    if selection is _UNSET:
+        selection = "min"
+    else:
+        warn_legacy("cv_path", "selection", "PathSpec(selection=...)")
+    if pad is _UNSET:
+        pad = None
+    else:
+        warn_legacy("cv_path", "pad", "SolverPolicy(pad=...)")
+    backend, ws = _legacy_backend(working_set)
+    return slope_path(
+        Problem(X, y, family=family),
+        PathSpec(lam=LambdaSpec.explicit(lam), path_length=path_length,
+                 sigma_ratio=sigma_ratio, cv_folds=n_folds,
+                 stratify=stratify, selection=selection),
+        SolverPolicy(backend=backend, working_set=ws, pad=pad,
+                     screening=screening, solver_tol=solver_tol,
+                     max_iter=max_iter, kkt_tol=kkt_tol,
+                     max_refits=max_refits),
     )

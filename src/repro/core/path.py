@@ -25,6 +25,13 @@ service.
 Both backends honour the same ``fit_path`` signature and return the same
 :class:`PathResult` contract, and agree within solver tolerance (see
 ``tests/test_engine.py``).
+
+Since PR 4 ``fit_path`` is a thin shim over :func:`repro.api.slope_path`:
+the kwargs become a ``(Problem, PathSpec, SolverPolicy)`` spec triple, the
+backend choice is made (or validated) by :func:`repro.api.plan_execution`,
+and the private ``_fit_path_host`` / ``_fit_path_device`` implementations
+below are invoked by the api layer — so legacy calls stay bit-identical
+while new code gets one declarative front door.
 """
 
 from __future__ import annotations
@@ -41,9 +48,19 @@ from .engine import EnginePath, null_gradient, null_sigma_grid, path_engine
 from .kkt import kkt_violations
 from .losses import Family
 from .screening import strong_rule
-from .solver import fista
+from .solver import (
+    DEFAULT_KKT_TOL,
+    DEFAULT_MAX_REFITS,
+    DEFAULT_PATH_MAX_ITER,
+    DEFAULT_PATH_TOL,
+    fista,
+)
 
 __all__ = ["fit_path", "PathResult", "PathStep", "engine_to_path_result"]
+
+# "kwarg not passed" sentinel (legacy defaults must not warn); local for the
+# same import-cycle reason as repro.core.engine's — see the note there
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -67,6 +84,7 @@ class PathResult:
     lam: np.ndarray
     total_time: float
     total_violations: int
+    plan: object | None = None  # repro.api ExecutionPlan (slope_path only)
 
     @property
     def screen_efficiency(self) -> np.ndarray:
@@ -164,14 +182,14 @@ def fit_path(
     path_length: int = 100,
     sigma_ratio: float | None = None,
     sigmas: np.ndarray | None = None,
-    solver_tol: float = 1e-8,
-    max_iter: int = 5000,
-    kkt_tol: float = 1e-4,
+    solver_tol: float = DEFAULT_PATH_TOL,
+    max_iter: int = DEFAULT_PATH_MAX_ITER,
+    kkt_tol: float = DEFAULT_KKT_TOL,
     early_stop: bool = True,
     verbose: bool = False,
-    engine: Literal["auto", "host", "device"] = "auto",
-    max_refits: int = 32,
-    pad: str | None = None,
+    engine: Literal["auto", "host", "device"] = _UNSET,
+    max_refits: int = DEFAULT_MAX_REFITS,
+    pad: str | None = _UNSET,
 ) -> PathResult:
     """Fit a full SLOPE path.
 
@@ -180,15 +198,26 @@ def fit_path(
     strong set first, then the full set),
     ``screening='none'``    → always solve on all p predictors (baseline).
 
-    ``engine`` picks the backend (see the module docstring); "auto" keeps
-    the gathered host driver for this single-problem API.  ``max_refits``
-    caps the device engine's bounded KKT repair loop (a hit is warned
-    about); the host loop always repairs until clean and ignores it.
-    ``verbose`` is host-only: the device backend runs the whole path as one
-    compiled call, so there is nothing to print per step.  ``pad="bucket"``
-    (device backend only) executes at the serve layer's canonical
-    power-of-two bucket shape — see the module docstring.
+    Legacy entry point, now a thin shim over :func:`repro.api.slope_path`:
+    the kwargs become a ``(Problem, PathSpec, SolverPolicy)`` triple and
+    results are bit-identical to the PR-1..3 behaviour.  ``engine`` picks
+    the backend ("auto" keeps the gathered host driver for this
+    single-problem API); it and ``pad`` have spec replacements
+    (``SolverPolicy(backend=..., pad=...)``) and warn once per process —
+    see ``docs/MIGRATION.md``.  ``max_refits`` caps the device engine's
+    bounded KKT repair loop; ``verbose`` is host-only.
     """
+    from ..api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
+    from ..api.compat import warn_legacy
+
+    if engine is _UNSET:
+        engine = "auto"
+    else:
+        warn_legacy("fit_path", "engine", "SolverPolicy(backend=...)")
+    if pad is _UNSET:
+        pad = None
+    else:
+        warn_legacy("fit_path", "pad", "SolverPolicy(pad=...)")
     if engine not in ("auto", "host", "device"):
         raise ValueError(f"engine must be 'auto', 'host' or 'device', got {engine!r}")
     if screening not in ("strong", "previous", "none"):
@@ -199,25 +228,22 @@ def fit_path(
         raise ValueError("pad='bucket' requires engine='device' (the host "
                          "driver gathers sub-problems; it has no use for "
                          "canonical padded shapes)")
-    if engine == "device":
-        return _fit_path_device(
-            X, y, lam, family, screening=screening, path_length=path_length,
-            sigma_ratio=sigma_ratio, sigmas=sigmas, solver_tol=solver_tol,
-            max_iter=max_iter, kkt_tol=kkt_tol, early_stop=early_stop,
-            max_refits=max_refits, pad=pad,
-        )
-    return _fit_path_host(
-        X, y, lam, family, screening=screening, path_length=path_length,
-        sigma_ratio=sigma_ratio, sigmas=sigmas, solver_tol=solver_tol,
-        max_iter=max_iter, kkt_tol=kkt_tol, early_stop=early_stop,
-        verbose=verbose,
+    return slope_path(
+        Problem(X, y, family=family),
+        PathSpec(lam=LambdaSpec.explicit(lam), path_length=path_length,
+                 sigma_ratio=sigma_ratio, sigmas=sigmas,
+                 early_stop=early_stop),
+        SolverPolicy(backend="host" if engine == "host" else "masked",
+                     pad=pad, screening=screening, solver_tol=solver_tol,
+                     max_iter=max_iter, kkt_tol=kkt_tol,
+                     max_refits=max_refits, verbose=verbose),
     )
 
 
 def _fit_path_device(X, y, lam, family, *, screening, path_length,
                      sigma_ratio, sigmas, solver_tol, max_iter, kkt_tol,
                      early_stop, max_refits, pad=None):
-    from .engine import _warn_unrepaired, fit_path_batched
+    from .engine import _fit_path_batched, _warn_unrepaired
 
     t0 = time.perf_counter()
     X = np.asarray(X)
@@ -235,7 +261,7 @@ def _fit_path_device(X, y, lam, family, *, screening, path_length,
         # (B padded to ≥ 2 inert slots): shares compiled programs across
         # nearby shapes, bit-identical to the PathService serving this
         # request (same policy, same execution shape)
-        res = fit_path_batched(
+        res = _fit_path_batched(
             X[None], y[None], lam, family, screening=screening,
             sigmas=sigmas, solver_tol=solver_tol, max_iter=max_iter,
             kkt_tol=kkt_tol, max_refits=max_refits, pad="bucket")

@@ -19,7 +19,18 @@ from jax import lax
 from .losses import Family
 from .sorted_l1 import prox_sorted_l1_with_norm, sorted_l1_norm
 
-__all__ = ["fista", "fista_masked", "fista_compact", "default_L0", "FistaResult"]
+__all__ = ["fista", "fista_masked", "fista_compact", "default_L0", "FistaResult",
+           "DEFAULT_PATH_TOL", "DEFAULT_PATH_MAX_ITER", "DEFAULT_KKT_TOL",
+           "DEFAULT_MAX_REFITS"]
+
+# Path-level solver defaults — the ONE source of truth shared by the host
+# driver, the device engines, the serve layer and repro.api.SolverPolicy.
+# (fista()'s own max_iter default stays lower: single sub-solves outside a
+# path context have no warm start to lean on and callers pass their own.)
+DEFAULT_PATH_TOL = 1e-8
+DEFAULT_PATH_MAX_ITER = 5000
+DEFAULT_KKT_TOL = 1e-4
+DEFAULT_MAX_REFITS = 32
 
 
 def default_L0(X: jax.Array, family: Family) -> jax.Array:

@@ -30,6 +30,7 @@ _LAZY = {
     "MicroBatcher": "batcher",
     "LambdaCanonicalizer": "batcher",
     "Pending": "batcher",
+    "lambda_kinds": "batcher",
     "PathService": "service",
     "PathResponse": "service",
     "CvResponse": "service",

@@ -12,7 +12,12 @@ under load, not wall-clock staleness of an abandoned queue.
 λ-sequence canonicalization lives here too: requests that *name* a sequence
 (``("bh", q)`` etc.) resolve through one memoised table, so equal specs map
 to the same immutable array (one hash, byte-equal padded operands) instead
-of freshly generated near-duplicates.
+of freshly generated near-duplicates.  Since PR 4 the declarative
+:class:`repro.api.LambdaSpec` is the canonical naming surface — it resolves
+through the process-wide shared instance
+(:func:`repro.api.shared_canonicalizer`), which is also every
+:class:`~repro.serve.service.PathService`'s default, so direct and served
+execution share one memo table.
 """
 
 from __future__ import annotations
@@ -30,7 +35,7 @@ from ..core.lambda_seq import (
     oscar_sequence,
 )
 
-__all__ = ["Pending", "MicroBatcher", "LambdaCanonicalizer"]
+__all__ = ["Pending", "MicroBatcher", "LambdaCanonicalizer", "lambda_kinds"]
 
 
 @dataclasses.dataclass
@@ -100,6 +105,12 @@ _SEQUENCES = {
     "oscar": oscar_sequence,
     "lasso": lasso_sequence,
 }
+
+
+def lambda_kinds() -> tuple[str, ...]:
+    """The named λ-sequence recipes (the single source of truth shared with
+    ``repro.api.LambdaSpec`` validation)."""
+    return tuple(sorted(_SEQUENCES))
 
 
 class LambdaCanonicalizer:

@@ -140,6 +140,14 @@ class BucketRegistry:
                 "entries": dict(self._data),
             }
 
+    def summary(self) -> dict:
+        """:meth:`stats` with JSON-safe entry keys — what
+        ``PathService.stats()`` and the ``BENCH_ci.json`` serve rows embed
+        so registry growth is visible in the perf trajectory."""
+        st = self.stats()
+        st["entries"] = {repr(k): v for k, v in st["entries"].items()}
+        return st
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"BucketRegistry({self.name!r}, size={len(self)}, "
                 f"capacity={self.capacity})")

@@ -60,6 +60,23 @@ class ProgramSpec:
         return (f"{self.family.name}/B{self.batch}n{self.n_rows}"
                 f"p{self.n_cols}L{self.path_length}/{w}")
 
+    def plan(self):
+        """The :class:`repro.api.plan.ExecutionPlan` this compiled program
+        realises — how the serving layer exposes its (pinned) execution
+        choices through the same introspection surface the planner uses."""
+        from ..api.plan import ExecutionPlan
+
+        return ExecutionPlan(
+            backend="serve",
+            mode="compact" if self.working_set else "masked",
+            batch=self.batch, n=self.n_rows, p=self.n_cols,
+            working_set=self.working_set, pad="bucket",
+            exec_shape=(self.batch, self.n_rows, self.n_cols),
+            screening=self.screening,
+            device=jax.default_backend(),
+            reasons=(f"pinned by compiled program group {self.short()}",),
+        )
+
 
 class CompiledProgram:
     """One AOT-compiled engine executable plus its call convention."""

@@ -8,6 +8,13 @@ The front door for a stream of heterogeneous fit requests::
     svc.flush()               # or wait for deadlines
     resp = svc.poll(rid)      # PathResponse with native-shape betas
 
+or, declaratively, the same ``(Problem, PathSpec, SolverPolicy)`` triple
+the direct :func:`repro.api.slope_path` front door takes::
+
+    rid = svc.submit(problem=Problem(X, y, family=ols),
+                     path=PathSpec(lam=LambdaSpec("bh", q=0.1)),
+                     policy=SolverPolicy())   # planned like a direct call
+
 Requests are padded into power-of-two buckets (:mod:`repro.serve.buckets`),
 micro-batched per compiled-program group (:mod:`repro.serve.batcher`), and
 executed through an AOT compiled-program cache (:mod:`repro.serve.cache`).
@@ -43,6 +50,15 @@ from collections import OrderedDict, deque
 
 import numpy as np
 
+from ..api.plan import plan_execution
+from ..api.specs import (
+    PathSpec,
+    Problem,
+    SolverPolicy,
+    apply_weights,
+    as_lambda_spec,
+    shared_canonicalizer,
+)
 from ..core.engine import (
     CompactStats,
     EnginePath,
@@ -188,11 +204,14 @@ class PathService:
                  canonicalizer: LambdaCanonicalizer | None = None,
                  clock=time.perf_counter):
         # explicit None checks: the cache and canonicalizer define __len__,
-        # so a freshly shared (still empty) instance is falsy
+        # so a freshly shared (still empty) instance is falsy.  The default
+        # canonicalizer is the process-wide one repro.api.LambdaSpec
+        # resolves through, so named sequences are generated once and
+        # shared byte-for-byte between direct and served execution.
         self.policy = policy if policy is not None else default_policy()
         self.cache = cache if cache is not None else ProgramCache()
         self.canonicalizer = (canonicalizer if canonicalizer is not None
-                              else LambdaCanonicalizer())
+                              else shared_canonicalizer())
         self.slots = self.policy.batch_bucket(max_batch)
         self._batcher = MicroBatcher(max_batch=max_batch, max_delay=max_delay)
         self._clock = clock
@@ -213,6 +232,9 @@ class PathService:
         self._flush_fill = 0
         self._flush_deadline = 0
         self._flush_forced = 0
+        # executed ExecutionPlan summaries → batch counts (planner/program
+        # decisions, surfaced through stats() and the serve BENCH rows)
+        self._plans: dict[str, int] = {}
         # bounded: a long-running service must not accumulate one entry per
         # request forever — percentiles are over the recent window
         self._occupancies: deque = deque(maxlen=4096)
@@ -221,7 +243,7 @@ class PathService:
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, X, y, *, family: Family = ols,
+    def submit(self, X=None, y=None, *, family: Family = ols,
                lam: np.ndarray | None = None,
                lam_kind: str = "bh", lam_q: float = 0.1,
                sigmas: np.ndarray | None = None,
@@ -231,7 +253,11 @@ class PathService:
                max_refits: int = 32,
                working_set: int | str | None = None,
                cv_folds: int | None = None, stratify="auto",
-               selection: str = "min", _cv_fold: bool = False) -> int:
+               selection: str = "min", _cv_fold: bool = False,
+               problem: Problem | None = None,
+               path: PathSpec | None = None,
+               policy: SolverPolicy | None = None,
+               plan=None) -> int:
         """Queue one fit (or, with ``cv_folds``, one K-fold CV) request.
 
         Returns a request id for :meth:`poll`.  λ can be an explicit array
@@ -240,7 +266,26 @@ class PathService:
         recipe evaluated on the *native* (unpadded) problem, so served
         results match direct ``fit_path_batched(pad="bucket")`` calls
         bit-for-bit.
+
+        Spec form: ``submit(problem=Problem(...), path=PathSpec(...),
+        policy=SolverPolicy(...))`` (or positionally, ``submit(Problem(...),
+        PathSpec(...))``) — a request is then literally the serialized
+        ``(Problem, PathSpec, SolverPolicy)`` triple the direct
+        :func:`repro.api.slope_path` front door takes, and backend choices
+        resolve through the same :func:`repro.api.plan.plan_execution`, so
+        plan decisions are identical between direct and served execution.
         """
+        if problem is None and isinstance(X, Problem):
+            problem, X = X, None
+            if path is None and isinstance(y, PathSpec):
+                path, y = y, None
+        if problem is not None:
+            if X is not None or y is not None:
+                raise ValueError("pass either (X, y, ...) kwargs or the "
+                                 "problem=/path=/policy= spec triple, not "
+                                 "both")
+            return self._submit_spec(problem, path, policy, plan=plan,
+                                     _cv_fold=_cv_fold)
         X = np.asarray(X)
         y = np.asarray(y)
         if X.ndim != 2 or y.shape[0] != X.shape[0]:
@@ -297,6 +342,50 @@ class PathService:
                 self._flush_group(key, trigger="fill")
             self._flush_due(now)
             return rid
+
+    def _submit_spec(self, problem: Problem, path: PathSpec | None,
+                     policy: SolverPolicy | None, *, plan=None,
+                     _cv_fold: bool = False) -> int:
+        """Admit a declarative ``(Problem, PathSpec, SolverPolicy)`` triple.
+
+        The triple is planned through the SAME :func:`plan_execution` the
+        direct front door uses (with the serving context made explicit), so
+        masked-vs-compact and working-set choices can never diverge between
+        ``slope_path(policy=SolverPolicy(backend="serve"))`` and a direct
+        ``submit``.  ``plan`` skips re-planning when the caller (e.g.
+        ``slope_path``) already resolved the triple.
+        """
+        path = path if path is not None else PathSpec()
+        policy = policy if policy is not None else SolverPolicy()
+        if policy.backend == "host":
+            raise ValueError(
+                "PathService cannot execute host plans; call "
+                "repro.api.slope_path directly for the gathered host driver")
+        if problem.batched:
+            raise ValueError("PathService serves single (n, p) problems; "
+                             "submit batch members individually (the "
+                             "service micro-batches them)")
+        if plan is None:
+            plan_policy = (dataclasses.replace(policy, backend="serve")
+                           if policy.backend == "auto" else policy)
+            plan = plan_execution(problem, path, plan_policy)
+        pln = plan
+        ws = None
+        if pln.mode == "compact":
+            ws = policy.working_set
+            ws = "auto" if ws is None or ws == "auto" else ws
+        Xw, yw = apply_weights(problem)
+        m = problem.family.n_classes
+        lam = as_lambda_spec(path.lam).resolve(
+            problem.p * m, n=problem.n, canonicalizer=self.canonicalizer)
+        return self.submit(
+            Xw, yw, family=problem.family, lam=lam, sigmas=path.sigmas,
+            path_length=path.path_length, sigma_ratio=path.sigma_ratio,
+            screening=policy.screening, solver_tol=policy.solver_tol,
+            max_iter=policy.max_iter, kkt_tol=policy.kkt_tol,
+            max_refits=policy.max_refits, working_set=ws,
+            cv_folds=path.cv_folds, stratify=path.stratify,
+            selection=path.selection, _cv_fold=_cv_fold)
 
     def _submit_cv(self, X, y, lam, family, *, n_folds, stratify, selection,
                    sigmas, path_length, sigma_ratio, screening, solver_tol,
@@ -379,8 +468,10 @@ class PathService:
             grow_ws_bucket(ws_key, stats.ws_size[:B_real],
                            stats.fell_back[:B_real], W, P)
         occupancy = B_real / self.slots
+        plan_summary = spec.plan().summary()
         with self._lock:
             self._batches += 1
+            self._plans[plan_summary] = self._plans.get(plan_summary, 0) + 1
             self._occupancies.append(occupancy)
             counter = {"fill": "_flush_fill", "deadline": "_flush_deadline",
                        "forced": "_flush_forced"}[trigger]
@@ -510,6 +601,8 @@ class PathService:
                 "latency_ms_p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
                 "latency_ms_p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
                 "cache": self.cache.stats(),
-                "ws_buckets": {k: v for k, v in _WS_BUCKETS.stats().items()
-                               if k != "entries"},
+                # executed ExecutionPlan summaries → batch counts: the
+                # planner/program decisions behind the numbers above
+                "plans": dict(self._plans),
+                "ws_buckets": _WS_BUCKETS.summary(),
             }

@@ -61,6 +61,79 @@ def test_path_start_sigma_zeroes_the_first_step(rng):
     assert np.abs(np.asarray(res.beta)).max() < 1e-10
 
 
+def test_lambda_spec_paths_match_legacy_arrays():
+    """ISSUE 4 satellite: bh / gaussian / oscar sequences produce IDENTICAL
+    paths through LambdaSpec vs the legacy explicit-array kwargs, on both
+    the host and device backends (the spec resolves through the shared
+    canonicalizer to the same bytes the legacy recipe functions return)."""
+    import warnings
+
+    from repro.api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
+    from repro.core import fit_path, ols
+    from repro.data import make_regression
+
+    n, p = 25, 30
+    X, y, _ = make_regression(n, p, k=3, rho=0.2, seed=7)
+    kw = dict(path_length=5, solver_tol=1e-10, max_iter=20000)
+    legacy_arrays = {
+        ("bh", 0.1): np.asarray(bh_sequence(p, 0.1)),
+        ("gaussian", 0.1): np.asarray(gaussian_sequence(p, n=n, q=0.1)),
+        ("oscar", 0.05): np.asarray(oscar_sequence(p, 0.05)),
+    }
+    for (kind, q), lam in legacy_arrays.items():
+        spec = PathSpec(lam=LambdaSpec(kind, q=q), path_length=5,
+                        early_stop=False)
+        resolved = spec.lam.resolve(p, n=n)
+        np.testing.assert_array_equal(resolved, lam)
+
+        host_legacy = fit_path(X, y, lam, ols, early_stop=False, **kw)
+        host_spec = slope_path(Problem(X, y), spec,
+                               SolverPolicy(backend="host",
+                                            solver_tol=1e-10,
+                                            max_iter=20000))
+        np.testing.assert_array_equal(host_legacy.betas, host_spec.betas)
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            dev_legacy = fit_path(X, y, lam, ols, engine="device",
+                                  early_stop=False, **kw)
+        dev_spec = slope_path(Problem(X, y), spec,
+                              SolverPolicy(backend="masked",
+                                           solver_tol=1e-10,
+                                           max_iter=20000))
+        np.testing.assert_array_equal(dev_legacy.betas, dev_spec.betas)
+
+
+def test_lambda_spec_validation_and_sharing():
+    from repro.api import LambdaSpec, shared_canonicalizer
+
+    a = LambdaSpec("bh", q=0.1).resolve(50)
+    b = LambdaSpec("bh", q=0.1).resolve(50)
+    assert a is b and not a.flags.writeable  # one shared memoised array
+    assert shared_canonicalizer().get("bh", 0.1, 50) is a
+
+    import pytest
+
+    with pytest.raises(ValueError):
+        LambdaSpec("nope")
+    with pytest.raises(ValueError):
+        LambdaSpec("explicit")               # explicit needs values
+    with pytest.raises(ValueError):
+        LambdaSpec.explicit(np.ones(7)).resolve(9)
+    lam2 = LambdaSpec.explicit(np.ones((3, 9))).resolve(9)  # (B, p·m) stack
+    assert lam2.shape == (3, 9)
+
+    # ... but a per-problem stack needs a batched (B, n, p) problem
+    from repro.api import PathSpec, Problem, slope_path
+    from repro.data import make_regression
+
+    X, y, _ = make_regression(12, 9, k=2, seed=0)
+    with pytest.raises(ValueError, match="batched"):
+        slope_path(Problem(X, y),
+                   PathSpec(lam=LambdaSpec.explicit(np.ones((3, 9))),
+                            path_length=4))
+
+
 def test_input_specs_cover_all_cells():
     from repro.configs import ARCH_NAMES, get_config
     from repro.launch.specs import SHAPES, input_specs, skip_reason
