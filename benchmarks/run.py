@@ -14,6 +14,8 @@ Default sizes are scaled to finish on this CPU-only container in minutes;
   kernels              Pallas kernels vs jnp oracle (interpret mode)
   batched_engine       device engine: fit_path_batched vs a loop of fit_path
   compact_engine       compact working-set engine vs the masked engine
+  compact_two_tier     two-tier working sets vs single-tier at the overflow
+                       config, plus block-compacted GEMV live-block telemetry
   serve                PathService vs one-request-at-a-time on a request stream
 """
 
@@ -242,6 +244,26 @@ def batched_engine(full: bool):
         f"speedup={t_loop / t_batch:.1f}x maxdiff={diff:.1e}")
 
 
+def _compact_detail(res) -> str:
+    """Fallback / working-set / per-tier-occupancy summary for one compact
+    :class:`BatchedPathResult` — EVERY compact sweep row carries it so the
+    BENCH_ci.json trajectory tracks how often the masked fallback fires and
+    how full each tier runs, not just wall time."""
+    L = res.compact_fallback.shape[1]
+    fb = int(res.compact_fallback.any(axis=0).sum())
+    parts = [f"fallback_steps={fb}/{L}", f"ws_peak={int(res.ws_size.max())}"]
+    # occupancy over the FITTED steps only: index 0 is the synthetic σmax
+    # null point (ws_size 0, tier 1 by convention) and would deflate occ1
+    ws, tier = res.ws_size[:, 1:], res.ws_tier[:, 1:]
+    for t, w in ((1, res.working_set), (2, res.working_set_top)):
+        if w is None:
+            continue
+        sel = tier == t
+        occ = float(ws[sel].mean() / w) if sel.any() else 0.0
+        parts.append(f"occ{t}={occ:.2f}@W{w}")
+    return " ".join(parts)
+
+
 def compact_engine(full: bool):
     """ISSUE 2 acceptance: compact working-set engine vs the masked engine
     at a p ≫ n batched config.
@@ -301,12 +323,15 @@ def compact_engine(full: bool):
         "masked full-width engine")
     row(f"compact_engine/compact_B{B}_p{p}_W{W}", t_compact * 1e6,
         f"speedup={t_masked / t_compact:.1f}x maxdiff_host={diff_host:.1e} "
-        f"maxdiff_masked={diff_masked:.1e} ws_max={int(compact.ws_size.max())}")
+        f"maxdiff_masked={diff_masked:.1e} {_compact_detail(compact)}")
 
     # overflow: a bucket below the peak working set must fall back to the
-    # masked solve (in-graph lax.cond) and reproduce the masked results
+    # masked solve (in-graph lax.cond) and reproduce the masked results.
+    # ws_tiers=1 pins the single-tier engine — this arm demonstrates the
+    # raw fallback cost; the compact_two_tier sweep measures the cure
     W_small = 16
-    over_pol = SolverPolicy(backend="compact", working_set=W_small, **tol)
+    over_pol = SolverPolicy(backend="compact", working_set=W_small,
+                            ws_tiers=1, **tol)
     slope_path(batch, spec, over_pol)        # warm the W=16 compile
     over, t_over = timed(
         lambda: slope_path(batch, spec, over_pol),
@@ -315,8 +340,131 @@ def compact_engine(full: bool):
     assert over.compact_fallback.any(), "overflow case failed to trigger"
     diff_over = np.abs(over.betas - masked.betas).max()
     row(f"compact_engine/overflow_B{B}_p{p}_W{W_small}", t_over * 1e6,
-        f"fallback_steps={int(over.compact_fallback.any(axis=0).sum())}/"
-        f"{over.compact_fallback.shape[1]} maxdiff_masked={diff_over:.1e}")
+        f"maxdiff_masked={diff_over:.1e} {_compact_detail(over)}")
+
+
+def compact_two_tier(full: bool):
+    """ISSUE 5 acceptance: two-tier working sets at the PR-2 overflow
+    config, plus live-block telemetry for the block-compacted GEMVs.
+
+    Three arms share the compact_engine data/grid: masked (the reference),
+    single-tier compact at an undersized W=16 bucket (PR-2 behaviour — the
+    27/50-fallback arm), and two-tier compact at the same W (second tier at
+    2W).  The point under test: a member whose screened set creeps just
+    past W costs two compact gathers, not a whole-batch masked O(n·p)
+    solve, so the fallback-step count collapses and wall time drops while
+    results stay within solver tolerance of the masked engine.
+
+    The GEMV rows exercise the scalar-prefetch grid remap: a working set of
+    ws_peak columns — clustered (the favourable layout) and scattered
+    uniformly (the adversarial one) — through the block-compacted kernels,
+    asserting the launched grid covers exactly the live blocks.
+    """
+    from repro.api import PathSpec, Problem, SolverPolicy, slope_path
+    from repro.core import bh_sequence
+    from repro.data import make_regression
+
+    B, n = 8, 80
+    p = 4096 if full else 2048
+    W = 16
+    probs = [make_regression(n, p, k=5, rho=0.0, seed=s, noise=0.3)[:2]
+             for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    lam = np.asarray(bh_sequence(p, q=0.05))
+    batch = Problem(Xs, ys)
+    spec = PathSpec(lam=lam, path_length=50, sigma_ratio=0.6,
+                    early_stop=False)
+    tol = dict(solver_tol=1e-14, max_iter=60000, kkt_tol=1e-4)
+    masked_pol = SolverPolicy(backend="masked", **tol)
+    single_pol = SolverPolicy(backend="compact", working_set=W, ws_tiers=1,
+                              **tol)
+    two_pol = SolverPolicy(backend="compact", working_set=W, ws_tiers=2,
+                           **tol)
+    # the bucket one grow-on-overflow round would learn (peak demand ≈ 42
+    # here): with the second tier the registry can stop at HALF the peak —
+    # tier 2 covers (W, 2W] — where single-tier would need the full 64
+    grown_pol = SolverPolicy(backend="compact", working_set=2 * W,
+                             ws_tiers=2, **tol)
+
+    # warm every compile cache, then best-of-repeats (BENCH_ci.json rows)
+    masked = slope_path(batch, spec, masked_pol)
+    slope_path(batch, spec, single_pol)
+    slope_path(batch, spec, two_pol)
+    slope_path(batch, spec, grown_pol)
+
+    single, t_single = timed(lambda: slope_path(batch, spec, single_pol),
+                             repeats=2)
+    two, t_two = timed(lambda: slope_path(batch, spec, two_pol), repeats=2)
+    grown, t_grown = timed(lambda: slope_path(batch, spec, grown_pol),
+                           repeats=2)
+
+    L = single.compact_fallback.shape[1]
+    fb_single = int(single.compact_fallback.any(axis=0).sum())
+    fb_two = int(two.compact_fallback.any(axis=0).sum())
+    fb_grown = int(grown.compact_fallback.any(axis=0).sum())
+    assert fb_two < fb_single, "second tier failed to absorb any fallback"
+    assert fb_grown <= max(5 * L // 50, 1), (
+        f"grown two-tier bucket still falls back {fb_grown}/{L}")
+    # wall-time is runner-noise territory — the bench job is informational,
+    # never a gate (ci.yml), so a missed speedup prints loudly instead of
+    # failing CI; the deterministic invariants above still hard-assert
+    if t_single / t_grown < 1.3:
+        print(f"# WARNING: two-tier speedup {t_single / t_grown:.2f}x "
+              "below the 1.3x acceptance bar (noisy runner?)", flush=True)
+    diff_single = np.abs(single.betas - masked.betas).max()
+    diff_two = np.abs(two.betas - masked.betas).max()
+    diff_grown = np.abs(grown.betas - masked.betas).max()
+    assert max(diff_two, diff_grown) <= 1e-12, (diff_two, diff_grown)
+    row(f"compact_two_tier/single_B{B}_p{p}_W{W}", t_single * 1e6,
+        f"maxdiff_masked={diff_single:.1e} {_compact_detail(single)}")
+    row(f"compact_two_tier/two_B{B}_p{p}_W{W}", t_two * 1e6,
+        f"speedup_vs_single={t_single / t_two:.2f}x "
+        f"maxdiff_masked={diff_two:.1e} {_compact_detail(two)}")
+    row(f"compact_two_tier/two_grown_B{B}_p{p}_W{2 * W}", t_grown * 1e6,
+        f"speedup_vs_single={t_single / t_grown:.2f}x "
+        f"maxdiff_masked={diff_grown:.1e} {_compact_detail(grown)}")
+
+    # -- block-compacted GEMVs: dead blocks are never fetched ---------------
+    from repro.kernels import (
+        compact_gemv_stats,
+        slope_gradient_compact,
+        slope_gradient_masked,
+    )
+
+    rng = np.random.default_rng(0)
+    Xk = jnp.asarray(rng.normal(size=(128, p)), jnp.float32)
+    rk = jnp.asarray(rng.normal(size=(128, 1)), jnp.float32)
+    ws_peak = int(single.ws_size.max())
+    bp = 128
+    layouts = {
+        "clustered": np.arange(ws_peak),                       # ⌈W/bp⌉ blocks
+        "scattered": rng.choice(p, size=ws_peak, replace=False),
+    }
+    for name, cols in layouts.items():
+        mask = np.zeros(p, bool)
+        mask[cols] = True
+        mj = jnp.asarray(mask)
+        dense = bench_best(lambda: slope_gradient_masked(Xk, rk, mj, bp=bp))
+        t_c = bench_best(lambda: slope_gradient_compact(Xk, rk, mj, bp=bp))
+        st = compact_gemv_stats("gradient")
+        assert st.grid[0] == st.blocks_live, (st.grid, st.blocks_live)
+        got = np.asarray(slope_gradient_compact(Xk, rk, mj, bp=bp))
+        want = np.asarray(slope_gradient_masked(Xk, rk, mj, bp=bp))
+        assert (got == want).all(), "compact GEMV diverged from masked"
+        # wall times here are interpreter-mode (the scalar-prefetch grid is
+        # emulated per block); the CPU-checkable claim is the telemetry —
+        # the launched grid covers exactly the live blocks, so dead-block
+        # DMA cannot happen.  The bandwidth win is a real-TPU property.
+        row(f"compact_two_tier/gemv_{name}_ws{ws_peak}", t_c * 1e6,
+            f"live_blocks={st.blocks_live}/{st.blocks_total} "
+            f"live_ratio={st.live_ratio:.2f} interp_vs_masked={t_c / dense:.2f}x")
+
+
+def bench_best(fn, repeats: int = 5):
+    """Warmup + best-of-N wall time (compile excluded) for one thunk."""
+    fn()
+    return timed(fn, repeats=repeats)[1]
 
 
 def _serve_stream(stream: str, R: int, seed: int = 0):
@@ -453,6 +601,7 @@ BENCHES = {
     "kernels": kernels,
     "batched_engine": batched_engine,
     "compact_engine": compact_engine,
+    "compact_two_tier": compact_two_tier,
     "serve": serve,
 }
 

@@ -114,6 +114,7 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
         res = _cv_path(X, y, lam, family, n_folds=path.cv_folds,
                        max_refits=policy.max_refits,
                        working_set=_ws_arg(pln, policy),
+                       ws_tiers=policy.ws_tiers,
                        stratify=path.stratify, selection=path.selection,
                        pad=pln.pad, **kw)
     elif pln.mode == "gathered":
@@ -123,6 +124,7 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
         res = _fit_path_batched(X, y, lam, family,
                                 max_refits=policy.max_refits,
                                 working_set=_ws_arg(pln, policy),
+                                ws_tiers=policy.ws_tiers,
                                 pad=pln.pad, **kw)
     elif pln.mode == "masked":
         # identical call path to the legacy fit_path(engine="device")
@@ -133,6 +135,7 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
         batched = _fit_path_batched(X[None], y[None], lam, family,
                                     max_refits=policy.max_refits,
                                     working_set=_ws_arg(pln, policy),
+                                    ws_tiers=policy.ws_tiers,
                                     pad=pln.pad, **kw)
         res = batched.path_results(early_stop=path.early_stop)[0]
     res.plan = pln

@@ -32,7 +32,7 @@ import dataclasses
 
 import jax
 
-from ..core.engine import _WS_BUCKETS, _ws_bucket
+from ..core.engine import _WS_BUCKETS, _ws_bucket, second_tier_width
 from ..serve.buckets import default_policy
 from .specs import PathSpec, Problem, SolverPolicy
 
@@ -46,9 +46,11 @@ class ExecutionPlan:
     ``backend`` is ``"host"`` / ``"device"`` / ``"serve"``; ``mode`` the
     concrete engine (``"gathered"`` / ``"masked"`` / ``"compact"``);
     ``working_set`` the previewed compact bucket W (None outside compact
-    mode); ``exec_shape`` the padded ``(slots, N, P)`` program shape when
-    ``pad="bucket"`` (slots is None for served plans — the slot count is
-    the serving deployment's batch bucket).
+    mode); ``ws_tiers`` the previewed tier widths — ``(W,)`` single-tier or
+    ``(W, 2W)`` two-tier (None outside compact mode); ``exec_shape`` the
+    padded ``(slots, N, P)`` program shape when ``pad="bucket"`` (slots is
+    None for served plans — the slot count is the serving deployment's
+    batch bucket).
     """
 
     backend: str
@@ -57,6 +59,7 @@ class ExecutionPlan:
     n: int
     p: int
     working_set: int | None
+    ws_tiers: tuple | None
     pad: str | None
     exec_shape: tuple | None
     screening: str
@@ -68,6 +71,8 @@ class ExecutionPlan:
         s = f"{self.backend}/{self.mode}"
         if self.working_set is not None:
             s += f"-W{self.working_set}"
+            if self.ws_tiers is not None and len(self.ws_tiers) == 2:
+                s += f"+{self.ws_tiers[1]}"
         if self.exec_shape is not None:
             s += "@" + "x".join("?" if v is None else str(v)
                                 for v in self.exec_shape)
@@ -80,6 +85,8 @@ class ExecutionPlan:
         head = (f"ExecutionPlan: {self.backend}/{self.mode}"
                 f"  B={self.batch}  n={self.n}  p={self.p}"
                 + (f"  W={self.working_set}" if self.working_set is not None
+                   else "")
+                + (f"  tiers={self.ws_tiers}" if self.ws_tiers is not None
                    else "")
                 + f"  pad={self.pad}"
                 + (f"  exec_shape={self.exec_shape}"
@@ -226,6 +233,7 @@ def plan_execution(problem: Problem, path: PathSpec | None = None,
 
     # -- working-set preview for pinned-compact plans ------------------------
     working_set = None
+    ws_tiers = None
     if mode == "compact":
         key = (n_key, p_key, m, family.name, policy.screening)
         ws_probe: list[str] = []
@@ -234,6 +242,23 @@ def plan_execution(problem: Problem, path: PathSpec | None = None,
         # avoid duplicating the auto-recipe reason added by the heuristic
         if not any(r.startswith("W=") for r in reasons):
             reasons.extend(ws_probe)
+        # the second tier derives from the already-previewed W (the same
+        # recipe the engine applies after its own registry read) — a single
+        # registry lookup, so the previewed pair is internally consistent
+        # even if a concurrent run grows the shared registry mid-plan
+        W2 = second_tier_width(working_set, policy.ws_tiers, p_key)
+        ws_tiers = (working_set,) if W2 is None else (working_set, W2)
+        if W2 is None:
+            reasons.append(
+                "single-tier compact: ws_tiers=1 pinned it" if
+                policy.ws_tiers == 1 else
+                f"single-tier compact: a 2W tier ({2 * working_set}) would "
+                f"span p={p_key} — the masked fallback IS the top tier")
+        else:
+            reasons.append(
+                f"two-tier compact W={working_set}+{W2}: a member whose "
+                f"screened set outgrows W is served at 2W; the batch-wide "
+                f"masked fallback fires only beyond {W2}")
 
     if backend == "host" and pad == "bucket":
         raise ValueError("pad='bucket' requires a device or serve backend "
@@ -243,6 +268,7 @@ def plan_execution(problem: Problem, path: PathSpec | None = None,
     reasons.append(f"jax default backend: {device}")
     return ExecutionPlan(
         backend=backend, mode=mode, batch=B, n=n_fit, p=p,
-        working_set=working_set, pad=pad, exec_shape=exec_shape,
-        screening=policy.screening, device=device, reasons=tuple(reasons),
+        working_set=working_set, ws_tiers=ws_tiers, pad=pad,
+        exec_shape=exec_shape, screening=policy.screening, device=device,
+        reasons=tuple(reasons),
     )

@@ -40,6 +40,7 @@ from ..core.solver import (
     DEFAULT_MAX_REFITS,
     DEFAULT_PATH_MAX_ITER,
     DEFAULT_PATH_TOL,
+    DEFAULT_WS_TIERS,
 )
 from ..serve.batcher import LambdaCanonicalizer, lambda_kinds
 
@@ -234,12 +235,18 @@ class SolverPolicy:
     :class:`repro.serve.PathService`.  ``working_set`` controls the compact
     engine: ``None`` forbids compaction, an int pins the W bucket, and
     ``"auto"`` lets the planner size it (grow-on-overflow registry
-    included).  ``pad="auto"`` resolves to canonical-bucket padding exactly
-    when serving (direct uniform batches keep their native shapes).
+    included).  ``ws_tiers`` controls the compact engine's second tier at
+    2·W (``"auto"``: two tiers whenever 2·W < p; ``1``: single-tier; ``2``:
+    demand the second tier) — a member whose screened set outgrows W but
+    fits 2·W is served by the wider gather instead of dragging the whole
+    batch into the masked fallback.  ``pad="auto"`` resolves to
+    canonical-bucket padding exactly when serving (direct uniform batches
+    keep their native shapes).
     """
 
     backend: str = "auto"
     working_set: int | str | None = "auto"
+    ws_tiers: int | str = DEFAULT_WS_TIERS
     pad: str | None = "auto"
     screening: str = "strong"
     solver_tol: float = DEFAULT_PATH_TOL
@@ -259,6 +266,10 @@ class SolverPolicy:
                 or (isinstance(ws, int) and not isinstance(ws, bool))):
             raise ValueError(
                 f"working_set must be None, an int or 'auto', got {ws!r}")
+        if self.ws_tiers not in ("auto", 1, 2) or isinstance(self.ws_tiers,
+                                                            bool):
+            raise ValueError(
+                f"ws_tiers must be 'auto', 1 or 2, got {self.ws_tiers!r}")
         if self.pad not in (None, "auto", "bucket"):
             raise ValueError(
                 f"pad must be None, 'auto' or 'bucket', got {self.pad!r}")

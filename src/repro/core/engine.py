@@ -52,6 +52,7 @@ from .solver import (
     DEFAULT_MAX_REFITS,
     DEFAULT_PATH_MAX_ITER,
     DEFAULT_PATH_TOL,
+    DEFAULT_WS_TIERS,
     default_L0,
     fista_compact,
     fista_masked,
@@ -65,6 +66,8 @@ __all__ = [
     "compact_path_engine",
     "fit_path_batched",
     "grow_ws_bucket",
+    "resolve_ws_tiers",
+    "second_tier_width",
     "cv_path",
     "cv_fold_indices",
     "cv_val_deviance",
@@ -94,8 +97,12 @@ class CompactStats(NamedTuple):
     """Per-step compact-engine telemetry (leading axes = problem, path point)."""
 
     ws_size: jax.Array    # (B, L) int32 — peak working-set demand |E| per step
+    tier: jax.Array       # (B, L) int32 — which tier served the member's
+    #   step: 1 = the W bucket, 2 = the 2W top tier, 0 = the step ran the
+    #   batch-wide masked fallback (some member's demand exceeded the top
+    #   tier; `ws_size` still records every member's own demand)
     fell_back: jax.Array  # (B, L) bool — step ran the masked full-width
-    #   fallback because some batch member's |E| exceeded the W bucket
+    #   fallback because some batch member's |E| exceeded the top tier
 
 
 # ---------------------------------------------------------------------------
@@ -336,18 +343,27 @@ def batched_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
 
 
 def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
-                    tol, kkt_tol, max_refits, width, p_valid=None):
-    """Natively-batched compact-working-set engine.
+                    tol, kkt_tol, max_refits, width, p_valid=None,
+                    width2=None):
+    """Natively-batched compact-working-set engine, now two-tier.
 
     Identical per-step semantics to ``vmap(_engine)`` with one structural
     difference: the batch axis is threaded through the *data* while control
     flow stays **scalar**.  That lets the overflow check reduce over the
-    batch (``any(|E| > W)``) before the ``lax.cond`` that picks between the
-    compact O(n·W) solve and the masked O(n·p) fallback — a per-member cond
+    batch (``any(|E| > W_top)``) before the ``lax.cond`` that picks between
+    the compact solve and the masked O(n·p) fallback — a per-member cond
     under ``vmap`` would lower to ``lax.select`` and execute BOTH branches,
-    erasing the compact win.  The price: if any one batch member overflows
-    the W bucket, the whole batch pays the masked solve for that repair
-    round (conservative, correct, and rare once W is bucketed right).
+    erasing the compact win.
+
+    ``width2`` (optional, > ``width``) adds a second tier: inside the
+    compact arm a nested scalar gate checks ``any(|E| > W)``; only when it
+    fires does the mixed arm run, solving every member at BOTH tiers and
+    per-member-selecting each member's own tier's result.  The per-member
+    cond is a select by construction — that is exactly what a vmapped cond
+    would lower to — but both branches are compact (O(n·W) + O(n·2W) ≈
+    3·n·W), so a member whose screened set creeps just past W costs three
+    W-solves instead of one O(n·p) masked solve for the whole batch.  The
+    batch-wide masked fallback now fires only for demand beyond ``width2``.
     """
     B, n, p = X.shape
     m = family.n_classes
@@ -357,6 +373,10 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
         lam = jnp.broadcast_to(lam, (B,) + lam.shape)
     pv_axis = None if p_valid is None else 0
     W = width
+    W2 = width2
+    if W2 is not None and W2 <= W:
+        raise ValueError(f"width2 must exceed width, got {W2} <= {W}")
+    W_top = W if W2 is None else W2
 
     def fam_shape(b):  # (p, m) -> the shape the family callbacks expect
         return b[:, 0] if m == 1 else b
@@ -382,19 +402,64 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                            L0=L, **solver_kw)
         return lift(res.beta), res.iters.astype(jnp.int32), res.L
 
-    def solve_compact_one(Xi, yi, lam_next, beta, E, L):
-        res = fista_compact(Xi, yi, lam_next, fam_shape(beta), E, family,
-                            width=W, L0=L, **solver_kw)
-        return lift(res.beta), res.iters.astype(jnp.int32), res.L
+    def solve_compact_one(width_t):
+        def one(Xi, yi, lam_next, beta, E, L):
+            res = fista_compact(Xi, yi, lam_next, fam_shape(beta), E, family,
+                                width=width_t, L0=L, **solver_kw)
+            return lift(res.beta), res.iters.astype(jnp.int32), res.L
+        return one
+
+    solve_tier1 = solve_compact_one(W)
+    solve_tier2 = None if W2 is None else solve_compact_one(W2)
 
     def solve_all(E, lam_next, beta, L):
         need = E.sum(axis=1).astype(jnp.int32)
-        fell_back = jnp.any(need > W)  # scalar — keeps the cond a real branch
+        # scalar reduction — keeps the fallback cond a real branch
+        fell_back = jnp.any(need > W_top)
+        args = (lam_next, beta, E, L)
+
+        def tier1_all(a):
+            return jax.vmap(solve_tier1)(X, y, *a)
+
+        if W2 is None:
+            compact_arm = tier1_all
+        else:
+            over1 = need > W  # (B,) members whose demand needs the top tier
+
+            def mixed(a):
+                # both tiers run (a per-member cond would lower to exactly
+                # this select); each member keeps its OWN tier's result, so
+                # tier-1 members' coefficients come from the same W-width
+                # solve a homogeneous batch would have run.  Each member's
+                # *other*-tier slot is blanked (empty E, zero warm start):
+                # its discarded solve then converges in one iteration
+                # instead of grinding a truncated or redundant sub-problem
+                # to tolerance — under vmap the solves run in lockstep, so
+                # one slow discarded member would stall the whole batch
+                lam_next, beta, E, L = a
+                # (the solvers already zero each member's warm start through
+                # its mask, so blanking E alone blanks the whole problem)
+                r1 = jax.vmap(solve_tier1)(
+                    X, y, lam_next, beta, E & ~over1[:, None], L)
+                r2 = jax.vmap(solve_tier2)(
+                    X, y, lam_next, beta, E & over1[:, None], L)
+
+                def sel(two, one):
+                    o = over1.reshape((B,) + (1,) * (two.ndim - 1))
+                    return jnp.where(o, two, one)
+
+                return tuple(sel(t2, t1) for t2, t1 in zip(r2, r1))
+
+            def compact_arm(a):
+                # nested scalar gate: the all-tier-1 fast path stays a real
+                # branch, so homogeneous steps never pay the second gather
+                return lax.cond(jnp.any(over1), mixed, tier1_all, a)
+
         beta1, it1, L1 = lax.cond(
             fell_back,
-            lambda args: jax.vmap(solve_masked_one)(X, y, *args),
-            lambda args: jax.vmap(solve_compact_one)(X, y, *args),
-            (lam_next, beta, E, L),
+            lambda a: jax.vmap(solve_masked_one)(X, y, *a),
+            compact_arm,
+            args,
         )
         grad1 = jax.vmap(grad_one)(X, y, beta1)
         return beta1, grad1, it1, L1, fell_back, need
@@ -501,9 +566,14 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
 
         active = (jnp.abs(beta_f) > 0).any(axis=2)
         dev = jax.vmap(dev_one)(X, y, beta_f)
+        # which tier served each member this step: 0 on fallback steps (the
+        # whole batch ran masked), else the smallest tier covering the
+        # member's peak demand across repair rounds
+        tier = jnp.where(fell_back, jnp.int32(0),
+                         jnp.where(ws_max > W, jnp.int32(2), jnp.int32(1)))
         out = (beta_f, active.sum(axis=1).astype(jnp.int32), n_screened,
                viol_count, refits, iters, dev, unrepaired, ws_max,
-               fell_back & jnp.ones((B,), bool))
+               tier, fell_back & jnp.ones((B,), bool))
         return (beta_f, grad_f, active, L_f), out
 
     L_init = jax.vmap(lambda Xi: default_L0(Xi, family))(X).astype(dtype)
@@ -511,7 +581,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
               L_init)
     xs = (sigmas[:, :-1].T, sigmas[:, 1:].T)  # scan over the path axis
     _, outs = lax.scan(step, carry0, xs)
-    betas, n_act, n_scr, viol, refits, iters, devs, unrep, ws, fb = outs
+    (betas, n_act, n_scr, viol, refits, iters, devs, unrep, ws, tiers,
+     fb) = outs
 
     def pre(a, v):
         a = jnp.moveaxis(a, 0, 1)  # (L-1, B, ...) -> (B, L-1, ...)
@@ -530,16 +601,17 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                                   jnp.moveaxis(devs, 0, 1)], axis=1),
         kkt_unrepaired=pre(unrep, False),
     )
-    stats = CompactStats(ws_size=pre(ws, 0), fell_back=pre(fb, False))
+    stats = CompactStats(ws_size=pre(ws, 0), tier=pre(tiers, 1),
+                         fell_back=pre(fb, False))
     return ep, stats
 
 
-_COMPACT_STATICS = _ENGINE_STATICS + ("width",)
+_COMPACT_STATICS = _ENGINE_STATICS + ("width", "width2")
 
 
 @functools.partial(jax.jit, static_argnames=_COMPACT_STATICS)
 def compact_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
-                        width: int,
+                        width: int, width2: int | None = None,
                         screening: str = "strong", max_iter: int = 5000,
                         tol: float = 1e-8, kkt_tol: float = 1e-4,
                         max_refits: int = 32):
@@ -547,14 +619,19 @@ def compact_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
     bucket: the inner solve costs O(n·W) instead of O(n·p), with a batch-wide
     ``lax.cond`` fallback to the masked full-width solve on overflow.
 
+    ``width2`` (optional) adds a second compact tier: members whose screened
+    set exceeds ``width`` but fits ``width2`` are served by a wider gather
+    instead of dragging the whole batch into the masked fallback (which then
+    fires only for demand beyond ``width2``).
+
     ``X``: (B, n, p); ``y``: (B, n[, ...]); ``sigmas``: (B, L); ``lam``
     shared (p·m,) or per-member (B, p·m); ``p_valid`` (optional, (B,)
     int32) marks bucket padding per member.  Returns ``(EnginePath,
     CompactStats)`` with leading batch axes.  One compilation per
-    (B, n, p, m, L, W, config).
+    (B, n, p, m, L, W, W2, config).
     """
     return _compact_engine(X, y, lam, sigmas, family, screening, max_iter,
-                           tol, kkt_tol, max_refits, width, p_valid)
+                           tol, kkt_tol, max_refits, width, p_valid, width2)
 
 
 # ---------------------------------------------------------------------------
@@ -578,7 +655,10 @@ class BatchedPathResult:
     total_time: float
     n_samples: int            # rows per problem (early-stop rules need it)
     working_set: int | None = None        # W bucket (None: masked engine)
+    working_set_top: int | None = None    # second-tier bucket (None: one tier)
     ws_size: np.ndarray | None = None     # (B, L) peak |E| per step
+    ws_tier: np.ndarray | None = None     # (B, L) serving tier per step
+    #   (1 = W, 2 = the top tier, 0 = the step ran the masked fallback)
     compact_fallback: np.ndarray | None = None  # (B, L) masked-fallback steps
     pad_shape: tuple | None = None        # (slots, N, P) executed shape when
     #   pad="bucket" routed the batch through the serve layer's buckets
@@ -684,21 +764,63 @@ def _ws_bucket(working_set, n: int, p: int, key: tuple) -> int:
     return min(_next_pow2(max(2 * n, 64)), p)
 
 
+def second_tier_width(W: int, ws_tiers, p: int) -> int | None:
+    """The second tier for a resolved W bucket: ``2·W`` for ``ws_tiers``
+    "auto"/2 whenever ``2·W < p`` (a top tier spanning p would be the
+    masked solve with gather overhead on top, so it degenerates to
+    single-tier), None otherwise.  Factored out so the planner can derive
+    the tier pair from its already-previewed W — one registry read, no
+    window for the pair to desynchronize."""
+    if ws_tiers not in ("auto", 1, 2):
+        raise ValueError(
+            f"ws_tiers must be 'auto', 1 or 2, got {ws_tiers!r}")
+    if ws_tiers == 1 or 2 * W >= p:
+        return None
+    return 2 * W
+
+
+def resolve_ws_tiers(working_set, ws_tiers, n: int, p: int,
+                     key: tuple) -> tuple[int, int | None]:
+    """Resolve the compact tier widths ``(W, W2)`` for one run.
+
+    ``W`` comes from :func:`_ws_bucket` (explicit int / registry / auto
+    recipe); ``W2`` from :func:`second_tier_width`.  The ONE tier recipe,
+    shared by the engine, the planner preview and the serve layer so the
+    three can never disagree on what shape actually compiles.
+    """
+    W = _ws_bucket(working_set, n, p, key)
+    return W, second_tier_width(W, ws_tiers, p)
+
+
 def grow_ws_bucket(ws_key: tuple, ws_size, fell_back, W: int,
-                   p_cap: int) -> bool:
+                   p_cap: int, *, two_tier: bool = False) -> bool:
     """Grow the shared working-set registry after an overflowing "auto" run.
 
     ``ws_size``/``fell_back`` are the run's CompactStats arrays (real
-    members only); ``p_cap`` bounds the promoted bucket.  The ONE growth
-    rule, shared by :func:`fit_path_batched` and the path service so the
-    two front-ends can never desynchronize the registry they share.
-    Returns True if the bucket grew.
+    members only); ``p_cap`` bounds the promoted bucket (a bucket wider
+    than the column count is wasted compaction).  ``two_tier`` marks a run
+    whose next same-shape call will carry a 2W second tier: the registry
+    then only needs the HALF-peak bucket — tier 2 covers (W, 2W], so
+    ``W = 2^⌈log₂ peak⌉ / 2`` already makes the whole observed demand
+    compact-servable at half the gather width the single-tier rule would
+    store.  The ONE growth rule, shared by :func:`fit_path_batched` and
+    the path service so the two front-ends can never desynchronize the
+    registry they share.  Growth is monotonic and idempotent
+    (:meth:`BucketRegistry.grow`): concurrent overflowing runs can only
+    raise the stored bucket, never shrink it.  Returns True if the bucket
+    grew.
     """
     if W >= p_cap or not np.asarray(fell_back).any():
         return False
-    _WS_BUCKETS[ws_key] = min(_next_pow2(int(np.asarray(ws_size).max())),
-                              p_cap)
-    return True
+    target = _next_pow2(int(np.asarray(ws_size).max()))
+    if two_tier and target < p_cap:
+        # the next run's second tier will sit at 2·(target/2) = target and
+        # cover the observed peak; fell_back implies peak > 2W, so the
+        # half-peak bucket (≥ 2W) still strictly exceeds the current W.
+        # (target ≥ p_cap keeps the full width: a halved bucket would get
+        # no 2× tier under the cap and just overflow again.)
+        target = max(target // 2, 1)
+    return _WS_BUCKETS.grow(ws_key, target, cap=p_cap)
 
 
 def _fit_path_batched(
@@ -712,6 +834,7 @@ def _fit_path_batched(
     kkt_tol: float = DEFAULT_KKT_TOL,
     max_refits: int = DEFAULT_MAX_REFITS,
     working_set: int | str | None = None,
+    ws_tiers: int | str = DEFAULT_WS_TIERS,
     pad: str | None = None,
 ) -> BatchedPathResult:
     """Fit B independent SLOPE paths in one compiled device program.
@@ -730,9 +853,12 @@ def _fit_path_batched(
     width bucket W (rounded up to a power of two, capped at p), ``"auto"``
     picks ``min(2^⌈log₂ max(2n, 64)⌉, p)`` with grow-on-overflow memory, and
     ``None`` keeps the masked full-width engine.  Compact solves cost
-    O(n·W) per FISTA iteration; any step where a batch member's working set
-    outgrows W falls back — correctly, in-graph — to the masked solve and
-    is flagged in ``compact_fallback``.
+    O(n·W) per FISTA iteration.  ``ws_tiers`` ("auto"/1/2, see
+    :func:`resolve_ws_tiers`) controls the second tier at 2·W: a member
+    whose working set outgrows W but fits 2·W is served by the wider
+    gather; only demand beyond the top tier falls back — correctly,
+    in-graph — to the masked solve for the whole batch and is flagged in
+    ``compact_fallback`` (per-member serving tiers in ``ws_tier``).
 
     ``pad="bucket"`` routes the batch through the serve layer's canonical
     execution shapes (:mod:`repro.serve.buckets`): rows/columns/batch slots
@@ -792,7 +918,7 @@ def _fit_path_batched(
     engine_kw = dict(screening=screening, max_iter=max_iter, tol=solver_tol,
                      kkt_tol=kkt_tol, max_refits=max_refits)
     t0 = time.perf_counter()
-    W = None
+    W = W2 = None
     stats = None
     if working_set is None:
         res = batched_path_engine(
@@ -800,10 +926,11 @@ def _fit_path_batched(
             jnp.asarray(sig_run), family, p_valid, **engine_kw)
     else:
         ws_key = (n_run, p_run, m, family.name, screening)
-        W = _ws_bucket(working_set, n_run, p_run, ws_key)
+        W, W2 = resolve_ws_tiers(working_set, ws_tiers, n_run, p_run, ws_key)
         res, stats = compact_path_engine(
             jnp.asarray(Xs_run), jnp.asarray(ys_run), jnp.asarray(lam_run),
-            jnp.asarray(sig_run), family, p_valid, width=W, **engine_kw)
+            jnp.asarray(sig_run), family, p_valid, width=W, width2=W2,
+            **engine_kw)
     res = EnginePath(*(np.asarray(a) for a in res))
     wall = time.perf_counter() - t0
     if stats is not None:
@@ -817,21 +944,24 @@ def _fit_path_batched(
             kkt_unrepaired=res.kkt_unrepaired[:B])
         if stats is not None:
             stats = CompactStats(ws_size=stats.ws_size[:B],
+                                 tier=stats.tier[:B],
                                  fell_back=stats.fell_back[:B])
     betas = res.betas  # (B, L, p, m)
     if m == 1:
         betas = betas[:, :, :, 0]
     unrepaired = res.kkt_unrepaired
     _warn_unrepaired(unrepaired, max_refits)
-    ws_size = fallback = None
+    ws_size = ws_tier = fallback = None
     if stats is not None:
         ws_size = stats.ws_size
+        ws_tier = stats.tier
         fallback = stats.fell_back
         # grow the bucket for the next same-shape "auto" call; explicit-int
         # runs (e.g. a deliberately undersized overflow probe) must not
         # seed "auto" with a bucket below its documented default
         if working_set == "auto":
-            grow_ws_bucket(ws_key, ws_size, fallback, W, p_run)
+            grow_ws_bucket(ws_key, ws_size, fallback, W, p_run,
+                           two_tier=ws_tiers != 1)
     return BatchedPathResult(
         betas=betas,
         sigmas=sigmas,
@@ -846,7 +976,9 @@ def _fit_path_batched(
         total_time=wall,
         n_samples=n,
         working_set=W,
+        working_set_top=W2,
         ws_size=ws_size,
+        ws_tier=ws_tier,
         compact_fallback=fallback,
         pad_shape=pad_shape,
     )
@@ -970,6 +1102,7 @@ def _cv_path(
     kkt_tol: float = DEFAULT_KKT_TOL,
     max_refits: int = DEFAULT_MAX_REFITS,
     working_set: int | str | None = None,
+    ws_tiers: int | str = DEFAULT_WS_TIERS,
     stratify="auto",
     selection: str = "min",
     pad: str | None = None,
@@ -1008,7 +1141,7 @@ def _cv_path(
         lam, family, screening=screening,
         sigmas=sigmas, solver_tol=solver_tol,  # 1-D grid: shared across folds
         max_iter=max_iter, kkt_tol=kkt_tol, max_refits=max_refits,
-        working_set=working_set, pad=pad,
+        working_set=working_set, ws_tiers=ws_tiers, pad=pad,
     )
 
     val_dev = cv_val_deviance(X, y, vals, res.betas, family)

@@ -21,7 +21,7 @@ from .sorted_l1 import prox_sorted_l1_with_norm, sorted_l1_norm
 
 __all__ = ["fista", "fista_masked", "fista_compact", "default_L0", "FistaResult",
            "DEFAULT_PATH_TOL", "DEFAULT_PATH_MAX_ITER", "DEFAULT_KKT_TOL",
-           "DEFAULT_MAX_REFITS"]
+           "DEFAULT_MAX_REFITS", "DEFAULT_WS_TIERS"]
 
 # Path-level solver defaults — the ONE source of truth shared by the host
 # driver, the device engines, the serve layer and repro.api.SolverPolicy.
@@ -31,6 +31,12 @@ DEFAULT_PATH_TOL = 1e-8
 DEFAULT_PATH_MAX_ITER = 5000
 DEFAULT_KKT_TOL = 1e-4
 DEFAULT_MAX_REFITS = 32
+# Working-set tier policy for the compact engine: "auto" gives every W
+# bucket a second 2W tier (when 2W < p) so a member whose screened set
+# creeps just past W promotes its own tier instead of sending the whole
+# batch to the masked O(n·p) fallback.  1 pins the single-tier PR-2
+# behaviour, 2 demands the second tier (still capped below p).
+DEFAULT_WS_TIERS = "auto"
 
 
 def default_L0(X: jax.Array, family: Family) -> jax.Array:
@@ -232,7 +238,11 @@ def fista_compact(
     :func:`fista_masked`) and that ``support(beta0) ⊆ mask``.
 
     ``width`` must be static (a Python int) — the path engine buckets it to
-    powers of two so a whole path reuses a handful of compilations.
+    powers of two so a whole path reuses a handful of compilations.  The
+    two-tier compact engine (PR 5) composes this primitive at two static
+    widths (W and 2W): each batch member's solve is served by the smallest
+    tier that fits its screened set, and only demand beyond the top tier
+    triggers the batch-wide masked fallback.
     """
     n, p = X.shape
     m = 1 if beta0.ndim == 1 else beta0.shape[1]

@@ -2,22 +2,32 @@
 interpret mode on CPU; see ops.py for dispatch and ref.py for oracles)."""
 
 from .ops import (
+    CompactGemvStats,
+    compact_gemv_stats,
     slope_gradient,
+    slope_gradient_compact,
     slope_gradient_masked,
     slope_residual,
+    slope_residual_compact,
     slope_residual_masked,
     slope_loss_residual,
+    slope_loss_residual_compact,
     screen_scan,
     prox_pool,
     prox_sorted_l1_kernel,
 )
 
 __all__ = [
+    "CompactGemvStats",
+    "compact_gemv_stats",
     "slope_gradient",
+    "slope_gradient_compact",
     "slope_gradient_masked",
     "slope_residual",
+    "slope_residual_compact",
     "slope_residual_masked",
     "slope_loss_residual",
+    "slope_loss_residual_compact",
     "screen_scan",
     "prox_pool",
     "prox_sorted_l1_kernel",

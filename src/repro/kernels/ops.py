@@ -1,15 +1,30 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Responsibilities: pad to block multiples, pick interpret mode (Pallas TPU
-kernels execute via the interpreter on CPU — that is how this container
-validates them; on a real TPU ``interpret=False`` compiles to Mosaic),
-fall back to the pure-jnp oracle where a kernel's preconditions don't hold
-(e.g. prox pooling beyond the VMEM budget).
+Responsibilities: pad to block multiples, pick interpret mode, fall back to
+the pure-jnp oracle where a kernel's preconditions don't hold (e.g. prox
+pooling beyond the VMEM budget, or a block-compacted call whose mask is a
+tracer), and — for the ``*_compact`` wrappers — build the live-block index
+list on the host and record per-call live-block telemetry
+(:func:`compact_gemv_stats`) so tests and benchmarks can assert that the
+remapped grid covers exactly the live blocks.
+
+Interpret mode: Pallas TPU kernels execute via the interpreter on CPU —
+that is how this container validates them; on a real TPU
+``interpret=False`` compiles to Mosaic.  The ``REPRO_PALLAS_INTERPRET``
+environment variable overrides the backend sniff (``1``/``true`` forces
+the interpreter even on TPU — useful to bisect Mosaic lowering bugs;
+``0``/``false`` forces compiled mode).  It is read at trace time, so flip
+it before the first call of a given shape.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import os
+import threading
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -21,25 +36,36 @@ from .slope_gemv import (
     DEFAULT_BN,
     DEFAULT_BP,
     xb_loss_residual,
+    xb_loss_residual_compact,
     xb_residual,
+    xb_residual_compact,
     xb_residual_masked,
     xt_matmul,
+    xt_matmul_compact,
     xt_matmul_masked,
 )
 
 __all__ = [
     "slope_gradient",
     "slope_gradient_masked",
+    "slope_gradient_compact",
     "slope_residual",
     "slope_residual_masked",
+    "slope_residual_compact",
     "slope_loss_residual",
+    "slope_loss_residual_compact",
     "screen_scan",
     "prox_pool",
     "prox_sorted_l1_kernel",
+    "CompactGemvStats",
+    "compact_gemv_stats",
 ]
 
 
 def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env:  # empty (or unset) falls through to the backend sniff
+        return env not in ("0", "false", "no")
     return jax.default_backend() != "tpu"
 
 
@@ -146,6 +172,208 @@ def slope_residual_masked(X, B, Y, mask, *, family: str = "none",
     )
     out = out[:n, :m]
     return out[:, 0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# block-compacted GEMVs: live-block grid remap via scalar prefetch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompactGemvStats:
+    """Telemetry for one block-compacted GEMV dispatch."""
+
+    op: str              # which wrapper ran
+    blocks_total: int    # column blocks in the padded (P/bp) grid axis
+    blocks_live: int     # blocks with ≥ 1 unmasked column == remapped extent
+    grid: tuple          # the Pallas grid actually launched
+
+    @property
+    def live_ratio(self) -> float:
+        return self.blocks_live / max(self.blocks_total, 1)
+
+
+# last dispatch per op — the assertion surface for "dead blocks were not
+# fetched": tests/benches check stats.grid's column extent == blocks_live.
+# Thread-LOCAL so a caller always reads its own dispatch, never another
+# thread's interleaved one (e.g. parallel test workers in one process)
+_COMPACT_TELEMETRY = threading.local()
+
+
+def _record_compact(op: str, stats: "CompactGemvStats") -> None:
+    table = getattr(_COMPACT_TELEMETRY, "table", None)
+    if table is None:
+        table = _COMPACT_TELEMETRY.table = {}
+    table[op] = stats
+
+
+def compact_gemv_stats(op: str | None = None):
+    """Live-block telemetry of the calling thread's most recent compact
+    dispatch(es).
+
+    ``op`` is one of ``"gradient"`` / ``"residual"`` / ``"loss_residual"``
+    (None returns the whole table).  Host-side bookkeeping only — the
+    values describe the launched grid, not traced array contents.
+    """
+    table = getattr(_COMPACT_TELEMETRY, "table", {})
+    if op is None:
+        return dict(table)
+    return table.get(op)
+
+
+def _live_blocks(mask_np: np.ndarray, P: int, bp: int) -> np.ndarray:
+    """Ascending indices of the (bp-wide) column blocks with any survivor."""
+    padded = np.zeros(P, bool)
+    padded[: mask_np.shape[0]] = mask_np
+    return np.flatnonzero(padded.reshape(P // bp, bp).any(axis=1)).astype(
+        np.int32)
+
+
+def _concrete_mask(mask) -> np.ndarray | None:
+    """The mask as a host bool array, or None when it is a tracer (a
+    traced mask cannot size a static grid — callers fall back to the
+    masked kernels, which are semantically identical)."""
+    if isinstance(mask, jax.core.Tracer):
+        return None
+    return np.asarray(mask).astype(bool)
+
+
+def slope_gradient_compact(X, R, mask, *, bn: int = DEFAULT_BN,
+                           bp: int = DEFAULT_BP, use_kernel: bool = True):
+    """∇f = (X ⊙ mask)ᵀ R with dead column blocks never DMA'd.
+
+    The live-block list is built host-side from ``mask`` (which must be
+    concrete; a traced mask silently degrades to
+    :func:`slope_gradient_masked` — same results, block-skip without the
+    bandwidth saving) and remaps the Pallas grid via scalar prefetch, so
+    a working set of W columns streams ⌈W/bp⌉ blocks of X instead of p/bp.
+    Bit-identical to the masked kernel; dead columns' gradient rows are
+    exactly 0.
+    """
+    squeeze = R.ndim == 1
+    R2 = R[:, None] if squeeze else R
+    if not use_kernel:
+        out = _ref.xt_matmul_compact_ref(X, R2, mask)
+        return out[:, 0] if squeeze else out
+    mask_np = _concrete_mask(mask)
+    if mask_np is None:
+        return slope_gradient_masked(X, R, mask, bn=bn, bp=bp)
+    n, p = X.shape
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    P = _round_up(p, bp_)
+    live = _live_blocks(mask_np, P, bp_)
+    n_live = int(live.shape[0])
+    _record_compact("gradient", CompactGemvStats(
+        op="gradient", blocks_total=P // bp_, blocks_live=n_live,
+        grid=(n_live, _round_up(n, bn_) // bn_)))
+    mR = R2.shape[1]
+    if n_live == 0:
+        out = jnp.zeros((p, mR), X.dtype)
+        return out[:, 0] if squeeze else out
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Rp = _pad_to(_pad_to(R2, bn_, 0), 128, 1)
+    Mp = _pad_to(mask_np.astype(X.dtype)[None, :], bp_, 1)
+    outc = xt_matmul_compact(Xp, Rp, Mp, jnp.asarray(live), bn=bn_, bp=bp_,
+                             interpret=_interpret())
+    full = jnp.zeros((P // bp_, bp_, outc.shape[1]), outc.dtype)
+    full = full.at[jnp.asarray(live)].set(
+        outc.reshape(n_live, bp_, outc.shape[1]))
+    out = full.reshape(P, -1)[:p, :mR]
+    return out[:, 0] if squeeze else out
+
+
+def slope_residual_compact(X, B, Y, mask, *, family: str = "none",
+                           bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
+                           use_kernel: bool = True):
+    """r = ∂ℓ/∂z at z = (X ⊙ mask)·B with dead column blocks never DMA'd.
+
+    Same contract as :func:`slope_residual_masked` (bit-identical results);
+    a traced mask degrades to the masked kernel.
+    """
+    squeeze = B.ndim == 1
+    B2 = B[:, None] if squeeze else B
+    Y2 = Y[:, None] if Y.ndim == 1 else Y
+    if not use_kernel:
+        out = _ref.xb_residual_compact_ref(X, B2, Y2, mask, family)
+        return out[:, 0] if squeeze else out
+    mask_np = _concrete_mask(mask)
+    if mask_np is None:
+        return slope_residual_masked(X, B, Y, mask, family=family, bn=bn,
+                                     bp=bp)
+    n, p = X.shape
+    m = B2.shape[1]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    P = _round_up(p, bp_)
+    live = _live_blocks(mask_np, P, bp_)
+    n_live = int(live.shape[0])
+    _record_compact("residual", CompactGemvStats(
+        op="residual", blocks_total=P // bp_, blocks_live=n_live,
+        grid=(_round_up(n, bn_) // bn_, n_live)))
+    if n_live == 0:  # z ≡ 0: the epilogue alone decides the residual
+        z = jnp.zeros((n, m), jnp.promote_types(X.dtype, jnp.float32))
+        out = _ref._epilogue(z, Y2.astype(z.dtype), family).astype(X.dtype)
+        return out[:, 0] if squeeze else out
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Bp = _pad_to(_pad_to(B2, bp_, 0), 128, 1)
+    Yp = _pad_to(_pad_to(Y2, bn_, 0), 128, 1)
+    Mp = _pad_to(mask_np.astype(X.dtype)[None, :], bp_, 1)
+    out = xb_residual_compact(
+        Xp, Bp, Yp, Mp, jnp.asarray(live), family=family, m_actual=m,
+        bn=bn_, bp=bp_, interpret=_interpret())
+    out = out[:n, :m]
+    return out[:, 0] if squeeze else out
+
+
+def slope_loss_residual_compact(X, B, Y, mask, *, family: str = "none",
+                                bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
+                                use_kernel: bool = True):
+    """(ℓ(z, y), r) at z = (X ⊙ mask)·B in one live-blocks-only pass over X.
+
+    The compact analogue of :func:`slope_loss_residual`.  A traced mask
+    degrades to the pure-jnp masked oracle (one ``X ⊙ mask`` pass for both
+    halves — there is no fused *masked* Pallas kernel to fall back on,
+    unlike the gradient/residual wrappers which degrade to their masked
+    kernels).
+    """
+    squeeze = B.ndim == 1
+    B2 = B[:, None] if squeeze else B
+    Y2 = Y[:, None] if Y.ndim == 1 else Y
+    if not use_kernel:
+        r, rows = _ref.xb_loss_residual_compact_ref(X, B2, Y2, mask, family)
+        return jnp.sum(rows), (r[:, 0] if squeeze else r)
+    mask_np = _concrete_mask(mask)
+    if mask_np is None:
+        r, rows = _ref.xb_loss_residual_compact_ref(X, B2, Y2, mask, family)
+        return jnp.sum(rows), (r[:, 0] if squeeze else r)
+    n, p = X.shape
+    m = B2.shape[1]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    P = _round_up(p, bp_)
+    live = _live_blocks(mask_np, P, bp_)
+    n_live = int(live.shape[0])
+    _record_compact("loss_residual", CompactGemvStats(
+        op="loss_residual", blocks_total=P // bp_, blocks_live=n_live,
+        grid=(_round_up(n, bn_) // bn_, n_live)))
+    if n_live == 0:
+        z = jnp.zeros((n, m), jnp.promote_types(X.dtype, jnp.float32))
+        Yz = Y2.astype(z.dtype)
+        r = _ref._epilogue(z, Yz, family).astype(X.dtype)
+        loss = jnp.sum(_ref._row_loss(z, Yz, family))
+        return loss, (r[:, 0] if squeeze else r)
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Bp = _pad_to(_pad_to(B2, bp_, 0), 128, 1)
+    Yp = _pad_to(_pad_to(Y2, bn_, 0), 128, 1)
+    Mp = _pad_to(mask_np.astype(X.dtype)[None, :], bp_, 1)
+    r, rows = xb_loss_residual_compact(
+        Xp, Bp, Yp, Mp, jnp.asarray(live), family=family, m_actual=m,
+        bn=bn_, bp=bp_, interpret=_interpret())
+    # padded rows see z = 0, y = 0 — nonzero loss for e.g. logistic — so
+    # the reduction must slice the real rows first (as in the fused kernel)
+    loss = jnp.sum(rows[:n, 0])
+    r = r[:n, :m]
+    return loss, (r[:, 0] if squeeze else r)
 
 
 @functools.partial(jax.jit, static_argnames=("family", "bn", "bp", "use_kernel"))

@@ -13,9 +13,12 @@ import jax.numpy as jnp
 __all__ = [
     "xt_matmul_ref",
     "xt_matmul_masked_ref",
+    "xt_matmul_compact_ref",
     "xb_residual_ref",
     "xb_residual_masked_ref",
+    "xb_residual_compact_ref",
     "xb_loss_residual_ref",
+    "xb_loss_residual_compact_ref",
     "screen_scan_ref",
     "prox_pool_ref",
 ]
@@ -31,6 +34,13 @@ def xt_matmul_ref(X: jax.Array, R: jax.Array) -> jax.Array:
 def xt_matmul_masked_ref(X: jax.Array, R: jax.Array, mask: jax.Array) -> jax.Array:
     """Masked gradient matvec: (X ⊙ mask)ᵀ R; ``mask`` is a (p,) column mask."""
     return xt_matmul_ref(X * mask.astype(X.dtype)[None, :], R)
+
+
+# The block-compacted kernels are an *execution* strategy, not new math:
+# skipping the DMA of a dead (bn × bp) block must not change a single bit
+# of the result.  Their oracles are therefore exactly the masked ones —
+# the kernel tests pin compact == masked == oracle at every block pattern.
+xt_matmul_compact_ref = xt_matmul_masked_ref
 
 
 def _epilogue(z: jax.Array, y: jax.Array, family: str) -> jax.Array:
@@ -64,6 +74,17 @@ def xb_residual_masked_ref(X: jax.Array, B: jax.Array, y: jax.Array,
                            mask: jax.Array, family: str = "none") -> jax.Array:
     """Masked residual: r at z = (X ⊙ mask)·B; ``mask`` is a (p,) column mask."""
     return xb_residual_ref(X * mask.astype(X.dtype)[None, :], B, y, family)
+
+
+xb_residual_compact_ref = xb_residual_masked_ref  # see xt_matmul_compact_ref
+
+
+def xb_loss_residual_compact_ref(X: jax.Array, B: jax.Array, y: jax.Array,
+                                 mask: jax.Array, family: str = "none"):
+    """Masked fused forward pair — the oracle for the block-compacted
+    loss+residual kernel (see :data:`xt_matmul_compact_ref`)."""
+    return xb_loss_residual_ref(X * mask.astype(X.dtype)[None, :], B, y,
+                                family)
 
 
 def _row_loss(z: jax.Array, y: jax.Array, family: str) -> jax.Array:

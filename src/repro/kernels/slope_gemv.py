@@ -15,9 +15,19 @@ Mask-aware variants (``*_masked``) take a (1, p) column mask alongside X and
 skip the MXU work of any (bn × bp) block whose bp-wide mask slice is all
 zero — the per-block summary is reduced from the mask tile in VMEM, so a
 screened working set of W columns costs ⌈W/bp⌉ column blocks of compute
-instead of p/bp.  (The block DMA still streams; true bandwidth compaction
-is the solver-level column gather in ``repro.core.solver.fista_compact`` —
-these kernels cover the masked full-width fallback path.)
+instead of p/bp.  The block DMA still streams every block, dead or alive.
+
+Block-compacted variants (``*_compact``) close that bandwidth gap: they
+take a **live-block index list** (the column blocks whose mask slice has
+any survivor, computed on the host from the per-block mask summary) as a
+scalar-prefetch operand and remap the Pallas grid through it — the grid's
+column axis has exactly ``len(live_idx)`` steps and the ``BlockSpec`` index
+maps read ``live_idx[pb]``, so dead (bn × bp) blocks are never DMA'd at
+all.  Scalar prefetch makes the indices available before the kernel body
+runs, which is what lets Mosaic schedule the remapped DMAs on TPU; on CPU
+the same kernels execute in interpret mode (how this container validates
+them).  Within a live block the mask still zeroes dead columns, so compact
+results are bit-identical to the masked kernels.
 
 ``xb_loss_residual`` fuses the loss reduction into the residual epilogue so
 one pass over X yields both ℓ(z, y) and r = ∂ℓ/∂z — the pair every FISTA
@@ -36,9 +46,12 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "xt_matmul",
     "xt_matmul_masked",
+    "xt_matmul_compact",
     "xb_residual",
     "xb_residual_masked",
+    "xb_residual_compact",
     "xb_loss_residual",
+    "xb_loss_residual_compact",
     "DEFAULT_BN",
     "DEFAULT_BP",
 ]
@@ -282,6 +295,221 @@ def xb_residual_masked(
         scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
         interpret=interpret,
     )(X, B, Y, mask)
+
+
+def _xt_matmul_compact_kernel(live_ref, x_ref, r_ref, mask_ref, o_ref,
+                              acc_ref):
+    del live_ref  # consumed by the BlockSpec index maps, not the body
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # every visited block is live by construction (the grid is the
+    # live-block list); the mask multiply only zeroes dead columns *inside*
+    # live blocks, keeping results bit-identical to the masked kernel
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...] * mask_ref[...],
+        r_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(nb == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def xt_matmul_compact(
+    X: jax.Array,
+    R: jax.Array,
+    mask: jax.Array,
+    live_idx: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """G blocks of (X ⊙ mask)ᵀ R for the live column blocks only.
+
+    ``live_idx`` is a static-length (n_live,) int32 list of column-block
+    indices (ascending); it rides in as a scalar-prefetch operand and the
+    grid's column axis is remapped through it, so dead (bn × bp) blocks of
+    X are neither DMA'd nor computed.  Returns the **compacted**
+    ``(n_live·bp, m)`` output — block ``k`` holds the gradient rows of
+    column block ``live_idx[k]`` (the ops-layer wrapper scatters them back
+    to p-space, dead blocks exactly 0).  Caller pads to blocks.
+    """
+    n, p = X.shape
+    m = R.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    assert mask.shape == (1, p), mask.shape
+    n_live = live_idx.shape[0]
+    assert n_live >= 1, "use the ops-layer wrapper for all-dead masks"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_live, n // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda pb, nb, live: (nb, live[pb])),
+            pl.BlockSpec((bn, m), lambda pb, nb, live: (nb, 0)),
+            pl.BlockSpec((1, bp), lambda pb, nb, live: (0, live[pb])),
+        ],
+        out_specs=pl.BlockSpec((bp, m), lambda pb, nb, live: (pb, 0)),
+        scratch_shapes=[pltpu.VMEM((bp, m), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _xt_matmul_compact_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_live * bp, m), X.dtype),
+        interpret=interpret,
+    )(live_idx, X, R, mask)
+
+
+def _xb_residual_compact_kernel(live_ref, x_ref, b_ref, y_ref, mask_ref,
+                                o_ref, acc_ref, *, family, m_actual):
+    del live_ref
+    pb = pl.program_id(1)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...] * mask_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pb == pl.num_programs(1) - 1)
+    def _flush():
+        z = acc_ref[...]
+        o_ref[...] = _epilogue(z, y_ref[...].astype(jnp.float32), family,
+                               m_actual).astype(o_ref.dtype)
+
+
+def xb_residual_compact(
+    X: jax.Array,
+    B: jax.Array,
+    Y: jax.Array,
+    mask: jax.Array,
+    live_idx: jax.Array,
+    *,
+    family: str = "none",
+    m_actual: int | None = None,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """r = ∂ℓ/∂z at z = (X ⊙ mask)·B over the live column blocks only.
+
+    The accumulation axis is remapped through ``live_idx`` (scalar
+    prefetch), so z sums exactly the live blocks' contributions — the same
+    partial sums, in the same order, the masked kernel accumulates while
+    still streaming every block.  Dead blocks contribute exactly 0 there,
+    so skipping their DMA leaves the result bit-identical.
+    """
+    n, p = X.shape
+    m = B.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    assert mask.shape == (1, p), mask.shape
+    m_actual = m if m_actual is None else m_actual
+    n_live = live_idx.shape[0]
+    assert n_live >= 1, "use the ops-layer wrapper for all-dead masks"
+    kernel = functools.partial(_xb_residual_compact_kernel, family=family,
+                               m_actual=m_actual)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // bn, n_live),
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda nb, pb, live: (nb, live[pb])),
+            pl.BlockSpec((bp, m), lambda nb, pb, live: (live[pb], 0)),
+            pl.BlockSpec((bn, m), lambda nb, pb, live: (nb, 0)),
+            pl.BlockSpec((1, bp), lambda nb, pb, live: (0, live[pb])),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda nb, pb, live: (nb, 0)),
+        scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), X.dtype),
+        interpret=interpret,
+    )(live_idx, X, B, Y, mask)
+
+
+def _xb_loss_residual_compact_kernel(live_ref, x_ref, b_ref, y_ref, mask_ref,
+                                     r_ref, loss_ref, acc_ref, *, family,
+                                     m_actual):
+    del live_ref
+    pb = pl.program_id(1)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...] * mask_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pb == pl.num_programs(1) - 1)
+    def _flush():
+        z = acc_ref[...]
+        y = y_ref[...].astype(jnp.float32)
+        r_ref[...] = _epilogue(z, y, family, m_actual).astype(r_ref.dtype)
+        rl = _row_loss(z, y, family, m_actual)  # (bn,)
+        loss_ref[...] = jnp.broadcast_to(rl[:, None],
+                                         loss_ref.shape).astype(loss_ref.dtype)
+
+
+def xb_loss_residual_compact(
+    X: jax.Array,
+    B: jax.Array,
+    Y: jax.Array,
+    mask: jax.Array,
+    live_idx: jax.Array,
+    *,
+    family: str = "none",
+    m_actual: int | None = None,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (r, per-row loss) at z = (X ⊙ mask)·B, live blocks only.
+
+    The compact analogue of :func:`xb_loss_residual`: one remapped pass
+    over the live blocks of X yields both halves of the FISTA forward
+    pair, with dead-block DMA skipped entirely.
+    """
+    n, p = X.shape
+    m = B.shape[1]
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    assert mask.shape == (1, p), mask.shape
+    m_actual = m if m_actual is None else m_actual
+    n_live = live_idx.shape[0]
+    assert n_live >= 1, "use the ops-layer wrapper for all-dead masks"
+    kernel = functools.partial(_xb_loss_residual_compact_kernel,
+                               family=family, m_actual=m_actual)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // bn, n_live),
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda nb, pb, live: (nb, live[pb])),
+            pl.BlockSpec((bp, m), lambda nb, pb, live: (live[pb], 0)),
+            pl.BlockSpec((bn, m), lambda nb, pb, live: (nb, 0)),
+            pl.BlockSpec((1, bp), lambda nb, pb, live: (0, live[pb])),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, m), lambda nb, pb, live: (nb, 0)),
+            pl.BlockSpec((bn, m), lambda nb, pb, live: (nb, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), X.dtype),
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(live_idx, X, B, Y, mask)
 
 
 def _row_loss(z, y, family: str, m_actual: int):

@@ -119,6 +119,36 @@ class BucketRegistry:
         with self._lock:
             return len(self._data)
 
+    def grow(self, key, value: int, cap: int | None = None) -> bool:
+        """Monotonic, idempotent growth: raise ``key``'s bucket to at least
+        ``value`` (clipped to ``cap``), never shrink it.
+
+        This is the ONE write path for grow-on-overflow working-set entries:
+        plain ``__setitem__`` is last-write-wins, so two concurrent
+        overflowing runs (service flush + direct call) could overwrite a
+        larger grown bucket with a smaller one and re-pay the fallback the
+        larger run already learned to avoid.  ``cap`` bounds the stored
+        bucket at the native column count — a bucket wider than ``p`` is
+        wasted compaction (the gather would cover every column and the
+        compact solve degenerates to the masked one plus gather overhead).
+        Returns True iff the stored value changed.
+        """
+        if cap is not None:
+            value = min(int(value), int(cap))
+        with self._lock:
+            current = self._data.get(key)
+            if current is not None and current >= value:
+                self._data.move_to_end(key)
+                self._hits += 1
+                return False
+            self._data[key] = value
+            self._data.move_to_end(key)
+            self._updates += 1
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self._evictions += 1
+            return True
+
     def pop(self, key, default=None):
         with self._lock:
             return self._data.pop(key, default)

@@ -37,8 +37,10 @@ class ProgramSpec:
 
     ``working_set=None`` selects the masked full-width engine; an int is the
     *resolved* static compact width W (power-of-two, resolution happens in
-    the service/engine, not here).  ``n_rows``/``n_cols`` are the padded
-    bucket shape, ``batch`` the padded slot count.
+    the service/engine, not here).  ``working_set_top`` is the resolved
+    second-tier width (None: single tier) — part of the key because the
+    two-tier engine is a different compiled program.  ``n_rows``/``n_cols``
+    are the padded bucket shape, ``batch`` the padded slot count.
     """
 
     family: Family
@@ -52,11 +54,14 @@ class ProgramSpec:
     kkt_tol: float = 1e-4
     max_refits: int = 32
     working_set: int | None = None
+    working_set_top: int | None = None
     dtype: str = "float64"
     y_dtype: str = "float64"
 
     def short(self) -> str:
         w = f"W{self.working_set}" if self.working_set else "masked"
+        if self.working_set and self.working_set_top:
+            w += f"+{self.working_set_top}"
         return (f"{self.family.name}/B{self.batch}n{self.n_rows}"
                 f"p{self.n_cols}L{self.path_length}/{w}")
 
@@ -66,11 +71,17 @@ class ProgramSpec:
         choices through the same introspection surface the planner uses."""
         from ..api.plan import ExecutionPlan
 
+        if self.working_set is None:
+            tiers = None
+        elif self.working_set_top is None:
+            tiers = (self.working_set,)
+        else:
+            tiers = (self.working_set, self.working_set_top)
         return ExecutionPlan(
             backend="serve",
             mode="compact" if self.working_set else "masked",
             batch=self.batch, n=self.n_rows, p=self.n_cols,
-            working_set=self.working_set, pad="bucket",
+            working_set=self.working_set, ws_tiers=tiers, pad="bucket",
             exec_shape=(self.batch, self.n_rows, self.n_cols),
             screening=self.screening,
             device=jax.default_backend(),
@@ -119,7 +130,9 @@ def _build(spec: ProgramSpec) -> tuple:
         lowered = batched_path_engine.lower(*args, spec.family, pv, **kw)
     else:
         lowered = compact_path_engine.lower(*args, spec.family, pv,
-                                            width=spec.working_set, **kw)
+                                            width=spec.working_set,
+                                            width2=spec.working_set_top,
+                                            **kw)
     compiled = lowered.compile()
     return compiled, time.perf_counter() - t0
 

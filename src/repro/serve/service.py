@@ -69,7 +69,10 @@ from ..core.engine import (
     cv_val_deviance,
     grow_ws_bucket,
     null_sigma_grid,
+    resolve_ws_tiers,
+    second_tier_width,
 )
+from ..core.solver import DEFAULT_WS_TIERS
 from ..core.losses import Family, ols
 from .batcher import LambdaCanonicalizer, MicroBatcher
 from .buckets import ShapeBucketPolicy, default_policy, pad_batch
@@ -105,6 +108,8 @@ class _GroupKey:
     kkt_tol: float
     max_refits: int
     working_set: int | str | None   # None | resolved pow2 int | "auto"
+    ws_tiers: int                   # canonical tier policy (1 | 2; "auto"
+    #   normalizes to 2 at submit, masked requests to 1)
     dtype: str
     y_dtype: str
 
@@ -127,7 +132,9 @@ class PathResponse:
     kkt_unrepaired: np.ndarray   # (L,) bool per path step
     kkt_ok: bool                 # no step hit the repair cap unclean
     working_set: int | None
+    working_set_top: int | None  # second compact tier (None: single tier)
     ws_size: np.ndarray | None
+    ws_tier: np.ndarray | None   # (L,) serving tier per step (0 = fallback)
     compact_fallback: np.ndarray | None
     queue_s: float               # admission → flush
     solve_s: float               # batch device wall (shared by the batch)
@@ -252,6 +259,7 @@ class PathService:
                max_iter: int = 5000, kkt_tol: float = 1e-4,
                max_refits: int = 32,
                working_set: int | str | None = None,
+               ws_tiers: int | str = DEFAULT_WS_TIERS,
                cv_folds: int | None = None, stratify="auto",
                selection: str = "min", _cv_fold: bool = False,
                problem: Problem | None = None,
@@ -299,13 +307,27 @@ class PathService:
         if lam.shape != (p * m,):
             raise ValueError(f"lam must have p·m = {p * m} entries, got "
                              f"{lam.shape}")
+        if ws_tiers not in ("auto", 1, 2) or isinstance(ws_tiers, bool):
+            raise ValueError(
+                f"ws_tiers must be 'auto', 1 or 2, got {ws_tiers!r}")
+        # canonical tier knob for the group key: the knob is irrelevant to
+        # masked programs, "auto" IS 2 under the shared recipe, and an
+        # explicit W whose 2W would span the bucket degenerates to single
+        # tier for every knob value — two requests that compile the same
+        # program must share a micro-batch.  ("auto" working sets resolve W
+        # at flush time, so their degenerate case cannot be folded here.)
+        if working_set is None or ws_tiers == 1:
+            ws_tiers = 1
+        else:
+            ws_tiers = 2
         if cv_folds is not None:
             return self._submit_cv(
                 X, y, lam, family, n_folds=cv_folds, stratify=stratify,
                 selection=selection, sigmas=sigmas, path_length=path_length,
                 sigma_ratio=sigma_ratio, screening=screening,
                 solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
-                max_refits=max_refits, working_set=working_set)
+                max_refits=max_refits, working_set=working_set,
+                ws_tiers=ws_tiers)
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -321,11 +343,13 @@ class PathService:
             # resolve through the engine's own rule (validation + pow2 cap)
             # so the service can never diverge from the direct path
             ws = _ws_bucket(ws, N, P, (N, P, m, family.name, screening))
+            if ws_tiers == 2 and second_tier_width(ws, 2, P) is None:
+                ws_tiers = 1  # 2W spans the bucket: single tier either way
         key = _GroupKey(
             family=family, n_rows=N, n_cols=P, path_length=len(sigmas),
             screening=screening, solver_tol=solver_tol, max_iter=max_iter,
             kkt_tol=kkt_tol, max_refits=max_refits, working_set=ws,
-            dtype=X.dtype.name, y_dtype=y.dtype.name)
+            ws_tiers=ws_tiers, dtype=X.dtype.name, y_dtype=y.dtype.name)
         item = _Item(X=X, y=y, lam=lam, sigmas=sigmas, family=family,
                      working_set=ws)
         with self._lock:
@@ -384,12 +408,14 @@ class PathService:
             screening=policy.screening, solver_tol=policy.solver_tol,
             max_iter=policy.max_iter, kkt_tol=policy.kkt_tol,
             max_refits=policy.max_refits, working_set=ws,
+            ws_tiers=policy.ws_tiers,
             cv_folds=path.cv_folds, stratify=path.stratify,
             selection=path.selection, _cv_fold=_cv_fold)
 
     def _submit_cv(self, X, y, lam, family, *, n_folds, stratify, selection,
                    sigmas, path_length, sigma_ratio, screening, solver_tol,
-                   max_iter, kkt_tol, max_refits, working_set) -> int:
+                   max_iter, kkt_tol, max_refits, working_set,
+                   ws_tiers=DEFAULT_WS_TIERS) -> int:
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -402,7 +428,7 @@ class PathService:
                         screening=screening, solver_tol=solver_tol,
                         max_iter=max_iter, kkt_tol=kkt_tol,
                         max_refits=max_refits, working_set=working_set,
-                        _cv_fold=True)
+                        ws_tiers=ws_tiers, _cv_fold=True)
             for tr in trains
         ]
         with self._lock:
@@ -438,16 +464,21 @@ class PathService:
         m = family.n_classes
         N, P, L = key.n_rows, key.n_cols, key.path_length
         W = key.working_set
+        W2 = None
         ws_key = None
-        if W == "auto":
+        if W is not None:
+            # resolve tier widths through the engine's own recipe so the
+            # served program shape can never diverge from a direct call
             ws_key = (N, P, m, family.name, key.screening)
-            W = _ws_bucket("auto", N, P, ws_key)
+            W, W2 = resolve_ws_tiers(W, key.ws_tiers, N, P, ws_key)
+            if key.working_set != "auto":
+                ws_key = None  # explicit widths never touch the registry
         spec = ProgramSpec(
             family=family, batch=self.slots, n_rows=N, n_cols=P,
             path_length=L, screening=key.screening,
             solver_tol=key.solver_tol, max_iter=key.max_iter,
             kkt_tol=key.kkt_tol, max_refits=key.max_refits, working_set=W,
-            dtype=key.dtype, y_dtype=key.y_dtype)
+            working_set_top=W2, dtype=key.dtype, y_dtype=key.y_dtype)
         pb = pad_batch([(it.item.X, it.item.y, it.item.lam, it.item.sigmas)
                         for it in batch],
                        n_rows=N, n_cols=P, n_slots=self.slots, n_classes=m)
@@ -466,7 +497,8 @@ class PathService:
         # fit_path_batched(working_set="auto") uses
         if ws_key is not None and stats is not None:
             grow_ws_bucket(ws_key, stats.ws_size[:B_real],
-                           stats.fell_back[:B_real], W, P)
+                           stats.fell_back[:B_real], W, P,
+                           two_tier=key.ws_tiers != 1)
         occupancy = B_real / self.slots
         plan_summary = spec.plan().summary()
         with self._lock:
@@ -492,7 +524,9 @@ class PathService:
                     solver_iters=ep.solver_iters[i],
                     deviance=ep.deviance[i], kkt_unrepaired=unrep,
                     kkt_ok=not bool(unrep.any()), working_set=W,
+                    working_set_top=W2,
                     ws_size=None if stats is None else stats.ws_size[i],
+                    ws_tier=None if stats is None else stats.tier[i],
                     compact_fallback=(None if stats is None
                                       else stats.fell_back[i]),
                     queue_s=max(0.0, now - pending.submitted), solve_s=wall,
@@ -560,22 +594,23 @@ class PathService:
                max_iter: int = 5000, kkt_tol: float = 1e-4,
                max_refits: int = 32,
                working_set: int | str | None = None,
+               ws_tiers: int | str = DEFAULT_WS_TIERS,
                dtype: str = "float64", y_dtype: str = "float64") -> dict:
         """Pre-compile the programs a list of native ``(n, p)`` shapes will
         need, so the first live request pays no XLA latency."""
         specs = []
         for n, p in shapes:
             N, P = self.policy.shape_bucket(n, p, family.name)
-            W = working_set
-            if W is not None:
+            W = W2 = None
+            if working_set is not None:
                 ws_key = (N, P, family.n_classes, family.name, screening)
-                W = _ws_bucket(W, N, P, ws_key)
+                W, W2 = resolve_ws_tiers(working_set, ws_tiers, N, P, ws_key)
             specs.append(ProgramSpec(
                 family=family, batch=self.slots, n_rows=N, n_cols=P,
                 path_length=path_length, screening=screening,
                 solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
-                max_refits=max_refits, working_set=W, dtype=dtype,
-                y_dtype=y_dtype))
+                max_refits=max_refits, working_set=W, working_set_top=W2,
+                dtype=dtype, y_dtype=y_dtype))
         return self.cache.warmup(specs)
 
     def stats(self) -> dict:

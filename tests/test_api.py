@@ -70,11 +70,12 @@ EXPECTED_FIELDS = {
     LambdaSpec: ["kind", "q", "values"],
     PathSpec: ["lam", "path_length", "sigma_ratio", "sigmas", "early_stop",
                "cv_folds", "stratify", "selection"],
-    SolverPolicy: ["backend", "working_set", "pad", "screening",
+    SolverPolicy: ["backend", "working_set", "ws_tiers", "pad", "screening",
                    "solver_tol", "max_iter", "kkt_tol", "max_refits",
                    "verbose"],
     ExecutionPlan: ["backend", "mode", "batch", "n", "p", "working_set",
-                    "pad", "exec_shape", "screening", "device", "reasons"],
+                    "ws_tiers", "pad", "exec_shape", "screening", "device",
+                    "reasons"],
 }
 
 

@@ -148,6 +148,103 @@ def test_compact_engine_overflow_falls_back():
     assert over.ws_size.max() > 4
 
 
+# ---------------------------------------------------------------------------
+# two-tier working sets (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_resolve_ws_tiers_recipe():
+    """The ONE tier recipe: 2W second tier when it fits under p, single
+    tier when pinned or when 2W would span p (the masked fallback IS the
+    top tier there)."""
+    from repro.core.engine import _WS_BUCKETS, resolve_ws_tiers
+
+    key = ("tier-recipe-test",)
+    _WS_BUCKETS.pop(key, None)
+    assert resolve_ws_tiers(16, "auto", 40, 256, key) == (16, 32)
+    assert resolve_ws_tiers(16, 2, 40, 256, key) == (16, 32)
+    assert resolve_ws_tiers(16, 1, 40, 256, key) == (16, None)
+    # 2W ≥ p degenerates to single tier under every policy
+    assert resolve_ws_tiers(16, "auto", 40, 32, key) == (16, None)
+    assert resolve_ws_tiers(16, 2, 40, 32, key) == (16, None)
+    with pytest.raises(ValueError):
+        resolve_ws_tiers(16, 3, 40, 256, key)
+    with pytest.raises(ValueError):
+        resolve_ws_tiers(16, "both", 40, 256, key)
+
+
+def test_two_tier_per_member_promotion_and_fallback_cut():
+    """The two-tier contract on one p ≫ n batch, single vs two tier:
+
+    * a member whose screened set outgrows W (but fits 2W) is served at
+      tier 2 while another member of the SAME step stays at tier 1;
+    * steps whose peak demand lands in (W, 2W] stop falling back, so the
+      two-tier fallback count is strictly below the single-tier one;
+    * both engines match the masked solve, violations included.
+    """
+    from repro.core.engine import _fit_path_batched
+
+    B, n, p = 4, 40, 256
+    probs = [make_regression(n, p, k=5, rho=0.0, seed=s, noise=0.3)[:2]
+             for s in range(B)]
+    Xs = np.stack([X for X, _ in probs])
+    ys = np.stack([y for _, y in probs])
+    lam = np.asarray(bh_sequence(p, q=0.05))
+    kw = dict(path_length=20, solver_tol=1e-12, max_iter=30000,
+              kkt_tol=1e-4, sigma_ratio=0.5)
+    masked = _fit_path_batched(Xs, ys, lam, ols, **kw)
+    single = _fit_path_batched(Xs, ys, lam, ols, working_set=8, ws_tiers=1,
+                               **kw)
+    two = _fit_path_batched(Xs, ys, lam, ols, working_set=8,
+                            ws_tiers="auto", **kw)
+    assert (two.working_set, two.working_set_top) == (8, 16)
+    assert single.working_set_top is None
+    fb_single = int(single.compact_fallback.any(axis=0).sum())
+    fb_two = int(two.compact_fallback.any(axis=0).sum())
+    assert fb_single > fb_two  # the second tier absorbed real steps
+    np.testing.assert_allclose(single.betas, masked.betas, atol=1e-9)
+    np.testing.assert_allclose(two.betas, masked.betas, atol=1e-9)
+    np.testing.assert_array_equal(two.n_violations, masked.n_violations)
+    # some step promoted only part of the batch: one member runs at tier 2
+    # while another member of the same step is served at tier 1
+    mixed = (two.ws_tier == 2).any(axis=0) & (two.ws_tier == 1).any(axis=0)
+    assert mixed.any()
+    # tier accounting is consistent with demand: tier-1 steps fit W,
+    # tier-2 steps need (W, 2W], fallback (tier 0) only past the top tier
+    assert (two.ws_size[two.ws_tier == 1] <= 8).all()
+    assert (two.ws_size[two.ws_tier == 2] <= 16).all()
+    assert (two.ws_size[two.ws_tier == 2] > 8).all()
+    fb_cols = two.compact_fallback.any(axis=0)
+    assert ((two.ws_tier == 0) == fb_cols[None, :].repeat(B, axis=0)).all()
+    assert (two.ws_size.max(axis=0)[fb_cols] > 16).all()
+
+
+def test_two_tier_overflow_past_top_falls_back_whole_batch():
+    """Demand beyond the top tier still sends the WHOLE batch to the
+    masked solve — flagged in CompactStats.fell_back / tier 0 — and the
+    forced per-member overflow reproduces the masked results."""
+    from repro.core.engine import _fit_path_batched
+
+    B, n, p = 3, 40, 96
+    Xs, ys = _batch_problems(B, n, p)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    masked = fit_path_batched(Xs, ys, lam, ols, **KW)
+    over = _fit_path_batched(Xs, ys, lam, ols, working_set=2, ws_tiers=2,
+                             **KW)
+    assert (over.working_set, over.working_set_top) == (2, 4)
+    assert over.compact_fallback.any()
+    # fallback steps are tier 0 for every member (the fallback is batch-
+    # wide by construction — the scalar gate is what keeps it a real branch)
+    fb = over.compact_fallback.any(axis=0)
+    assert (over.ws_tier[:, fb] == 0).all()
+    assert (over.ws_size.max(axis=0)[fb] > 4).all()
+    # demand exceeds the top tier at EVERY fitted step here, so the whole
+    # trajectory ran the masked solve — the forced per-member overflow is
+    # BIT-identical to the masked engine, not merely tolerance-close
+    assert over.compact_fallback[:, 1:].all()
+    np.testing.assert_array_equal(over.betas, masked.betas)
+    np.testing.assert_array_equal(over.n_violations, masked.n_violations)
+
+
 def test_compact_engine_multinomial():
     """Compact gather/scatter through the (p, m) coefficient block."""
     B, n, p, m = 2, 30, 40, 3

@@ -13,13 +13,17 @@ import jax.numpy as jnp
 from repro.core import prox_sorted_l1
 from repro.core.screening import algorithm_2_oracle
 from repro.kernels import (
+    compact_gemv_stats,
     prox_pool,
     prox_sorted_l1_kernel,
     screen_scan,
     slope_gradient,
+    slope_gradient_compact,
     slope_gradient_masked,
     slope_loss_residual,
+    slope_loss_residual_compact,
     slope_residual,
+    slope_residual_compact,
     slope_residual_masked,
 )
 from repro.kernels import ref as R
@@ -110,6 +114,119 @@ def test_fused_loss_residual_kernel(shape, family, rng):
         np.testing.assert_allclose(float(loss),
                                    float(fam.value(z, Y[:, 0])),
                                    rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# block-compacted GEMVs (ISSUE 5): live-block grid remap via scalar prefetch
+# ---------------------------------------------------------------------------
+
+def _block_mask(p: int, bp: int, pattern: str, rng) -> np.ndarray:
+    """Column mask whose per-block liveness follows ``pattern`` (blocks of
+    width ``bp``): all live, every other block live, or all dead.  Live
+    blocks keep a random sparse interior so the in-block mask multiply is
+    exercised too."""
+    n_blocks = (p + bp - 1) // bp
+    mask = np.zeros(p, bool)
+    live = {"all_live": range(n_blocks),
+            "half_live": range(0, n_blocks, 2),
+            "all_dead": ()}[pattern]
+    for b in live:
+        lo, hi = b * bp, min((b + 1) * bp, p)
+        cols = rng.choice(np.arange(lo, hi), size=max(1, (hi - lo) // 4),
+                          replace=False)
+        mask[cols] = True
+    return mask
+
+
+@pytest.mark.parametrize("pattern", ["all_live", "half_live", "all_dead"])
+def test_compact_gemv_patterns(pattern, rng):
+    """Compact == masked == oracle at every block-liveness pattern, and the
+    remapped grid covers exactly the live blocks (dead-block DMA cannot
+    happen when the grid never visits the block)."""
+    n, p, m = 24, 512, 2
+    bp = 128
+    n_blocks = p // bp
+    expect_live = {"all_live": n_blocks, "half_live": n_blocks // 2,
+                   "all_dead": 0}[pattern]
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    Rm = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(p, m)) / np.sqrt(p), jnp.float32)
+    Y = jnp.asarray(rng.integers(0, 2, size=(n, m)), jnp.float32)
+    mask = jnp.asarray(_block_mask(p, bp, pattern, rng))
+
+    got = np.asarray(slope_gradient_compact(X, Rm, mask, bp=bp))
+    st = compact_gemv_stats("gradient")
+    assert (st.blocks_total, st.blocks_live) == (n_blocks, expect_live)
+    assert st.grid[0] == st.blocks_live  # the remapped grid == live blocks
+    np.testing.assert_array_equal(
+        got, np.asarray(slope_gradient_masked(X, Rm, mask, bp=bp)))
+    want = np.asarray(R.xt_matmul_compact_ref(X, Rm, mask))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    assert (got[~np.asarray(mask)] == 0.0).all()
+
+    for family in ("ols", "logistic"):
+        got_r = np.asarray(slope_residual_compact(X, B, Y, mask,
+                                                  family=family, bp=bp))
+        st = compact_gemv_stats("residual")
+        assert st.blocks_live == expect_live
+        assert st.grid[1] == st.blocks_live
+        np.testing.assert_array_equal(
+            got_r, np.asarray(slope_residual_masked(X, B, Y, mask,
+                                                    family=family, bp=bp)))
+        want_r = np.asarray(R.xb_residual_compact_ref(X, B, Y, mask, family))
+        np.testing.assert_allclose(got_r, want_r, rtol=3e-5, atol=3e-5)
+
+    loss, r = slope_loss_residual_compact(X, B, Y, mask, family="logistic",
+                                          bp=bp)
+    st = compact_gemv_stats("loss_residual")
+    assert st.blocks_live == expect_live and st.grid[1] == st.blocks_live
+    want_r, want_rows = R.xb_loss_residual_compact_ref(X, B, Y, mask,
+                                                       "logistic")
+    np.testing.assert_allclose(np.asarray(r), np.asarray(want_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(float(loss), float(jnp.sum(want_rows)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_compact_gemv_odd_shapes_and_1d(rng):
+    """Padding/squeeze parity with the masked wrappers at non-block shapes."""
+    n, p = 33, 257
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=n), jnp.float32)
+    b = jnp.asarray(rng.normal(size=p) / np.sqrt(p), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n), jnp.float32)
+    mask = np.zeros(p, bool)
+    mask[rng.choice(p, size=9, replace=False)] = True
+    mj = jnp.asarray(mask)
+    g = slope_gradient_compact(X, r, mj)
+    assert g.shape == (p,)
+    np.testing.assert_array_equal(
+        np.asarray(g), np.asarray(slope_gradient_masked(X, r, mj)))
+    z = slope_residual_compact(X, b, y, mj, family="ols")
+    assert z.shape == (n,)
+    np.testing.assert_array_equal(
+        np.asarray(z),
+        np.asarray(slope_residual_masked(X, b, y, mj, family="ols")))
+
+
+def test_compact_gemv_traced_mask_degrades_to_masked(rng):
+    """Under jit the mask is a tracer — no static live list exists, so the
+    compact wrappers must fall back to the (semantically identical) masked
+    kernels instead of failing."""
+    import jax
+
+    n, p = 16, 256
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, size=p).astype(bool))
+
+    @jax.jit
+    def traced(m):
+        return slope_gradient_compact(X, r, m)
+
+    np.testing.assert_allclose(
+        np.asarray(traced(mask)),
+        np.asarray(slope_gradient_masked(X, r, mask)), rtol=2e-5, atol=2e-5)
 
 
 def test_gemv_1d_paths(rng):

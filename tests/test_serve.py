@@ -100,6 +100,83 @@ def test_bucket_registry_mapping_and_stats():
     assert reg.pop("a") == 64 and reg.pop("a", "gone") == "gone"
 
 
+def test_bucket_registry_grow_monotonic_capped():
+    """The grow-on-overflow write path (satellite regression): growth is
+    monotonic (a racing smaller grower can never shrink a learned bucket),
+    idempotent, and capped at the native column count — a bucket wider
+    than p is wasted compaction."""
+    reg = BucketRegistry(name="g", capacity=4)
+    assert reg.grow("k", 48, cap=256)
+    assert reg["k"] == 48
+    assert not reg.grow("k", 32, cap=256)   # smaller: no shrink
+    assert reg["k"] == 48
+    assert not reg.grow("k", 48, cap=256)   # idempotent re-apply
+    assert reg.grow("k", 4096, cap=256)     # capped at native p
+    assert reg["k"] == 256
+    assert not reg.grow("k", 4096, cap=256)
+
+
+def test_bucket_registry_grow_concurrent_idempotent():
+    """Racing growers converge on the maximum, never a last-writer value."""
+    reg = BucketRegistry(capacity=8)
+
+    def hammer(v):
+        for _ in range(200):
+            reg.grow("x", v, cap=1024)
+
+    threads = [threading.Thread(target=hammer, args=(v,))
+               for v in (64, 256, 128, 32)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert reg["x"] == 256
+
+
+def test_grow_ws_bucket_caps_at_native_p():
+    """The engine-level growth helper honours the native-p cap and the
+    monotonic registry semantics."""
+    from repro.core.engine import _WS_BUCKETS, grow_ws_bucket
+
+    key = ("grow-cap-test",)
+    _WS_BUCKETS.pop(key, None)
+    # peak demand 1500 → next_pow2 = 2048 would overshoot native p = 1500
+    assert grow_ws_bucket(key, np.array([1500]), np.array([True]), 64, 1500)
+    assert _WS_BUCKETS[key] == 1500
+    # a later, smaller overflow must not shrink the learned bucket
+    assert not grow_ws_bucket(key, np.array([700]), np.array([True]), 64,
+                              1500)
+    assert _WS_BUCKETS[key] == 1500
+    # no overflow, or an already-maximal W: no write
+    assert not grow_ws_bucket(key, np.array([90]), np.array([False]), 64,
+                              1500)
+    assert not grow_ws_bucket(key, np.array([1500]), np.array([True]), 1500,
+                              1500)
+    _WS_BUCKETS.pop(key, None)
+
+
+def test_grow_ws_bucket_two_tier_learns_half_peak():
+    """A two-tier run only needs the HALF-peak bucket — its 2W tier covers
+    the rest — where single-tier growth stores the full next-pow2 peak."""
+    from repro.core.engine import _WS_BUCKETS, grow_ws_bucket
+
+    key = ("grow-half-peak-test",)
+    _WS_BUCKETS.pop(key, None)
+    assert grow_ws_bucket(key, np.array([42]), np.array([True]), 16, 2048,
+                          two_tier=True)
+    assert _WS_BUCKETS[key] == 32        # next_pow2(42) / 2
+    _WS_BUCKETS.pop(key, None)
+    assert grow_ws_bucket(key, np.array([42]), np.array([True]), 16, 2048)
+    assert _WS_BUCKETS[key] == 64        # single tier: the full pow2 peak
+    # at the cap the halved bucket would get no 2× tier and overflow again
+    # — keep the full width there
+    _WS_BUCKETS.pop(key, None)
+    assert grow_ws_bucket(key, np.array([256]), np.array([True]), 64, 256,
+                          two_tier=True)
+    assert _WS_BUCKETS[key] == 256
+    _WS_BUCKETS.pop(key, None)
+
+
 def test_bucket_registry_thread_safety():
     reg = BucketRegistry(capacity=64)
 
@@ -262,6 +339,25 @@ def test_served_bit_identical_compact(shared_cache):
                                   pad="bucket", **kw)
         assert not direct.compact_fallback.any()
         np.testing.assert_array_equal(resp.betas, direct.betas[0])
+
+
+def test_served_two_tier_compact_matches_direct(shared_cache):
+    """A two-tier compact request resolves (W, 2W) through the shared tier
+    recipe, compiles a two-tier program (working_set_top in the spec), and
+    stays bit-identical to the direct padded call at the same widths."""
+    X, y, _ = make_regression(16, 60, k=3, rho=0.2, seed=5, noise=0.3)
+    lam = np.asarray(bh_sequence(60, q=0.05))
+    svc = _svc(shared_cache)
+    rid = svc.submit(X, y, lam=lam, working_set=8, sigma_ratio=0.5,
+                     **SVC_KW)
+    resp = svc.poll(rid, flush=True)
+    assert (resp.working_set, resp.working_set_top) == (8, 16)
+    assert resp.ws_tier is not None and resp.ws_tier.shape == resp.ws_size.shape
+    direct = fit_path_batched(X[None], y[None], lam, ols, working_set=8,
+                              pad="bucket", sigma_ratio=0.5, **KW)
+    assert (direct.working_set, direct.working_set_top) == (8, 16)
+    np.testing.assert_array_equal(resp.betas, direct.betas[0])
+    np.testing.assert_array_equal(resp.ws_tier, direct.ws_tier[0])
 
 
 def test_served_bit_identical_all_zero_column(shared_cache):
