@@ -17,6 +17,9 @@ Default sizes are scaled to finish on this CPU-only container in minutes;
   compact_two_tier     two-tier working sets vs single-tier at the overflow
                        config, plus block-compacted GEMV live-block telemetry
   serve                PathService vs one-request-at-a-time on a request stream
+  serve_async          AsyncPathService under a Poisson open-loop load: p50/p95
+                       latency vs the deadline_ms SLO, slot-recycle counts,
+                       admission rejection rate, and bit-identity vs sync
 """
 
 from __future__ import annotations
@@ -572,6 +575,129 @@ def serve(full: bool, stream: str = "mixed"):
         f"occupancy={st['occupancy_mean']:.2f}")
 
 
+def serve_async(full: bool):
+    """ISSUE 6 acceptance: the async front end (worker thread, timer-driven
+    flush, continuous batching) under a Poisson open-loop generator.
+
+    Three arms:
+
+    * **load** — R requests arrive on a seeded Poisson schedule faster than
+      the service drains them, so early-stopped paths free batch slots that
+      queued requests recycle mid-flight.  Client-observed latency
+      (submit → future resolved) is reported as p50/p95 and asserted against
+      the ``deadline_ms`` SLO.
+    * **burst** — a stopped service with a tiny queue is hit with an instant
+      burst; past-capacity requests resolve immediately to ``Rejection``,
+      giving the admission-control rejection-rate row.
+    * **bit identity** — every async response is compared, tolerance 0,
+      against the synchronous ``slope_path(backend="serve")`` front door on
+      the same requests (continuous batching must not change a single bit).
+    """
+    from repro.api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
+    from repro.core import bh_sequence
+    from repro.serve import AsyncPathService, Rejection
+
+    R = 32 if full else 24
+    L = 40
+    deadline_ms = 5000.0
+    rate = 100.0          # open-loop arrival rate (requests/s)
+    kw = dict(path_length=L, sigma_ratio=0.1, solver_tol=1e-8,
+              max_iter=20000, kkt_tol=1e-4)
+
+    # one (64, 64) bucket — recycling needs same-bucket requests; varying k
+    # and noise makes early-stop lengths heterogeneous so slots free early
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(R):
+        n = int(rng.integers(33, 64))
+        p = int(rng.integers(40, 64))
+        X, y, _ = make_regression(n, p, k=2 + i % 6, rho=0.2, seed=300 + i,
+                                  noise=0.3 + 0.2 * (i % 4))
+        reqs.append((X, y, np.asarray(bh_sequence(p, q=0.1))))
+    gaps = rng.exponential(1.0 / rate, size=R)
+
+    # -- load arm: Poisson arrivals against the running worker ---------------
+    svc = AsyncPathService(max_batch=8, max_delay=0.02, step_chunk=8,
+                           max_queue=64)
+    svc.warmup({X.shape for X, _, _ in reqs}, path_length=L,
+               solver_tol=1e-8, max_iter=20000)
+    done_at = [0.0] * R
+
+    def _mark(i):
+        def cb(_f):
+            done_at[i] = time.perf_counter()
+        return cb
+
+    t0 = time.perf_counter()
+    sub_at, futs = [], []
+    arrival = 0.0
+    for i, (X, y, lam) in enumerate(reqs):
+        arrival += gaps[i]
+        lag = t0 + arrival - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)
+        sub_at.append(time.perf_counter())
+        fut = svc.submit(X, y, lam=lam, deadline_ms=deadline_ms, **kw)
+        fut.add_done_callback(_mark(i))
+        futs.append(fut)
+    resps = [f.result(timeout=600) for f in futs]
+    t_load = time.perf_counter() - t0
+    assert not any(isinstance(r, Rejection) for r in resps)
+    lat_ms = (np.asarray(done_at) - np.asarray(sub_at)) * 1e3
+    p50, p95 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 95)
+    st = svc.stats()
+    assert st["slot_recycles"] >= 1, st["slot_recycles"]
+    assert p95 <= deadline_ms, (p95, deadline_ms)
+    row(f"serve_async/p50_R{R}", p50 * 1e3,
+        f"deadline_ms={deadline_ms:.0f} rate={rate:.0f}/s")
+    row(f"serve_async/p95_R{R}", p95 * 1e3,
+        f"deadline_ms={deadline_ms:.0f} slo_ok={p95 <= deadline_ms}")
+    row(f"serve_async/load_R{R}", t_load * 1e6,
+        f"rps={R / t_load:.2f} slot_recycles={st['slot_recycles']} "
+        f"chunk_batches={st['chunk_batches']} "
+        f"occupancy={st['occupancy_mean']:.2f} "
+        f"flush_fill={st['flush_fill']} flush_deadline={st['flush_deadline']}")
+    svc.close()
+
+    # -- burst arm: admission control on a stopped service -------------------
+    # worker never started, so the queue cannot drain mid-burst and the
+    # rejection count is deterministic: max_queue admitted, the rest refused
+    burst = AsyncPathService(max_batch=8, max_delay=10.0, max_queue=4,
+                             autostart=False, cache=svc.cache)
+    X, y, lam = reqs[0]
+    t0 = time.perf_counter()
+    bfuts = [burst.submit(X, y, lam=lam, **kw) for _ in range(12)]
+    t_burst = time.perf_counter() - t0
+    n_rej = sum(isinstance(f.result(timeout=1), Rejection)
+                for f in bfuts if f.done())
+    bst = burst.stats()
+    assert n_rej == bst["rejected"] == 8, (n_rej, bst["rejected"])
+    row("serve_async/burst_reject", t_burst / 12 * 1e6,
+        f"rejection_rate={bst['rejected'] / bst['submitted']:.2f} "
+        f"rejected={bst['rejected']} admitted={bst['submitted'] - bst['rejected']} "
+        f"max_queue=4")
+    burst.close(flush=False)
+
+    # -- bit identity: async continuous batching vs synchronous slope_path ---
+    t0 = time.perf_counter()
+    maxdiff = 0.0
+    for (X, y, lam), resp in zip(reqs, resps):
+        ref = slope_path(Problem(X, y),
+                         PathSpec(lam=LambdaSpec.explicit(lam), path_length=L,
+                                  sigma_ratio=0.1),
+                         SolverPolicy(backend="serve", solver_tol=1e-8,
+                                      max_iter=20000))
+        got = resp.path_result(early_stop=True)
+        assert got.betas.shape == ref.betas.shape
+        maxdiff = max(maxdiff,
+                      float(np.max(np.abs(got.betas - ref.betas))),
+                      float(np.max(np.abs(got.sigmas - ref.sigmas))))
+    t_ref = time.perf_counter() - t0
+    assert maxdiff == 0.0, maxdiff
+    row(f"serve_async/bit_identity_R{R}", t_ref * 1e6,
+        f"maxdiff={maxdiff:.1f} checked={R} tolerance=0")
+
+
 def resolve_only(spec: str) -> list[str]:
     """Parse ``--only``'s comma list: strip whitespace, drop empty items,
     dedupe preserving first-seen order, and reject unknown sweep names with
@@ -603,6 +729,7 @@ BENCHES = {
     "compact_engine": compact_engine,
     "compact_two_tier": compact_two_tier,
     "serve": serve,
+    "serve_async": serve_async,
 }
 
 

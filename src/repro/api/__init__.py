@@ -21,7 +21,7 @@ kwargs keep working bit-identically and warn once per knob (see
 """
 
 from .estimator import SlopE
-from .fit import default_service, slope_path
+from .fit import default_async_service, default_service, slope_path
 from .plan import ExecutionPlan, plan_execution
 from .specs import (
     LambdaSpec,
@@ -43,5 +43,6 @@ __all__ = [
     "SlopE",
     "as_lambda_spec",
     "default_service",
+    "default_async_service",
     "shared_canonicalizer",
 ]

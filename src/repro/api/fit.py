@@ -34,10 +34,11 @@ import threading
 from .plan import ExecutionPlan, plan_execution
 from .specs import PathSpec, Problem, SolverPolicy, apply_weights
 
-__all__ = ["slope_path", "default_service"]
+__all__ = ["slope_path", "default_service", "default_async_service"]
 
 _SERVICE_LOCK = threading.Lock()
 _DEFAULT_SERVICE = None
+_DEFAULT_ASYNC_SERVICE = None
 
 
 def default_service():
@@ -50,6 +51,24 @@ def default_service():
 
             _DEFAULT_SERVICE = PathService()
         return _DEFAULT_SERVICE
+
+
+def default_async_service():
+    """The process-wide :class:`~repro.serve.AsyncPathService` backing
+    serve calls that carry SLO knobs (``deadline_ms`` / ``priority``).
+
+    Created on first use — the worker thread only exists once someone asks
+    for SLO enforcement.  Separate from :func:`default_service` because the
+    two enforce different contracts: the sync service flushes on the next
+    call, the async one on a timer.
+    """
+    global _DEFAULT_ASYNC_SERVICE
+    with _SERVICE_LOCK:
+        if _DEFAULT_ASYNC_SERVICE is None:
+            from ..serve.dispatch import AsyncPathService
+
+            _DEFAULT_ASYNC_SERVICE = AsyncPathService()
+        return _DEFAULT_ASYNC_SERVICE
 
 
 def _ws_arg(plan: ExecutionPlan, policy: SolverPolicy):
@@ -144,11 +163,28 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
 
 def _serve_path(problem: Problem, path: PathSpec, policy: SolverPolicy,
                 pln: ExecutionPlan):
-    """Route one spec triple through the default PathService and wait."""
+    """Route one spec triple through the default PathService and wait.
+
+    Requests carrying SLO knobs go through the async service — its worker
+    thread enforces the deadline on a timer and its futures block here —
+    plain serve requests keep the synchronous submit/poll round trip.
+    """
     if problem.batched:
         raise ValueError(
             "backend='serve' takes single (n, p) problems — submit batch "
             "members individually; the service micro-batches them")
+    if policy.deadline_ms is not None or policy.priority != 0:
+        from ..serve.dispatch import Rejection
+
+        svc = default_async_service()
+        fut = svc.submit(problem=problem, path=path, policy=policy, plan=pln)
+        resp = fut.result()
+        if isinstance(resp, Rejection):
+            raise RuntimeError(
+                f"serve request rejected by admission control: {resp.reason} "
+                f"(queued={resp.queued}, max_queue={resp.max_queue})")
+        resp.plan = pln
+        return resp
     svc = default_service()
     rid = svc.submit(problem=problem, path=path, policy=policy, plan=pln)
     resp = svc.poll(rid, flush=True)

@@ -146,6 +146,20 @@ def plan_execution(problem: Problem, path: PathSpec | None = None,
 
     serve = policy.backend == "serve"
 
+    # -- SLO knobs route through the serving layer --------------------------
+    slo = policy.deadline_ms is not None or policy.priority != 0
+    if slo and policy.backend not in ("auto", "serve"):
+        raise ValueError(
+            f"deadline_ms/priority are serving SLO knobs — only a service "
+            f"(timer-driven flush, priority queues) can enforce them; they "
+            f"cannot be honoured with backend={policy.backend!r}")
+    if slo and policy.backend == "auto":
+        serve = True
+        reasons.append(
+            "backend='serve': deadline_ms/priority set — SLOs are enforced "
+            "by the serving layer (timer-driven deadline flush, priority "
+            "admission queues)")
+
     # -- padding & canonical execution shape --------------------------------
     pad = policy.pad
     if pad == "auto":

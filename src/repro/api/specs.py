@@ -242,6 +242,13 @@ class SolverPolicy:
     batch into the masked fallback.  ``pad="auto"`` resolves to
     canonical-bucket padding exactly when serving (direct uniform batches
     keep their native shapes).
+
+    ``deadline_ms`` / ``priority`` are serving SLO knobs: a latency budget
+    (tightens the serving layer's flush deadline; measured by its
+    telemetry) and a queue-ordering rank (higher first, FIFO within a
+    rank).  Setting either routes ``backend="auto"`` through the serving
+    layer — only a service can enforce them — and pinning a non-serve
+    backend alongside them is a planning error.
     """
 
     backend: str = "auto"
@@ -254,6 +261,8 @@ class SolverPolicy:
     kkt_tol: float = DEFAULT_KKT_TOL
     max_refits: int = DEFAULT_MAX_REFITS
     verbose: bool = False
+    deadline_ms: float | None = None
+    priority: int = 0
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
@@ -273,6 +282,13 @@ class SolverPolicy:
         if self.pad not in (None, "auto", "bucket"):
             raise ValueError(
                 f"pad must be None, 'auto' or 'bucket', got {self.pad!r}")
+        if self.deadline_ms is not None and not self.deadline_ms > 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {self.deadline_ms!r}")
+        if isinstance(self.priority, bool) or not isinstance(self.priority,
+                                                             int):
+            raise ValueError(
+                f"priority must be an int, got {self.priority!r}")
 
 
 def _register(cls, leaf_fields: tuple[str, ...]):

@@ -64,6 +64,8 @@ __all__ = [
     "path_engine",
     "batched_path_engine",
     "compact_path_engine",
+    "chunk_path_engine",
+    "path_init_engine",
     "fit_path_batched",
     "grow_ws_bucket",
     "resolve_ws_tiers",
@@ -177,10 +179,21 @@ def _new_violations(viol_flat, strong_p, prev_active, *, p, m, screening):
     return miss.sum().astype(jnp.int32)
 
 
-def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
-            kkt_tol, max_refits, p_valid=None) -> EnginePath:
-    """Traced body shared by :func:`path_engine` and the vmapped batch form."""
-    n, p = X.shape
+def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
+                  kkt_tol, max_refits):
+    """Build the per-σ-point path step for ONE problem.
+
+    Returns ``step(carry, sigs, p_valid) -> (carry, out)`` with carry
+    ``(beta, grad, prev_active, L)`` — the traced body shared by the
+    monolithic scan (:func:`path_engine` / the vmapped batch form) and the
+    chunked continuous-batching scan (:func:`chunk_path_engine`).  One
+    body, one trace structure: a chunked run must produce bit-identical
+    per-step results to the monolithic scan, so the step cannot fork.
+    ``p_valid`` is per-call (not closed over) because the chunked engine
+    feeds a *dynamic* value: a frozen slot passes 0, which empties the
+    screened set and turns the step into a one-iteration no-op solve.
+    """
+    p = X.shape[1]
     m = family.n_classes
     dtype = X.dtype
     lam = lam.astype(dtype)
@@ -190,10 +203,6 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
 
     def lift(b):  # family shape -> (p, m)
         return b[:, None] if m == 1 else b
-
-    zeros = jnp.zeros((p, m), dtype)
-    grad0 = lift(family.gradient(X, y, fam_shape(zeros)))
-    null_dev = family.loss(X, y, fam_shape(zeros))
 
     def solve(E, lam_next, beta, L):
         # The stack PAVA prox is a p·m-length sequential loop — under vmap
@@ -209,15 +218,15 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
         grad = lift(family.gradient(X, y, fam_shape(beta_new)))
         return beta_new, grad, res.iters.astype(jnp.int32), res.L
 
-    kkt_check = functools.partial(_kkt_step, p=p, m=m, kkt_tol=kkt_tol,
-                                  screening=screening, p_valid=p_valid)
     count_viol = functools.partial(_new_violations, p=p, m=m,
                                    screening=screening)
 
-    def step(carry, sigs):
+    def step(carry, sigs, p_valid):
         beta, grad, prev_active, L_carry = carry
         sig_prev, sig = sigs
         lam_next = sig * lam
+        kkt_check = functools.partial(_kkt_step, p=p, m=m, kkt_tol=kkt_tol,
+                                      screening=screening, p_valid=p_valid)
 
         if screening == "none":
             strong_p, _ = _valid_masks(p, m, p_valid)
@@ -278,9 +287,36 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
                refits, iters, dev, unrepaired)
         return (beta_f, grad_f, active, L_f), out
 
+    return step
+
+
+def _init_state(X, y, family: Family):
+    """Null-model start state for one problem: ``(beta0, grad0, active0,
+    L0)`` plus the null deviance — exactly the pre-scan computation
+    :func:`_engine` performs, factored out so the chunked engine's prefill
+    is bitwise the same."""
+    p = X.shape[1]
+    m = family.n_classes
+    dtype = X.dtype
+    zeros = jnp.zeros((p, m), dtype)
+    fam0 = zeros[:, 0] if m == 1 else zeros
+    grad0 = family.gradient(X, y, fam0)
+    grad0 = grad0[:, None] if m == 1 else grad0
+    null_dev = family.loss(X, y, fam0)
     L_init = default_L0(X, family).astype(dtype)
+    return zeros, grad0, null_dev, L_init
+
+
+def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
+            kkt_tol, max_refits, p_valid=None) -> EnginePath:
+    """Traced body shared by :func:`path_engine` and the vmapped batch form."""
+    p = X.shape[1]
+    zeros, grad0, null_dev, L_init = _init_state(X, y, family)
+    step = _step_builder(X, y, lam, family, screening, max_iter, tol,
+                         kkt_tol, max_refits)
     carry0 = (zeros, grad0, jnp.zeros((p,), bool), L_init)
-    _, outs = lax.scan(step, carry0, (sigmas[:-1], sigmas[1:]))
+    _, outs = lax.scan(lambda c, s: step(c, s, p_valid), carry0,
+                       (sigmas[:-1], sigmas[1:]))
     betas, n_act, n_scr, viol, refits, iters, devs, unrep = outs
 
     def pre(a, v):
@@ -340,6 +376,77 @@ def batched_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
 
     return jax.vmap(one, in_axes=(0, 0, 0, lam_axis, pv_axis))(
         X, y, sigmas, lam, p_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("family",))
+def path_init_engine(X, y, family: Family):
+    """Batched prefill: the state a path scan starts from, per member.
+
+    Returns ``(grad0, null_dev, L0)`` with shapes ``(B, p, m)`` / ``(B,)``
+    / ``(B,)`` — the same pre-scan computation :func:`batched_path_engine`
+    performs internally (one :func:`_init_state` per member under vmap), as
+    its own compiled program so the continuous-batching dispatcher can
+    initialise a *newly inserted* slot mid-flight with bitwise the state a
+    from-scratch run would have started with.  ``beta0``/``active0`` are
+    zeros at known shapes; the host materialises those itself.
+    """
+    def one(Xi, yi):
+        _, grad0, null_dev, L0 = _init_state(Xi, yi, family)
+        return grad0, null_dev, L0
+
+    return jax.vmap(one)(X, y)
+
+
+@functools.partial(jax.jit, static_argnames=_ENGINE_STATICS)
+def chunk_path_engine(X, y, lam, sig_prev, sig_next, live, beta, grad,
+                      active, L, family: Family, p_valid, *,
+                      screening: str = "strong", max_iter: int = 5000,
+                      tol: float = 1e-8, kkt_tol: float = 1e-4,
+                      max_refits: int = 32):
+    """Advance B carried paths by C σ-grid steps each (continuous batching).
+
+    The slot-swap seam for the async serving layer: instead of one
+    monolithic scan over a member's whole grid, the path advances in chunks
+    of C steps with the scan carry ``(beta, grad, active, L)`` round-tripped
+    through the host between chunks — so a member that early-stops can free
+    its batch slot and a queued request can join the *running* cohort at
+    the next chunk boundary, each slot at its own step offset.
+
+    ``sig_prev``/``sig_next``: (B, C) per-slot σ pairs (each slot's own
+    grid, wherever its cursor stands); ``live``: (B, C) bool — steps beyond
+    a slot's remaining grid (or an empty slot) are dead: the step sees an
+    effective ``p_valid`` of 0 (empty screened set → one-iteration blanked
+    solve, the same trick the two-tier mixed arm uses) and the carry is
+    held, so a dead step costs lockstep time but cannot perturb state.
+    ``p_valid``: (B,) int32.  Returns ``((beta, grad, active, L), EnginePath)``
+    with EnginePath arrays shaped (B, C, ...) — raw chunk steps, no null
+    head (the dispatcher owns step 0 via :func:`path_init_engine`).
+
+    Per-step traced body is :func:`_step_builder`'s — the SAME body the
+    monolithic engines scan — so chunked execution is bit-identical to
+    :func:`batched_path_engine` on the same inputs (pinned in
+    ``tests/test_serve_async.py``).
+    """
+    lam_axis = 0 if lam.ndim == 2 else None
+
+    def one(Xi, yi, lami, spi, sni, lvi, bi, gi, ai, Li, pvi):
+        step = _step_builder(Xi, yi, lami, family, screening, max_iter, tol,
+                             kkt_tol, max_refits)
+
+        def chunk_step(carry, xs):
+            sp, sn, lv = xs
+            pv = jnp.where(lv, pvi, 0)
+            new_carry, out = step(carry, (sp, sn), pv)
+            held = tuple(jnp.where(lv, nw, od)
+                         for nw, od in zip(new_carry, carry))
+            return held, out
+
+        return lax.scan(chunk_step, (bi, gi, ai, Li), (spi, sni, lvi))
+
+    carry, outs = jax.vmap(one, in_axes=(0, 0, lam_axis, 0, 0, 0, 0, 0, 0,
+                                         0, 0))(
+        X, y, lam, sig_prev, sig_next, live, beta, grad, active, L, p_valid)
+    return carry, EnginePath(*outs)
 
 
 def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,

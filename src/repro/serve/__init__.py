@@ -5,8 +5,10 @@ device engine: power-of-two shape bucketing with inert zero padding
 (:mod:`~repro.serve.buckets`), admission queues with fill/deadline
 micro-batching and λ-sequence canonicalization
 (:mod:`~repro.serve.batcher`), an AOT compiled-program cache with warmup
-and eviction stats (:mod:`~repro.serve.cache`), and the synchronous
-``submit``/``poll`` front-end (:mod:`~repro.serve.service`).
+and eviction stats (:mod:`~repro.serve.cache`), the synchronous
+``submit``/``poll`` front-end (:mod:`~repro.serve.service`), and the
+asynchronous future-returning front-end with timer-driven deadline flush
+and continuous batching (:mod:`~repro.serve.dispatch`).
 
 Import layering: ``buckets`` is NumPy-only and is imported *by*
 ``repro.core.engine`` (the working-set bucket registry lives there), so it
@@ -30,10 +32,13 @@ _LAZY = {
     "MicroBatcher": "batcher",
     "LambdaCanonicalizer": "batcher",
     "Pending": "batcher",
+    "QueueFull": "batcher",
     "lambda_kinds": "batcher",
     "PathService": "service",
     "PathResponse": "service",
     "CvResponse": "service",
+    "AsyncPathService": "dispatch",
+    "Rejection": "dispatch",
 }
 
 __all__ = [

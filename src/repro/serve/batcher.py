@@ -1,13 +1,25 @@
 """Admission queue and micro-batcher for the path service.
 
-Requests land in per-group FIFO queues — a *group* is everything that can
-legally share one compiled program: same family, same padded bucket shape,
-same path length and solver statics.  A group flushes when it **fills**
-(``max_batch`` requests waiting) or when its oldest request passes its
-**deadline** (``max_delay`` seconds in the queue).  The service is
-synchronous, so deadline flushes happen on the next ``submit``/``poll``
-call rather than on a timer thread — the deadline bounds added latency
-under load, not wall-clock staleness of an abandoned queue.
+Requests land in per-group priority queues — a *group* is everything that
+can legally share one compiled program: same family, same padded bucket
+shape, same path length and solver statics.  Within a group, higher
+``priority`` pops first; equal priorities keep FIFO order (a stable
+sequence number breaks ties), so the default priority-0 stream behaves
+exactly like the original FIFO.  A group flushes when it **fills**
+(``max_batch`` requests waiting) or when its most urgent request passes
+its **flush deadline** (``max_delay`` seconds in the queue, or sooner for
+requests carrying their own deadline budget).
+
+Two front-ends drain these queues: the synchronous
+:class:`~repro.serve.service.PathService` checks deadlines on the next
+``submit``/``poll`` call (no timer thread — the deadline bounds added
+latency under load, not wall-clock staleness of an abandoned queue), and
+the async :class:`~repro.serve.dispatch.AsyncPathService` runs a worker
+thread that sleeps until :meth:`MicroBatcher.next_deadline` and flushes on
+time even when no further calls arrive.  ``max_queue`` bounds total queued
+depth for admission control: past capacity, :meth:`MicroBatcher.admit`
+raises :class:`QueueFull` and the async service rejects-with-status
+instead of queueing unboundedly.
 
 λ-sequence canonicalization lives here too: requests that *name* a sequence
 (``("bh", q)`` etc.) resolve through one memoised table, so equal specs map
@@ -23,8 +35,9 @@ execution share one memo table.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
-from collections import OrderedDict, deque
+from collections import OrderedDict
 
 import numpy as np
 
@@ -35,7 +48,12 @@ from ..core.lambda_seq import (
     oscar_sequence,
 )
 
-__all__ = ["Pending", "MicroBatcher", "LambdaCanonicalizer", "lambda_kinds"]
+__all__ = ["Pending", "MicroBatcher", "QueueFull", "LambdaCanonicalizer",
+           "lambda_kinds"]
+
+
+class QueueFull(RuntimeError):
+    """Admission rejected: the batcher's bounded queue is at capacity."""
 
 
 @dataclasses.dataclass
@@ -45,47 +63,94 @@ class Pending:
     rid: int
     item: object
     submitted: float   # service clock at admission
-    deadline: float    # submitted + max_delay
+    deadline: float    # flush-by time (submitted + max_delay, or tighter
+    #   when the request carries its own latency budget)
+    priority: int = 0  # higher pops first within the group; 0 = default
 
 
 class MicroBatcher:
-    """Per-group FIFO queues with fill- and deadline-triggered flushing."""
+    """Per-group priority queues with fill- and deadline-triggered flushing.
 
-    def __init__(self, max_batch: int = 8, max_delay: float = 0.02):
+    ``max_queue`` (optional) bounds TOTAL queued requests across groups —
+    the admission-control knob: at capacity, :meth:`admit` raises
+    :class:`QueueFull` instead of queueing (unbounded by default, which is
+    the synchronous service's historical behaviour).
+    """
+
+    def __init__(self, max_batch: int = 8, max_delay: float = 0.02,
+                 max_queue: int | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be ≥ 1, got {max_batch}")
         if max_delay < 0:
             raise ValueError(f"max_delay must be ≥ 0, got {max_delay}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be ≥ 1, got {max_queue}")
         self.max_batch = max_batch
         self.max_delay = max_delay
-        self._queues: OrderedDict[object, deque[Pending]] = OrderedDict()
+        self.max_queue = max_queue
+        # heap entries (-priority, seq, Pending): priority order, FIFO ties
+        self._queues: OrderedDict[object, list] = OrderedDict()
+        self._seq = 0
+        self._size = 0
         self._lock = threading.Lock()
 
-    def admit(self, key, rid: int, item, now: float) -> bool:
-        """Queue one request; True ⇒ the group just filled and should flush."""
+    def admit(self, key, rid: int, item, now: float, *, priority: int = 0,
+              deadline: float | None = None) -> bool:
+        """Queue one request; True ⇒ the group just filled and should flush.
+
+        Raises :class:`QueueFull` when ``max_queue`` is set and reached —
+        the request is NOT queued and the caller owns the rejection.
+        """
+        if deadline is None:
+            deadline = now + self.max_delay
         with self._lock:
+            if self.max_queue is not None and self._size >= self.max_queue:
+                raise QueueFull(
+                    f"micro-batcher queue at capacity "
+                    f"({self._size}/{self.max_queue} queued requests)")
             q = self._queues.get(key)
             if q is None:
-                q = deque()
+                q = []
                 self._queues[key] = q
-            q.append(Pending(rid, item, now, now + self.max_delay))
+            heapq.heappush(
+                q, (-priority, self._seq,
+                    Pending(rid, item, now, deadline, priority)))
+            self._seq += 1
+            self._size += 1
             return len(q) >= self.max_batch
 
     def due(self, now: float) -> list:
-        """Groups whose oldest request has passed its deadline."""
+        """Groups holding a request past its flush deadline."""
         with self._lock:
             return [k for k, q in self._queues.items()
-                    if q and q[0].deadline <= now]
+                    if q and min(e[2].deadline for e in q) <= now]
+
+    def next_deadline(self) -> float | None:
+        """Earliest flush deadline over every queued request (None when
+        idle) — what the async worker thread sleeps until."""
+        with self._lock:
+            deadlines = [e[2].deadline for q in self._queues.values()
+                         for e in q]
+            return min(deadlines) if deadlines else None
+
+    def fillable(self) -> list:
+        """Groups at or above fill capacity (``max_batch`` queued)."""
+        with self._lock:
+            return [k for k, q in self._queues.items()
+                    if len(q) >= self.max_batch]
 
     def take(self, key, limit: int | None = None) -> list[Pending]:
-        """Pop up to ``limit`` (default ``max_batch``) requests, FIFO."""
+        """Pop up to ``limit`` (default ``max_batch``) requests — highest
+        priority first, FIFO within a priority."""
         limit = self.max_batch if limit is None else limit
         with self._lock:
             q = self._queues.get(key)
             if not q:
                 self._queues.pop(key, None)
                 return []
-            batch = [q.popleft() for _ in range(min(limit, len(q)))]
+            batch = [heapq.heappop(q)[2]
+                     for _ in range(min(limit, len(q)))]
+            self._size -= len(batch)
             if not q:
                 del self._queues[key]
             return batch
@@ -96,7 +161,7 @@ class MicroBatcher:
 
     def pending(self) -> int:
         with self._lock:
-            return sum(len(q) for q in self._queues.values())
+            return self._size
 
 
 _SEQUENCES = {

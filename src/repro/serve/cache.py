@@ -41,6 +41,13 @@ class ProgramSpec:
     second-tier width (None: single tier) — part of the key because the
     two-tier engine is a different compiled program.  ``n_rows``/``n_cols``
     are the padded bucket shape, ``batch`` the padded slot count.
+
+    ``variant`` keys the slot-recycling program family the async dispatcher
+    uses: ``"path"`` is the whole-grid program, ``"chunk"`` advances carried
+    state by ``step_chunk`` σ-steps per call
+    (:func:`repro.core.engine.chunk_path_engine` — masked engine only), and
+    ``"init"`` is the batched prefill that seeds a newly inserted slot
+    (:func:`repro.core.engine.path_init_engine`).
     """
 
     family: Family
@@ -57,13 +64,38 @@ class ProgramSpec:
     working_set_top: int | None = None
     dtype: str = "float64"
     y_dtype: str = "float64"
+    variant: str = "path"
+    step_chunk: int | None = None
+
+    def __post_init__(self):
+        if self.variant not in ("path", "chunk", "init"):
+            raise ValueError(f"variant must be 'path', 'chunk' or 'init', "
+                             f"got {self.variant!r}")
+        if self.variant == "chunk":
+            if self.step_chunk is None or self.step_chunk < 1:
+                raise ValueError("variant='chunk' needs step_chunk ≥ 1, got "
+                                 f"{self.step_chunk!r}")
+            if self.working_set is not None:
+                raise ValueError(
+                    "continuous chunk programs run the masked engine only "
+                    "(compact carried state is not slot-swappable); "
+                    "working_set must be None for variant='chunk'")
+        elif self.step_chunk is not None:
+            raise ValueError(
+                f"step_chunk only applies to variant='chunk', got "
+                f"variant={self.variant!r}")
 
     def short(self) -> str:
         w = f"W{self.working_set}" if self.working_set else "masked"
         if self.working_set and self.working_set_top:
             w += f"+{self.working_set_top}"
-        return (f"{self.family.name}/B{self.batch}n{self.n_rows}"
-                f"p{self.n_cols}L{self.path_length}/{w}")
+        s = (f"{self.family.name}/B{self.batch}n{self.n_rows}"
+             f"p{self.n_cols}L{self.path_length}/{w}")
+        if self.variant == "chunk":
+            s += f"/chunk{self.step_chunk}"
+        elif self.variant == "init":
+            s += "/init"
+        return s
 
     def plan(self):
         """The :class:`repro.api.plan.ExecutionPlan` this compiled program
@@ -77,6 +109,10 @@ class ProgramSpec:
             tiers = (self.working_set,)
         else:
             tiers = (self.working_set, self.working_set_top)
+        reason = f"pinned by compiled program group {self.short()}"
+        if self.variant == "chunk":
+            reason += (f" (continuous batching: {self.step_chunk}-step "
+                       f"chunks, slots recycled at chunk boundaries)")
         return ExecutionPlan(
             backend="serve",
             mode="compact" if self.working_set else "masked",
@@ -85,12 +121,20 @@ class ProgramSpec:
             exec_shape=(self.batch, self.n_rows, self.n_cols),
             screening=self.screening,
             device=jax.default_backend(),
-            reasons=(f"pinned by compiled program group {self.short()}",),
+            reasons=(reason,),
         )
 
 
 class CompiledProgram:
-    """One AOT-compiled engine executable plus its call convention."""
+    """One AOT-compiled engine executable plus its call convention.
+
+    ``"path"`` programs take ``(Xs, ys, lam, sigmas, p_valid)``; ``"chunk"``
+    programs take ``(Xs, ys, lam, sig_prev, sig_next, live, beta, grad,
+    active, L, p_valid)``; ``"init"`` programs take ``(Xs, ys)``.  Operands
+    are converted as-is — AOT executables demand exact dtypes, so callers
+    own them — except the trailing int32 ``p_valid``, which is cast for
+    convenience on the two variants that end with it.
+    """
 
     def __init__(self, spec: ProgramSpec, compiled, build_seconds: float):
         self.spec = spec
@@ -98,38 +142,55 @@ class CompiledProgram:
         self.calls = 0
         self._compiled = compiled
 
-    def __call__(self, Xs, ys, lam, sigmas, p_valid):
+    def __call__(self, *operands):
         import jax.numpy as jnp
 
         self.calls += 1
-        return self._compiled(
-            jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(lam),
-            jnp.asarray(sigmas), jnp.asarray(p_valid, jnp.int32))
+        args = [jnp.asarray(a) for a in operands]
+        if self.spec.variant in ("path", "chunk"):
+            args[-1] = jnp.asarray(args[-1], jnp.int32)  # p_valid
+        return self._compiled(*args)
 
 
 def _build(spec: ProgramSpec) -> tuple:
     """Lower + compile the engine for ``spec`` from shape specs alone."""
-    from ..core.engine import batched_path_engine, compact_path_engine
+    from ..core.engine import (
+        batched_path_engine,
+        chunk_path_engine,
+        compact_path_engine,
+        path_init_engine,
+    )
 
     m = spec.family.n_classes
     f = np.dtype(spec.dtype)
     B, N, P, L = spec.batch, spec.n_rows, spec.n_cols, spec.path_length
     sds = jax.ShapeDtypeStruct
-    args = (
+    data = (
         sds((B, N, P), f),                      # Xs
         sds((B, N), np.dtype(spec.y_dtype)),    # ys
-        sds((B, P * m), f),                     # per-member λ
-        sds((B, L), f),                         # per-member σ grids
     )
+    lam = sds((B, P * m), f)                    # per-member λ
     pv = sds((B,), np.int32)
     kw = dict(screening=spec.screening, max_iter=spec.max_iter,
               tol=spec.solver_tol, kkt_tol=spec.kkt_tol,
               max_refits=spec.max_refits)
     t0 = time.perf_counter()
-    if spec.working_set is None:
-        lowered = batched_path_engine.lower(*args, spec.family, pv, **kw)
+    if spec.variant == "init":
+        lowered = path_init_engine.lower(*data, spec.family)
+    elif spec.variant == "chunk":
+        C = spec.step_chunk
+        lowered = chunk_path_engine.lower(
+            *data, lam,
+            sds((B, C), f), sds((B, C), f), sds((B, C), bool),  # σ pairs, live
+            sds((B, P, m), f), sds((B, P, m), f),               # beta, grad
+            sds((B, P), bool), sds((B,), f),                    # active, L
+            spec.family, pv, **kw)
+    elif spec.working_set is None:
+        lowered = batched_path_engine.lower(*data, lam, sds((B, L), f),
+                                            spec.family, pv, **kw)
     else:
-        lowered = compact_path_engine.lower(*args, spec.family, pv,
+        lowered = compact_path_engine.lower(*data, lam, sds((B, L), f),
+                                            spec.family, pv,
                                             width=spec.working_set,
                                             width2=spec.working_set_top,
                                             **kw)

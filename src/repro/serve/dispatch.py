@@ -1,0 +1,584 @@
+"""`AsyncPathService` — the asynchronous, continuously-batched front end.
+
+The synchronous :class:`~repro.serve.service.PathService` enforces flush
+deadlines *on the next service call*: an idle queue can hold a request past
+its deadline forever (ROADMAP open item 2).  This subclass closes that gap
+with a worker thread and changes the submit contract:
+
+* ``submit`` returns a :class:`concurrent.futures.Future` instead of a
+  request id (``future.rid`` carries the id; ``poll`` is disabled).
+* A dispatcher thread sleeps until the earliest flush deadline
+  (:meth:`~repro.serve.batcher.MicroBatcher.next_deadline`) and flushes on
+  time even when no further calls arrive — deadline enforcement is
+  timer-driven, not call-driven.
+* Admission is bounded: past ``max_queue`` queued requests, ``submit``
+  resolves the future immediately with a :class:`Rejection` status (the
+  caller sees backpressure in microseconds, not a deadline miss later).
+* Masked-engine groups run with **continuous batching**: the grid advances
+  in ``step_chunk``-step compiled chunks
+  (:func:`repro.core.engine.chunk_path_engine`) with per-slot carried
+  state, so a path that early-stops frees its batch slot at the next chunk
+  boundary and the next queued same-bucket request joins the *running*
+  cohort — seeded mid-flight by :func:`repro.core.engine.path_init_engine`
+  with bitwise the state a from-scratch run starts from.  Compact groups
+  keep the whole-grid program (compact carried state is not
+  slot-swappable).
+
+Bit-identity is preserved end to end: the chunked step body is the SAME
+traced body the monolithic engines scan, dead chunk steps hold the carry
+exactly, and batch slots are member-invariant — an async-served result
+equals the synchronous served result (and the direct padded call) at
+tolerance 0.  ``tests/test_serve_async.py`` pins this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from ..core.engine import cv_fold_indices, cv_select, cv_val_deviance, \
+    null_sigma_grid
+from ..core.losses import Family, ols
+from ..core.path import _stop_triggered
+from ..core.solver import DEFAULT_WS_TIERS
+from .batcher import MicroBatcher, Pending, QueueFull
+from .buckets import pad_batch
+from .cache import ProgramSpec
+from .service import CvResponse, PathResponse, PathService, _GroupKey
+
+__all__ = ["AsyncPathService", "Rejection"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Admission-control verdict: the request was NOT queued.
+
+    Resolved into the submit future immediately, so callers distinguish
+    "rejected now" from "missed its deadline later" without waiting.
+    """
+
+    rid: int
+    reason: str
+    queued: int            # queue depth at the rejecting admission
+    max_queue: int | None  # the capacity that was hit
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One occupied batch slot in a continuous run (host-side bookkeeping;
+    the device carry lives in the run's persistent buffers)."""
+
+    pending: Pending
+    grid: np.ndarray       # native σ grid in the program dtype, length L
+    n: int                 # native rows
+    p: int                 # native cols
+    inserted: float        # service clock at slot insertion
+    batch_size: int        # occupied slots when this one joined
+    cache_hit: bool
+    early_stop: bool = True  # False for CV fold fits: the aggregation
+    #   needs every fold on the full shared grid (sync parity)
+    null_dev: float = 0.0
+    prev_dev: float = 0.0  # early-stop carry across chunk boundaries
+    cursor: int = 1        # next σ index to produce; done at cursor == L
+    take: int = 0          # live steps requested from the current chunk
+    solve_s: float = 0.0   # accumulated chunk walls while this slot ran
+    finished: bool = False
+    steps: list = dataclasses.field(default_factory=list)
+    # each entry: (beta (p, m), n_active, n_screened, n_violations,
+    #              refits, solver_iters, deviance, kkt_unrepaired)
+
+
+class AsyncPathService(PathService):
+    """Worker-thread path service: futures, SLOs, continuous batching.
+
+    ``step_chunk`` is the continuous-batching granularity: slots can be
+    recycled every ``step_chunk`` σ-steps (smaller = faster recycling, more
+    host round-trips).  ``max_queue`` bounds queued depth for admission
+    control.  ``autostart=False`` leaves the dispatcher stopped (useful for
+    testing admission without execution); :meth:`start` launches it.
+    """
+
+    def __init__(self, *, max_batch: int = 8, max_delay: float = 0.02,
+                 step_chunk: int = 8, max_queue: int | None = 64,
+                 autostart: bool = True, policy=None, cache=None,
+                 canonicalizer=None, clock=time.perf_counter):
+        super().__init__(max_batch=max_batch, max_delay=max_delay,
+                         policy=policy, cache=cache,
+                         canonicalizer=canonicalizer, clock=clock)
+        if step_chunk < 1:
+            raise ValueError(f"step_chunk must be ≥ 1, got {step_chunk}")
+        # rebuild the batcher with the admission bound (the base service
+        # keeps its historical unbounded queue)
+        self._batcher = MicroBatcher(max_batch=max_batch,
+                                     max_delay=max_delay,
+                                     max_queue=max_queue)
+        self.step_chunk = step_chunk
+        self._futures: dict[int, Future] = {}
+        self._rejected = 0
+        self._slot_recycles = 0
+        self._chunk_batches = 0
+        self._last_error: BaseException | None = None
+        self._cond = threading.Condition()
+        self._stop_flag = False
+        self._worker: threading.Thread | None = None
+        if autostart:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> None:
+        """Launch the dispatcher thread (idempotent)."""
+        with self._cond:
+            if self._worker is not None and self._worker.is_alive():
+                return
+            self._stop_flag = False
+            self._worker = threading.Thread(
+                target=self._run, name="repro-serve-dispatch", daemon=True)
+            self._worker.start()
+
+    def close(self, *, flush: bool = True, timeout: float = 10.0) -> None:
+        """Stop the dispatcher; ``flush=True`` then serves anything still
+        queued synchronously so no admitted future is left unresolved."""
+        with self._cond:
+            self._stop_flag = True
+            self._cond.notify_all()
+        w = self._worker
+        if w is not None:
+            w.join(timeout=timeout)
+        if flush:
+            self.flush()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every admitted request has been delivered (or
+        ``timeout`` seconds passed; returns False on timeout)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                idle = not self._futures and self._batcher.pending() == 0
+            if idle:
+                return True
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            time.sleep(0.001)
+
+    # -- admission (future-returning) ---------------------------------------
+
+    def _admit(self, key: _GroupKey, item, *, deadline_ms=None, priority=0,
+               _cv_fold: bool = False) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._submitted += 1
+            fut.rid = rid
+            if _cv_fold:
+                self._cv_fold_rids.add(rid)
+            now = self._clock()
+            try:
+                self._batcher.admit(
+                    key, rid, item, now, priority=priority,
+                    deadline=self._flush_by(now, deadline_ms))
+            except QueueFull as e:
+                self._rejected += 1
+                self._cv_fold_rids.discard(rid)
+                fut.set_result(Rejection(
+                    rid=rid, reason=str(e), queued=self._batcher.pending(),
+                    max_queue=self._batcher.max_queue))
+                return fut
+            self._futures[rid] = fut
+        with self._cond:
+            self._cond.notify_all()  # wake the dispatcher: new work/deadline
+        return fut
+
+    def _deliver(self, rid: int, resp: PathResponse) -> None:
+        """Resolve the request's future (caller holds ``self._lock``)."""
+        self._completed += 1
+        self._record_latency(rid, resp)   # before dropping fold membership
+        self._cv_fold_rids.discard(rid)
+        fut = self._futures.pop(rid, None)
+        if fut is not None and not fut.done():
+            fut.set_result(resp)
+
+    def poll(self, rid, *, flush: bool = False):
+        raise TypeError("AsyncPathService resolves results through the "
+                        "futures submit() returns; there is nothing to poll")
+
+    # -- CV: fold futures aggregate through a done-callback -----------------
+
+    def _submit_cv(self, X, y, lam, family, *, n_folds, stratify, selection,
+                   sigmas, path_length, sigma_ratio, screening, solver_tol,
+                   max_iter, kkt_tol, max_refits, working_set,
+                   ws_tiers=DEFAULT_WS_TIERS, deadline_ms=None,
+                   priority=0) -> Future:
+        if sigmas is None:
+            sigmas = null_sigma_grid(X, y, lam, family,
+                                     path_length=path_length,
+                                     sigma_ratio=sigma_ratio)
+        sigmas = np.asarray(sigmas)
+        trains, vals = cv_fold_indices(y, n_folds, family=family,
+                                       stratify=stratify)
+        fold_futs = [
+            self.submit(X[tr], y[tr], family=family, lam=lam, sigmas=sigmas,
+                        screening=screening, solver_tol=solver_tol,
+                        max_iter=max_iter, kkt_tol=kkt_tol,
+                        max_refits=max_refits, working_set=working_set,
+                        ws_tiers=ws_tiers, deadline_ms=deadline_ms,
+                        priority=priority, _cv_fold=True)
+            for tr in trains
+        ]
+        cv_fut: Future = Future()
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._submitted += 1
+        cv_fut.rid = rid
+        remaining = [len(fold_futs)]
+        agg_lock = threading.Lock()
+
+        def on_fold_done(_):
+            with agg_lock:
+                remaining[0] -= 1
+                if remaining[0]:
+                    return
+            try:
+                folds = [f.result() for f in fold_futs]
+                rej = next((r for r in folds if isinstance(r, Rejection)),
+                           None)
+                if rej is not None:
+                    cv_fut.set_result(Rejection(
+                        rid=rid,
+                        reason=f"CV fold rejected: {rej.reason}",
+                        queued=rej.queued, max_queue=rej.max_queue))
+                    return
+                betas = np.stack([f.betas for f in folds])
+                val_dev = cv_val_deviance(X, y, vals, betas, family)
+                mean, se, best_min, best_1se = cv_select(val_dev)
+                best = best_1se if selection == "1se" else best_min
+                with self._lock:
+                    self._completed += 1
+                cv_fut.set_result(CvResponse(
+                    rid=rid, sigmas=sigmas, lam=lam, val_deviance=val_dev,
+                    mean_val_deviance=mean, se_val_deviance=se,
+                    best_index=best, best_sigma=float(sigmas[best]),
+                    best_index_min=best_min, best_index_1se=best_1se,
+                    selection=selection, fold_responses=folds))
+            except BaseException as e:  # pragma: no cover - defensive
+                if not cv_fut.done():
+                    cv_fut.set_exception(e)
+
+        for f in fold_futs:
+            f.add_done_callback(on_fold_done)
+        return cv_fut
+
+    # -- the dispatcher -----------------------------------------------------
+
+    def _next_group(self):
+        fill = self._batcher.fillable()
+        if fill:
+            return fill[0], "fill"
+        due = self._batcher.due(self._clock())
+        if due:
+            return due[0], "deadline"
+        return None, None
+
+    def _run(self) -> None:
+        while True:
+            key = trigger = None
+            with self._cond:
+                while not self._stop_flag:
+                    key, trigger = self._next_group()
+                    if key is not None:
+                        break
+                    nd = self._batcher.next_deadline()
+                    if nd is None:
+                        self._cond.wait()
+                    else:
+                        # +0.1 ms so the post-sleep clock is past the
+                        # deadline and due() actually returns the group
+                        self._cond.wait(
+                            timeout=max(0.0, nd - self._clock()) + 1e-4)
+                if self._stop_flag:
+                    return
+            try:
+                self._serve_group(key, trigger)
+            except BaseException as e:  # keep serving; fail what's in flight
+                self._last_error = e
+                with self._lock:
+                    futs = list(self._futures.values())
+                    self._futures.clear()
+                    self._cv_fold_rids.clear()
+                for f in futs:
+                    if not f.done():
+                        f.set_exception(e)
+
+    def _serve_group(self, key: _GroupKey, trigger: str) -> None:
+        if key.working_set is not None:
+            # compact carried state is not slot-swappable: whole-grid
+            # program, same as the synchronous service (delivery still
+            # resolves futures through the _deliver override)
+            self._flush_group(key, trigger=trigger)
+        else:
+            self._run_continuous(key, trigger)
+
+    # -- continuous batching (masked groups) --------------------------------
+
+    def _chunk_specs(self, key: _GroupKey):
+        base = dict(
+            family=key.family, batch=self.slots, n_rows=key.n_rows,
+            n_cols=key.n_cols, path_length=key.path_length,
+            screening=key.screening, solver_tol=key.solver_tol,
+            max_iter=key.max_iter, kkt_tol=key.kkt_tol,
+            max_refits=key.max_refits, dtype=key.dtype, y_dtype=key.y_dtype)
+        return (ProgramSpec(**base, variant="init"),
+                ProgramSpec(**base, variant="chunk",
+                            step_chunk=self.step_chunk))
+
+    def _run_continuous(self, key: _GroupKey, trigger: str) -> None:
+        """Serve one masked group until it drains, recycling slots.
+
+        Persistent padded operand buffers plus the scan carry round-trip
+        through the host between ``step_chunk``-step compiled chunks.  At
+        every chunk boundary, finished slots (grid done or early-stopped)
+        deliver and free; queued same-group requests take the free slots
+        and are seeded by the init program — run on the whole updated batch,
+        scattered only into the inserted slots, so standing neighbours'
+        state is untouched (bitwise).
+        """
+        family = key.family
+        m = family.n_classes
+        S, N, P, L = self.slots, key.n_rows, key.n_cols, key.path_length
+        C = self.step_chunk
+        f = np.dtype(key.dtype)
+        init_spec, chunk_spec = self._chunk_specs(key)
+        init_prog, init_hit = self.cache.get(init_spec)
+        chunk_prog, chunk_hit = self.cache.get(chunk_spec)
+        first_hit = init_hit and chunk_hit
+
+        Xs = np.zeros((S, N, P), f)
+        ys = np.zeros((S, N), np.dtype(key.y_dtype))
+        lam = np.zeros((S, P * m), f)
+        p_valid = np.zeros((S,), np.int32)
+        sig_prev = np.ones((S, C), f)
+        sig_next = np.ones((S, C), f)
+        live = np.zeros((S, C), bool)
+        beta = np.zeros((S, P, m), f)
+        grad = np.zeros((S, P, m), f)
+        active = np.zeros((S, P), bool)
+        Lc = np.ones((S,), f)
+        slots: list[_Slot | None] = [None] * S
+
+        plan_summary = chunk_spec.plan().summary()
+        with self._lock:
+            counter = {"fill": "_flush_fill", "deadline": "_flush_deadline",
+                       "forced": "_flush_forced"}[trigger]
+            setattr(self, counter, getattr(self, counter) + 1)
+            self._plans[plan_summary] = self._plans.get(plan_summary, 0) + 1
+
+        rounds = 0
+        while True:
+            # refill free slots from the queue (the slot-recycle seam)
+            free = [i for i in range(S) if slots[i] is None]
+            taken = self._batcher.take(key, limit=len(free)) if free else []
+            occupied = S - len(free) + len(taken)
+            inserted = []
+            now = self._clock()
+            for i, pending in zip(free, taken):
+                item = pending.item
+                pb = pad_batch(
+                    [(item.X, item.y, item.lam, item.sigmas)],
+                    n_rows=N, n_cols=P, n_slots=1, n_classes=m)
+                Xs[i] = pb.Xs[0]
+                ys[i] = pb.ys[0]
+                lam[i] = pb.lam[0]
+                p_valid[i] = pb.p_valid[0]
+                with self._lock:
+                    es = pending.rid not in self._cv_fold_rids
+                slots[i] = _Slot(
+                    pending=pending, grid=np.asarray(item.sigmas, f),
+                    n=item.X.shape[0], p=item.X.shape[1], inserted=now,
+                    batch_size=occupied, early_stop=es,
+                    cache_hit=first_hit if rounds == 0 else True)
+                inserted.append(i)
+            if inserted:
+                if rounds > 0:
+                    # joined a cohort already in flight: true recycling
+                    self._slot_recycles += len(inserted)
+                # prefill on the WHOLE updated batch, scatter only the new
+                # slots — standing neighbours keep their carried state
+                g0, nd0, L0 = (np.asarray(a) for a in init_prog(Xs, ys))
+                for i in inserted:
+                    beta[i] = 0.0
+                    grad[i] = g0[i]
+                    active[i] = False
+                    Lc[i] = L0[i]
+                    slots[i].null_dev = slots[i].prev_dev = float(nd0[i])
+                    if L < 2:  # degenerate grid: null model only
+                        self._finish_slot(i, slots, p_valid, key)
+            if all(s is None for s in slots):
+                break
+
+            # per-slot chunk inputs from each slot's own grid cursor
+            for i in range(S):
+                s = slots[i]
+                if s is None:
+                    sig_prev[i] = 1.0
+                    sig_next[i] = 1.0
+                    live[i] = False
+                    continue
+                s.take = min(C, L - s.cursor)
+                for c in range(C):
+                    if c < s.take:
+                        sig_prev[i, c] = s.grid[s.cursor - 1 + c]
+                        sig_next[i, c] = s.grid[s.cursor + c]
+                        live[i, c] = True
+                    else:
+                        sig_prev[i, c] = 1.0
+                        sig_next[i, c] = 1.0
+                        live[i, c] = False
+
+            t0 = self._clock()
+            (nb, ng, na, nL), ep = chunk_prog(
+                Xs, ys, lam, sig_prev, sig_next, live, beta, grad, active,
+                Lc, p_valid)
+            # np.array (copy): device outputs view as read-only, but the
+            # carry buffers are scattered into at the next insertion
+            beta = np.array(nb)
+            grad = np.array(ng)
+            active = np.array(na)
+            Lc = np.array(nL)
+            eb = np.asarray(ep.betas)
+            edev = np.asarray(ep.deviance)
+            scalars = [np.asarray(a) for a in
+                       (ep.n_active, ep.n_screened, ep.n_violations,
+                        ep.refits, ep.solver_iters)]
+            eunrep = np.asarray(ep.kkt_unrepaired)
+            wall = self._clock() - t0
+            rounds += 1
+            n_live = sum(s is not None for s in slots)
+            with self._lock:
+                self._batches += 1
+                self._chunk_batches += 1
+                self._occupancies.append(n_live / S)
+
+            # harvest: native-width steps, early stop on the growing prefix
+            for i in range(S):
+                s = slots[i]
+                if s is None:
+                    continue
+                s.solve_s += wall
+                for c in range(s.take):
+                    b = np.array(eb[i, c, :s.p, :])
+                    dev = float(edev[i, c])
+                    s.steps.append((
+                        b, *(int(a[i, c]) for a in scalars), dev,
+                        bool(eunrep[i, c])))
+                    s.cursor += 1
+                    # the SAME predicate the sync path applies post-hoc —
+                    # it reads only the prefix, so stopping at a chunk
+                    # boundary truncates exactly where path_result() would
+                    if s.early_stop and _stop_triggered(
+                            b, dev, s.prev_dev, s.null_dev, s.n):
+                        s.finished = True
+                        break
+                    s.prev_dev = dev
+                if s.finished or s.cursor >= L:
+                    self._finish_slot(i, slots, p_valid, key)
+
+    def _finish_slot(self, i: int, slots: list, p_valid: np.ndarray,
+                     key: _GroupKey) -> None:
+        """Assemble the slot's response (null head + harvested steps at
+        native shape), deliver its future, and free the slot."""
+        s = slots[i]
+        m = key.family.n_classes
+        f = np.dtype(key.dtype)
+        k = 1 + len(s.steps)
+        betas = np.zeros((k, s.p, m), f)
+        n_act = np.zeros((k,), np.int32)
+        n_scr = np.zeros((k,), np.int32)
+        viol = np.zeros((k,), np.int32)
+        refits = np.zeros((k,), np.int32)
+        iters = np.zeros((k,), np.int32)
+        dev = np.zeros((k,), f)
+        unrep = np.zeros((k,), bool)
+        dev[0] = s.null_dev
+        for j, st in enumerate(s.steps, start=1):
+            (betas[j], n_act[j], n_scr[j], viol[j], refits[j], iters[j],
+             dev[j], unrep[j]) = st
+        out_betas = betas[:, :, 0] if m == 1 else betas
+        item = s.pending.item
+        pad_ratio = (key.n_rows * key.n_cols) / (s.n * s.p)
+        resp = PathResponse(
+            rid=s.pending.rid, betas=out_betas,
+            sigmas=np.asarray(item.sigmas)[:k], lam=item.lam, n_samples=s.n,
+            n_active=n_act, n_screened=n_scr, n_violations=viol,
+            refits=refits, solver_iters=iters, deviance=dev,
+            kkt_unrepaired=unrep, kkt_ok=not bool(unrep.any()),
+            working_set=None, working_set_top=None, ws_size=None,
+            ws_tier=None, compact_fallback=None,
+            queue_s=max(0.0, s.inserted - s.pending.submitted),
+            solve_s=s.solve_s, batch_size=s.batch_size,
+            batch_occupancy=s.batch_size / self.slots,
+            padding_ratio=pad_ratio, cache_hit=s.cache_hit)
+        with self._lock:
+            self._padding_ratios.append(pad_ratio)
+            self._deliver(s.pending.rid, resp)
+        slots[i] = None
+        p_valid[i] = 0
+
+    # -- warmup & telemetry -------------------------------------------------
+
+    def warmup(self, shapes, *, family: Family = ols, path_length: int = 100,
+               screening: str = "strong", solver_tol: float = 1e-8,
+               max_iter: int = 5000, kkt_tol: float = 1e-4,
+               max_refits: int = 32,
+               working_set: int | str | None = None,
+               ws_tiers: int | str = DEFAULT_WS_TIERS,
+               dtype: str = "float64", y_dtype: str = "float64") -> dict:
+        """Pre-compile what async serving actually runs: the (init, chunk)
+        program pair for masked shapes; compact shapes defer to the base
+        whole-grid warmup."""
+        if working_set is not None:
+            return super().warmup(
+                shapes, family=family, path_length=path_length,
+                screening=screening, solver_tol=solver_tol,
+                max_iter=max_iter, kkt_tol=kkt_tol, max_refits=max_refits,
+                working_set=working_set, ws_tiers=ws_tiers, dtype=dtype,
+                y_dtype=y_dtype)
+        specs = []
+        for n, p in shapes:
+            N, P = self.policy.shape_bucket(n, p, family.name)
+            base = dict(
+                family=family, batch=self.slots, n_rows=N, n_cols=P,
+                path_length=path_length, screening=screening,
+                solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
+                max_refits=max_refits, dtype=dtype, y_dtype=y_dtype)
+            specs.append(ProgramSpec(**base, variant="init"))
+            specs.append(ProgramSpec(**base, variant="chunk",
+                                     step_chunk=self.step_chunk))
+        return self.cache.warmup(specs)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        with self._lock:
+            out.update(
+                rejected=self._rejected,
+                slot_recycles=self._slot_recycles,
+                chunk_batches=self._chunk_batches,
+                step_chunk=self.step_chunk,
+                max_queue=self._batcher.max_queue,
+                inflight=len(self._futures),
+                worker_alive=bool(self._worker is not None
+                                  and self._worker.is_alive()),
+            )
+        return out

@@ -243,9 +243,14 @@ class PathService:
         # decisions, surfaced through stats() and the serve BENCH rows)
         self._plans: dict[str, int] = {}
         # bounded: a long-running service must not accumulate one entry per
-        # request forever — percentiles are over the recent window
+        # request forever — percentiles are over the recent window.  User
+        # latencies and internal CV-fold-fit latencies are tracked apart:
+        # a caller's SLO is measured on what the caller sees, and fold fits
+        # (K per CV request, often faster than user traffic) would skew the
+        # percentiles toward the service's own internal work.
         self._occupancies: deque = deque(maxlen=4096)
         self._latencies: deque = deque(maxlen=4096)
+        self._latencies_internal: deque = deque(maxlen=4096)
         self._padding_ratios: deque = deque(maxlen=4096)
 
     # -- admission ----------------------------------------------------------
@@ -261,7 +266,9 @@ class PathService:
                working_set: int | str | None = None,
                ws_tiers: int | str = DEFAULT_WS_TIERS,
                cv_folds: int | None = None, stratify="auto",
-               selection: str = "min", _cv_fold: bool = False,
+               selection: str = "min",
+               deadline_ms: float | None = None, priority: int = 0,
+               _cv_fold: bool = False,
                problem: Problem | None = None,
                path: PathSpec | None = None,
                policy: SolverPolicy | None = None,
@@ -282,6 +289,15 @@ class PathService:
         :func:`repro.api.slope_path` front door takes, and backend choices
         resolve through the same :func:`repro.api.plan.plan_execution`, so
         plan decisions are identical between direct and served execution.
+
+        ``deadline_ms`` is the request's end-to-end latency budget: it
+        tightens the flush deadline (queueing gets at most half the budget)
+        and is the SLO the serving telemetry measures against.
+        ``priority`` (higher first, default 0) orders requests within a
+        group's queue; equal priorities keep FIFO order.  Both are advisory
+        for this synchronous service — deadlines still need a service call
+        to act on; the async front-end
+        (:class:`repro.serve.AsyncPathService`) enforces them on a timer.
         """
         if problem is None and isinstance(X, Problem):
             problem, X = X, None
@@ -294,6 +310,10 @@ class PathService:
                                  "both")
             return self._submit_spec(problem, path, policy, plan=plan,
                                      _cv_fold=_cv_fold)
+        if deadline_ms is not None and not deadline_ms > 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms!r}")
+        if isinstance(priority, bool) or not isinstance(priority, int):
+            raise ValueError(f"priority must be an int, got {priority!r}")
         X = np.asarray(X)
         y = np.asarray(y)
         if X.ndim != 2 or y.shape[0] != X.shape[0]:
@@ -327,7 +347,8 @@ class PathService:
                 sigma_ratio=sigma_ratio, screening=screening,
                 solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
                 max_refits=max_refits, working_set=working_set,
-                ws_tiers=ws_tiers)
+                ws_tiers=ws_tiers, deadline_ms=deadline_ms,
+                priority=priority)
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -352,6 +373,22 @@ class PathService:
             ws_tiers=ws_tiers, dtype=X.dtype.name, y_dtype=y.dtype.name)
         item = _Item(X=X, y=y, lam=lam, sigmas=sigmas, family=family,
                      working_set=ws)
+        return self._admit(key, item, deadline_ms=deadline_ms,
+                           priority=priority, _cv_fold=_cv_fold)
+
+    def _flush_by(self, now: float, deadline_ms: float | None) -> float:
+        """Flush deadline for one admission: ``max_delay`` of queueing, or —
+        when the request carries a latency budget — at most half the budget,
+        leaving the other half for padding/solve/unpad."""
+        if deadline_ms is None:
+            return now + self._batcher.max_delay
+        return now + min(self._batcher.max_delay, deadline_ms / 2e3)
+
+    def _admit(self, key: _GroupKey, item: _Item, *,
+               deadline_ms: float | None = None, priority: int = 0,
+               _cv_fold: bool = False) -> int:
+        """Queue one canonicalized request; the async subclass overrides
+        this to return a future and to reject-with-status at capacity."""
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
@@ -362,7 +399,8 @@ class PathService:
                 # and the flush routes responses by this membership
                 self._cv_fold_rids.add(rid)
             now = self._clock()
-            if self._batcher.admit(key, rid, item, now):
+            if self._batcher.admit(key, rid, item, now, priority=priority,
+                                   deadline=self._flush_by(now, deadline_ms)):
                 self._flush_group(key, trigger="fill")
             self._flush_due(now)
             return rid
@@ -410,12 +448,14 @@ class PathService:
             max_refits=policy.max_refits, working_set=ws,
             ws_tiers=policy.ws_tiers,
             cv_folds=path.cv_folds, stratify=path.stratify,
-            selection=path.selection, _cv_fold=_cv_fold)
+            selection=path.selection, deadline_ms=policy.deadline_ms,
+            priority=policy.priority, _cv_fold=_cv_fold)
 
     def _submit_cv(self, X, y, lam, family, *, n_folds, stratify, selection,
                    sigmas, path_length, sigma_ratio, screening, solver_tol,
                    max_iter, kkt_tol, max_refits, working_set,
-                   ws_tiers=DEFAULT_WS_TIERS) -> int:
+                   ws_tiers=DEFAULT_WS_TIERS, deadline_ms=None,
+                   priority=0) -> int:
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -423,12 +463,15 @@ class PathService:
         sigmas = np.asarray(sigmas)
         trains, vals = cv_fold_indices(y, n_folds, family=family,
                                        stratify=stratify)
+        # fold fits inherit the CV request's budget and priority: the CV
+        # answer is only as timely as its slowest fold
         fold_rids = [
             self.submit(X[tr], y[tr], family=family, lam=lam, sigmas=sigmas,
                         screening=screening, solver_tol=solver_tol,
                         max_iter=max_iter, kkt_tol=kkt_tol,
                         max_refits=max_refits, working_set=working_set,
-                        ws_tiers=ws_tiers, _cv_fold=True)
+                        ws_tiers=ws_tiers, deadline_ms=deadline_ms,
+                        priority=priority, _cv_fold=True)
             for tr in trains
         ]
         with self._lock:
@@ -532,14 +575,29 @@ class PathService:
                     queue_s=max(0.0, now - pending.submitted), solve_s=wall,
                     batch_size=B_real, batch_occupancy=occupancy,
                     padding_ratio=pad_ratio, cache_hit=hit)
-                self._completed += 1
-                self._latencies.append(resp.queue_s + wall)
                 self._padding_ratios.append(pad_ratio)
-                if pending.rid in self._cv_fold_rids:
-                    self._store(self._cv_hold, pending.rid, resp)
-                else:
-                    self._store(self._done, pending.rid, resp)
+                self._deliver(pending.rid, resp)
         return True
+
+    def _record_latency(self, rid: int, resp: PathResponse) -> None:
+        """Queue+solve latency, routed to the user-facing or the internal
+        (CV-fold-fit) window — percentiles must measure what a caller sees."""
+        lat = resp.queue_s + resp.solve_s
+        if rid in self._cv_fold_rids:
+            self._latencies_internal.append(lat)
+        else:
+            self._latencies.append(lat)
+
+    def _deliver(self, rid: int, resp: PathResponse) -> None:
+        """Hand one finished response over for collection (``poll`` here;
+        the async subclass overrides this to resolve the request's future).
+        Caller holds ``self._lock``."""
+        self._completed += 1
+        self._record_latency(rid, resp)
+        if rid in self._cv_fold_rids:
+            self._store(self._cv_hold, rid, resp)
+        else:
+            self._store(self._done, rid, resp)
 
     def _store(self, table: OrderedDict, rid: int, resp) -> None:
         table[rid] = resp
@@ -618,6 +676,7 @@ class PathService:
         percentiles, cache and bucket-registry counters."""
         with self._lock:
             lat = np.asarray(self._latencies) * 1e3
+            lat_int = np.asarray(self._latencies_internal) * 1e3
             occ = np.asarray(self._occupancies)
             pads = np.asarray(self._padding_ratios)
             return {
@@ -633,8 +692,16 @@ class PathService:
                 "slots": self.slots,
                 "occupancy_mean": float(occ.mean()) if occ.size else 0.0,
                 "padding_ratio_mean": float(pads.mean()) if pads.size else 0.0,
+                # user-facing requests only — internal CV fold fits are
+                # reported apart so SLO rows measure what a caller sees
                 "latency_ms_p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
                 "latency_ms_p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
+                "latency_count": int(lat.size),
+                "internal_latency_ms_p50": (float(np.percentile(lat_int, 50))
+                                            if lat_int.size else 0.0),
+                "internal_latency_ms_p95": (float(np.percentile(lat_int, 95))
+                                            if lat_int.size else 0.0),
+                "internal_latency_count": int(lat_int.size),
                 "cache": self.cache.stats(),
                 # executed ExecutionPlan summaries → batch counts: the
                 # planner/program decisions behind the numbers above

@@ -62,7 +62,7 @@ def _batch(B, n, p, *, k=4, rho=0.2, noise=1.0, q=0.1):
 EXPECTED_ALL = {
     "Problem", "LambdaSpec", "PathSpec", "SolverPolicy", "ExecutionPlan",
     "plan_execution", "slope_path", "SlopE", "as_lambda_spec",
-    "default_service", "shared_canonicalizer",
+    "default_service", "default_async_service", "shared_canonicalizer",
 }
 
 EXPECTED_FIELDS = {
@@ -72,7 +72,7 @@ EXPECTED_FIELDS = {
                "cv_folds", "stratify", "selection"],
     SolverPolicy: ["backend", "working_set", "ws_tiers", "pad", "screening",
                    "solver_tol", "max_iter", "kkt_tol", "max_refits",
-                   "verbose"],
+                   "verbose", "deadline_ms", "priority"],
     ExecutionPlan: ["backend", "mode", "batch", "n", "p", "working_set",
                     "ws_tiers", "pad", "exec_shape", "screening", "device",
                     "reasons"],
@@ -105,6 +105,32 @@ def test_spec_validation_errors():
         SolverPolicy(pad="always")
     with pytest.raises(ValueError):
         SolverPolicy(screening="weak")
+    with pytest.raises(ValueError):
+        SolverPolicy(deadline_ms=0.0)
+    with pytest.raises(ValueError):
+        SolverPolicy(deadline_ms=-5.0)
+    with pytest.raises(ValueError):
+        SolverPolicy(priority=1.5)
+    with pytest.raises(ValueError):
+        SolverPolicy(priority=True)
+
+
+def test_planner_routes_slo_knobs_to_serve():
+    X, y, lam = _problem(20, 24)
+    pb = Problem(X, y)
+    for pol in (SolverPolicy(deadline_ms=500.0), SolverPolicy(priority=3)):
+        pln = plan_execution(pb, PathSpec(lam=lam), pol)
+        assert pln.backend == "serve"
+        assert any("SLO" in r for r in pln.reasons)
+    # pinned non-serve backends cannot honour SLO knobs
+    for backend in ("host", "masked", "compact"):
+        with pytest.raises(ValueError, match="SLO"):
+            plan_execution(pb, PathSpec(lam=lam),
+                           SolverPolicy(backend=backend, deadline_ms=100.0))
+    # explicit serve + SLO knobs is fine
+    pln = plan_execution(pb, PathSpec(lam=lam),
+                         SolverPolicy(backend="serve", deadline_ms=100.0))
+    assert pln.backend == "serve"
 
 
 def test_specs_are_pytrees():
