@@ -20,6 +20,10 @@ Default sizes are scaled to finish on this CPU-only container in minutes;
   serve_async          AsyncPathService under a Poisson open-loop load: p50/p95
                        latency vs the deadline_ms SLO, slot-recycle counts,
                        admission rejection rate, and bit-identity vs sync
+  serve_chaos          fault-injected serving: one poison request in a cohort
+                       of 8 → availability ≥ 7/8, innocents bit-identical to
+                       the unfaulted run, bounded recovery latency; transient
+                       faults absorbed by retry; NaN poison quarantined
 """
 
 from __future__ import annotations
@@ -554,6 +558,7 @@ def serve(full: bool, stream: str = "mixed"):
         f"cache_hit_rate={st['cache']['hit_rate']:.2f} "
         f"programs={st['cache']['size']} "
         f"p50_ms={st['latency_ms_p50']:.0f} p95_ms={st['latency_ms_p95']:.0f} "
+        f"kkt_violations={st['kkt_violations']} "
         f"plans={plans} "
         f"ws_buckets={wsb['size']}sz/{wsb['updates']}upd/{wsb['hits']}hit")
 
@@ -656,6 +661,7 @@ def serve_async(full: bool):
         f"rps={R / t_load:.2f} slot_recycles={st['slot_recycles']} "
         f"chunk_batches={st['chunk_batches']} "
         f"occupancy={st['occupancy_mean']:.2f} "
+        f"kkt_violations={st['kkt_violations']} "
         f"flush_fill={st['flush_fill']} flush_deadline={st['flush_deadline']}")
     svc.close()
 
@@ -698,6 +704,121 @@ def serve_async(full: bool):
         f"maxdiff={maxdiff:.1f} checked={R} tolerance=0")
 
 
+def serve_chaos(full: bool):
+    """ISSUE 7 acceptance: the serving stack under deterministic fault
+    injection.
+
+    Three arms, all against the SAME warm compiled-program cache (chaos
+    rows time recovery, not XLA compilation):
+
+    * **poison** — one request in a cohort of 8 carries a persistent
+      rid-keyed worker fault.  Asserted: availability ≥ 7/8 (exactly the
+      poisoned future fails, with the injected exception), the 7 innocents
+      are bit-identical (maxdiff == 0) to an unfaulted run, and recovery
+      latency is bounded (faulted wall ≤ clean wall + a fixed budget, i.e.
+      retry + bisection overhead does not runaway).
+    * **transient** — a once-only worker fault is absorbed by
+      retry-with-backoff: every request completes, bit-identical.
+    * **nan poison** — a request corrupted at admission comes back as a
+      FLAGGED response (in-graph quarantine), not an exception, and the
+      cohort's availability stays 8/8.
+    """
+    from repro.core import bh_sequence
+    from repro.serve import (
+        AsyncPathService,
+        FaultPlan,
+        FaultSpec,
+        InjectedFault,
+        ProgramCache,
+    )
+
+    R = 8
+    L = 20
+    kw = dict(path_length=L, sigma_ratio=0.1, solver_tol=1e-8,
+              max_iter=20000, kkt_tol=1e-4)
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(R):
+        n = int(rng.integers(33, 64))
+        p = int(rng.integers(40, 64))
+        X, y, _ = make_regression(n, p, k=4, rho=0.2, seed=500 + i)
+        reqs.append((X, y, np.asarray(bh_sequence(p, q=0.1))))
+
+    cache = ProgramCache(capacity=16)
+
+    def serve_all(faults=None, retry_limit=1):
+        svc = AsyncPathService(max_batch=8, max_delay=0.005, step_chunk=4,
+                               max_queue=64, retry_limit=retry_limit,
+                               retry_backoff=0.001, cache=cache,
+                               faults=faults)
+        try:
+            t0 = time.perf_counter()
+            futs = [svc.submit(X, y, lam=lam, **kw) for X, y, lam in reqs]
+            outs = []
+            for f in futs:
+                try:
+                    outs.append(f.result(timeout=300))
+                except InjectedFault as e:
+                    outs.append(e)
+            wall = time.perf_counter() - t0
+            return outs, wall, svc.stats()
+        finally:
+            svc.close()
+
+    # clean run twice: the first warms the compile cache, the second is the
+    # steady-state reference every chaos arm is compared against
+    serve_all()
+    ref, t_clean, _ = serve_all()
+    assert not any(isinstance(r, Exception) for r in ref)
+
+    # -- poison arm: persistent rid-keyed fault, bisection isolates it ------
+    poison = 3
+    plan = FaultPlan([FaultSpec(site="worker", kind="error", rid=poison,
+                                times=10_000, message="chaos poison")])
+    got, t_fault, st = serve_all(faults=plan)
+    ok = [i for i in range(R) if not isinstance(got[i], Exception)]
+    assert len(ok) >= R - 1, f"availability {len(ok)}/{R} below {R - 1}/{R}"
+    assert isinstance(got[poison], InjectedFault), got[poison]
+    maxdiff = 0.0
+    for i in ok:
+        maxdiff = max(maxdiff,
+                      float(np.abs(got[i].betas - ref[i].betas).max()),
+                      float(np.abs(got[i].sigmas - ref[i].sigmas).max()))
+    assert maxdiff == 0.0, f"innocents diverged from unfaulted run: {maxdiff}"
+    recovery_budget_s = 60.0
+    assert t_fault <= t_clean + recovery_budget_s, (t_fault, t_clean)
+    row(f"serve_chaos/poison_R{R}", t_fault * 1e6,
+        f"availability={len(ok)}/{R} innocents_maxdiff={maxdiff:.1f} "
+        f"recovery_overhead_ms={(t_fault - t_clean) * 1e3:.0f} "
+        f"retries={st['retries']} bisections={st['bisections']} "
+        f"poisoned={st['poisoned']} kkt_violations={st['kkt_violations']}")
+
+    # -- transient arm: a once-only fault is absorbed by retry --------------
+    tplan = FaultPlan([FaultSpec(site="worker", kind="error", times=1)])
+    got_t, t_t, st_t = serve_all(faults=tplan, retry_limit=2)
+    assert not any(isinstance(r, Exception) for r in got_t)
+    diff_t = max(float(np.abs(g.betas - r.betas).max())
+                 for g, r in zip(got_t, ref))
+    assert diff_t == 0.0, diff_t
+    row(f"serve_chaos/transient_R{R}", t_t * 1e6,
+        f"availability={R}/{R} maxdiff={diff_t:.1f} "
+        f"retries={st_t['retries']} fired={tplan.stats()['fired']}")
+
+    # -- nan-poison arm: quarantined in-graph, no exception -----------------
+    qplan = FaultPlan([FaultSpec(site="admit", kind="nan", rid=poison)],
+                      seed=5)
+    got_q, t_q, st_q = serve_all(faults=qplan)
+    assert not any(isinstance(r, Exception) for r in got_q)
+    flagged = [i for i in range(R) if got_q[i].quarantined]
+    assert flagged == [poison], flagged
+    diff_q = max(float(np.abs(got_q[i].betas - ref[i].betas).max())
+                 for i in range(R) if i != poison)
+    assert diff_q == 0.0, diff_q
+    row(f"serve_chaos/nan_poison_R{R}", t_q * 1e6,
+        f"availability={R}/{R} quarantined={len(flagged)} "
+        f"innocents_maxdiff={diff_q:.1f} poisoned={st_q['poisoned']}")
+
+
 def resolve_only(spec: str) -> list[str]:
     """Parse ``--only``'s comma list: strip whitespace, drop empty items,
     dedupe preserving first-seen order, and reject unknown sweep names with
@@ -730,6 +851,7 @@ BENCHES = {
     "compact_two_tier": compact_two_tier,
     "serve": serve,
     "serve_async": serve_async,
+    "serve_chaos": serve_chaos,
 }
 
 

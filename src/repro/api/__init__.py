@@ -28,7 +28,9 @@ from .specs import (
     PathSpec,
     Problem,
     SolverPolicy,
+    ValidationError,
     as_lambda_spec,
+    find_nonfinite,
     shared_canonicalizer,
 )
 
@@ -37,6 +39,7 @@ __all__ = [
     "LambdaSpec",
     "PathSpec",
     "SolverPolicy",
+    "ValidationError",
     "ExecutionPlan",
     "plan_execution",
     "slope_path",
@@ -44,5 +47,6 @@ __all__ = [
     "as_lambda_spec",
     "default_service",
     "default_async_service",
+    "find_nonfinite",
     "shared_canonicalizer",
 ]

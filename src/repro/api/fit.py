@@ -32,7 +32,14 @@ from __future__ import annotations
 import threading
 
 from .plan import ExecutionPlan, plan_execution
-from .specs import PathSpec, Problem, SolverPolicy, apply_weights
+from .specs import (
+    PathSpec,
+    Problem,
+    SolverPolicy,
+    ValidationError,
+    apply_weights,
+    find_nonfinite,
+)
 
 __all__ = ["slope_path", "default_service", "default_async_service"]
 
@@ -107,12 +114,21 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
     pln = plan if plan is not None else plan_execution(problem, path, policy)
 
     if pln.backend == "serve":
+        # the service enforces policy.validate at admission
         return _serve_path(problem, path, policy, pln)
 
     X, y = apply_weights(problem)
     family = problem.family
     n, p, m = problem.n, problem.p, family.n_classes
     lam = path.lam.resolve(p * m, n=n)
+    if policy.validate == "strict":
+        issues = find_nonfinite(X=X, y=y, lam=lam, sigmas=path.sigmas)
+        if issues:
+            raise ValidationError(issues)
+    # validate="quarantine"/"off": direct device backends still flag sick
+    # members in-graph (BatchedPathResult.path_health); the gathered host
+    # driver has no in-graph detector, so there "quarantine" degrades to
+    # "off" (documented in README failure semantics)
     if getattr(lam, "ndim", 1) == 2 and not problem.batched:
         raise ValueError(
             f"a per-problem (B, p·m) λ stack (got {lam.shape}) needs a "

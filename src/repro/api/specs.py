@@ -49,8 +49,10 @@ __all__ = [
     "LambdaSpec",
     "PathSpec",
     "SolverPolicy",
+    "ValidationError",
     "as_lambda_spec",
     "apply_weights",
+    "find_nonfinite",
     "shared_canonicalizer",
 ]
 
@@ -70,6 +72,44 @@ def shared_canonicalizer() -> LambdaCanonicalizer:
 def _shape_of(x) -> tuple | None:
     s = getattr(x, "shape", None)
     return None if s is None else tuple(s)
+
+
+class ValidationError(ValueError):
+    """Structured admission-time rejection: non-finite operands.
+
+    ``issues`` is a tuple of ``(name, count, first_index)`` triples — one
+    per offending array — so callers can report *which* operand is
+    poisoned and where, instead of parsing a message string.  Raised
+    host-side under ``validate="strict"`` (the default) before any device
+    work is scheduled; ``validate="quarantine"`` admits the request and
+    lets the engine's in-graph health word flag it instead.
+    """
+
+    def __init__(self, issues):
+        self.issues = tuple(issues)
+        parts = ", ".join(
+            f"{name}: {count} non-finite value(s), first at flat index {idx}"
+            for name, count, idx in self.issues)
+        super().__init__(f"non-finite input rejected ({parts}); pass "
+                         f"validate='quarantine' to admit and flag in-graph, "
+                         f"or validate='off' to skip host-side checks")
+
+
+def find_nonfinite(**arrays) -> tuple[tuple[str, int, int], ...]:
+    """Scan named arrays for NaN/Inf: ``(name, count, first_flat_index)``
+    per offender, empty when all finite.  ``None`` values are skipped."""
+    issues = []
+    for name, arr in arrays.items():
+        if arr is None:
+            continue
+        a = np.asarray(arr)
+        if not np.issubdtype(a.dtype, np.number):
+            continue
+        bad = ~np.isfinite(a)
+        n = int(bad.sum())
+        if n:
+            issues.append((name, n, int(np.flatnonzero(bad.reshape(-1))[0])))
+    return tuple(issues)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -105,6 +145,12 @@ class Problem:
         if ws is not None and tuple(ws) != (xs[-2],):
             raise ValueError(
                 f"weights must be one value per row ({xs[-2]},), got {ws}")
+
+    def check_finite(self) -> None:
+        """Raise :class:`ValidationError` if X/y/weights hold NaN/Inf."""
+        issues = find_nonfinite(X=self.X, y=self.y, weights=self.weights)
+        if issues:
+            raise ValidationError(issues)
 
     @property
     def batched(self) -> bool:
@@ -249,6 +295,13 @@ class SolverPolicy:
     rank).  Setting either routes ``backend="auto"`` through the serving
     layer — only a service can enforce them — and pinning a non-serve
     backend alongside them is a planning error.
+
+    ``validate`` is the admission-validation policy for non-finite
+    operands: ``"strict"`` (default) rejects NaN/Inf in X/y/λ host-side
+    with :class:`ValidationError` before any device work; ``"quarantine"``
+    admits the request and relies on the engine's in-graph health word to
+    flag the member (``PathHealth`` / ``PathResponse.health``); ``"off"``
+    skips the host-side scan (the in-graph detector stays on regardless).
     """
 
     backend: str = "auto"
@@ -263,8 +316,13 @@ class SolverPolicy:
     verbose: bool = False
     deadline_ms: float | None = None
     priority: int = 0
+    validate: str = "strict"
 
     def __post_init__(self):
+        if self.validate not in ("strict", "quarantine", "off"):
+            raise ValueError(
+                f"validate must be 'strict', 'quarantine' or 'off', "
+                f"got {self.validate!r}")
         if self.backend not in _BACKENDS:
             raise ValueError(
                 f"backend must be one of {_BACKENDS}, got {self.backend!r}")

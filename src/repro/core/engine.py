@@ -61,6 +61,12 @@ from .solver import (
 __all__ = [
     "EnginePath",
     "CompactStats",
+    "PathHealth",
+    "HEALTH_OK",
+    "HEALTH_NONFINITE_INPUT",
+    "HEALTH_NONFINITE_STATE",
+    "HEALTH_DIVERGED",
+    "health_causes",
     "path_engine",
     "batched_path_engine",
     "compact_path_engine",
@@ -93,6 +99,69 @@ class EnginePath(NamedTuple):
     deviance: jax.Array       # (L,)
     kkt_unrepaired: jax.Array  # (L,) bool — repair loop hit max_refits
     #   with violations outstanding; the step's betas are NOT KKT-clean
+    health: jax.Array         # (L,) int32 — sticky per-step health word
+    #   (HEALTH_* bitmask); nonzero from the first step a member turned
+    #   sick — its betas are zeroed and it is quarantined out of
+    #   screening/KKT from then on
+
+
+# Per-member health word bits.  The word rides the scan carry, is sticky
+# (monotone OR across steps), and quarantines the member in-graph: its data
+# is zeroed, its working set blanked and its KKT repair gated off, so the
+# quarantined no-op solve exits in one iteration instead of grinding
+# ``max_iter`` on NaN stop criteria and stalling the lockstep batch.
+HEALTH_OK = 0
+HEALTH_NONFINITE_INPUT = 1   # non-finite X/y/λ/σ reached the engine
+HEALTH_NONFINITE_STATE = 2   # solver state (beta/grad/L/deviance) went NaN/Inf
+HEALTH_DIVERGED = 4          # objective blew past the divergence bound
+
+# a step's deviance beyond FACTOR·(|null deviance| + 1) marks divergence:
+# every family's loss at beta=0 is the natural scale of the objective, and
+# a correct prox step can never increase it by six orders of magnitude
+_DIVERGENCE_FACTOR = 1e6
+
+_HEALTH_BITS = (
+    (HEALTH_NONFINITE_INPUT, "nonfinite_input"),
+    (HEALTH_NONFINITE_STATE, "nonfinite_state"),
+    (HEALTH_DIVERGED, "diverged"),
+)
+
+
+def health_causes(word: int) -> tuple[str, ...]:
+    """Human-readable causes encoded in a health word."""
+    return tuple(name for bit, name in _HEALTH_BITS if int(word) & bit)
+
+
+@dataclasses.dataclass(frozen=True)
+class PathHealth:
+    """Per-member quarantine verdicts for one batched fit.
+
+    ``word`` is the (B, L) sticky per-step health bitmask an engine run
+    emitted (``EnginePath.health`` with the batch axis leading).  Because
+    the word is monotone along the path, the last step's word is each
+    member's cumulative verdict.
+    """
+
+    word: np.ndarray  # (B, L) int32
+
+    @property
+    def quarantined(self) -> np.ndarray:
+        """(B,) bool — members that turned sick anywhere on the path."""
+        return np.asarray(self.word)[:, -1] != 0
+
+    @property
+    def first_bad_step(self) -> np.ndarray:
+        """(B,) int — first sick path index per member, -1 when healthy."""
+        w = np.asarray(self.word)
+        sick = w != 0
+        return np.where(sick.any(axis=1), sick.argmax(axis=1), -1)
+
+    @property
+    def ok(self) -> bool:
+        return not bool(self.quarantined.any())
+
+    def causes(self, b: int) -> tuple[str, ...]:
+        return health_causes(int(np.asarray(self.word)[b, -1]))
 
 
 class CompactStats(NamedTuple):
@@ -184,19 +253,36 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
     """Build the per-σ-point path step for ONE problem.
 
     Returns ``step(carry, sigs, p_valid) -> (carry, out)`` with carry
-    ``(beta, grad, prev_active, L)`` — the traced body shared by the
-    monolithic scan (:func:`path_engine` / the vmapped batch form) and the
-    chunked continuous-batching scan (:func:`chunk_path_engine`).  One
+    ``(beta, grad, prev_active, L, health)`` — the traced body shared by
+    the monolithic scan (:func:`path_engine` / the vmapped batch form) and
+    the chunked continuous-batching scan (:func:`chunk_path_engine`).  One
     body, one trace structure: a chunked run must produce bit-identical
     per-step results to the monolithic scan, so the step cannot fork.
     ``p_valid`` is per-call (not closed over) because the chunked engine
     feeds a *dynamic* value: a frozen slot passes 0, which empties the
     screened set and turns the step into a one-iteration no-op solve.
+
+    ``health`` (int32 HEALTH_* bitmask, sticky) is the quarantine word: a
+    sick member enters the step with its carry sanitized and its DATA
+    zeroed (``jnp.where`` on X/y — value-identity for healthy members, so
+    the healthy path stays bitwise what it was before health existed).
+    Zeroing the data matters: NaN comparisons are always False, so a
+    poisoned X would never trip FISTA's stop criteria and one member would
+    grind ``max_iter`` iterations while the whole lockstep batch waits.
+    With zeroed data and a blanked working set the quarantined solve exits
+    in one iteration — the same blanked-solve trick the two-tier mixed arm
+    and the chunked engine's dead steps use.
     """
     p = X.shape[1]
     m = family.n_classes
     dtype = X.dtype
     lam = lam.astype(dtype)
+    # loop-invariant health inputs, hoisted by XLA out of the scan: the
+    # divergence bound from the null deviance, and whether λ itself is sick
+    null_dev_in = family.loss(X, y, jnp.zeros((p,) if m == 1 else (p, m),
+                                              dtype))
+    dev_bound = _DIVERGENCE_FACTOR * (jnp.abs(null_dev_in) + 1.0)
+    lam_bad = ~jnp.all(jnp.isfinite(lam))
 
     def fam_shape(b):  # (p, m) -> the shape the family callbacks expect
         return b[:, 0] if m == 1 else b
@@ -204,29 +290,40 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
     def lift(b):  # family shape -> (p, m)
         return b[:, None] if m == 1 else b
 
-    def solve(E, lam_next, beta, L):
+    def solve(Xs, ys, E, lam_next, beta, L):
         # The stack PAVA prox is a p·m-length sequential loop — under vmap
         # every batch member pays the slowest member's pooling in lockstep.
         # The sweep-merging prox is a handful of dense ops per sweep, so it
         # batches with near-perfect efficiency.  L is the curvature estimate
         # carried from the previous solve — device-resident state the host
         # driver cannot keep, which skips the backtracking ramp-up.
-        res = fista_masked(X, y, lam_next, fam_shape(beta), E, family,
+        res = fista_masked(Xs, ys, lam_next, fam_shape(beta), E, family,
                            max_iter=max_iter, tol=tol,
                            prox_method="parallel", L0=L)
         beta_new = lift(res.beta)
-        grad = lift(family.gradient(X, y, fam_shape(beta_new)))
+        grad = lift(family.gradient(Xs, ys, fam_shape(beta_new)))
         return beta_new, grad, res.iters.astype(jnp.int32), res.L
 
     count_viol = functools.partial(_new_violations, p=p, m=m,
                                    screening=screening)
 
     def step(carry, sigs, p_valid):
-        beta, grad, prev_active, L_carry = carry
+        beta, grad, prev_active, L_carry, health = carry
         sig_prev, sig = sigs
         lam_next = sig * lam
         kkt_check = functools.partial(_kkt_step, p=p, m=m, kkt_tol=kkt_tol,
                                       screening=screening, p_valid=p_valid)
+
+        # quarantine gate: a member already sick runs this step on zeroed
+        # data, zeroed carry and an empty working set — a one-iteration
+        # no-op solve.  All selects are value-identity when sick is False.
+        sick = health != 0
+        Xq = jnp.where(sick, jnp.zeros((), dtype), X)
+        yq = jnp.where(sick, jnp.zeros((), y.dtype), y)
+        beta = jnp.where(sick, 0, beta)
+        grad = jnp.where(sick, 0, grad)
+        prev_active = prev_active & ~sick
+        L_carry = jnp.where(sick, jnp.ones((), L_carry.dtype), L_carry)
 
         if screening == "none":
             strong_p, _ = _valid_masks(p, m, p_valid)
@@ -237,8 +334,11 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
             strong_p, E0, n_screened = _screen_sets(
                 grad, prev_active, sig_prev, sig, lam, p=p, m=m,
                 screening=screening, p_valid=p_valid)
+        E0 = E0 & ~sick
+        strong_p = strong_p & ~sick
+        n_screened = jnp.where(sick, 0, n_screened)
 
-        beta1, grad1, it1, L1 = solve(E0, lam_next, beta, L_carry)
+        beta1, grad1, it1, L1 = solve(Xq, yq, E0, lam_next, beta, L_carry)
 
         if screening == "none":
             beta_f, grad_f, L_f = beta1, grad1, L1
@@ -252,7 +352,7 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
             state = dict(
                 beta=beta1, grad=grad1, L=L1,
                 E=E0 | viol1.reshape(p, m).any(axis=1),
-                checked=checked1, has_viol=viol1.any(),
+                checked=checked1, has_viol=viol1.any() & ~sick,
                 viol_count=count_viol(viol1, strong_p, prev_active),
                 refits=jnp.int32(0), iters=it1,
             )
@@ -261,8 +361,8 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
                 return s["has_viol"] & (s["refits"] < max_refits)
 
             def body(s):
-                beta2, grad2, it2, L2 = solve(s["E"], lam_next, s["beta"],
-                                              s["L"])
+                beta2, grad2, it2, L2 = solve(Xq, yq, s["E"], lam_next,
+                                              s["beta"], s["L"])
                 viol2, checked2 = kkt_check(grad2, lam_next, s["E"],
                                             strong_p, s["checked"])
                 return dict(
@@ -281,20 +381,44 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
             iters = state["iters"]
             unrepaired = state["has_viol"]  # loop exited on the refit cap
 
+        dev = family.loss(Xq, yq, fam_shape(beta_f))
+        # health detection: non-finite σ/λ inputs, non-finite solver state,
+        # objective divergence.  Sticky — once sick, always sick.
+        bad_input = lam_bad | ~(jnp.isfinite(sig_prev) & jnp.isfinite(sig))
+        bad_state = ~(jnp.all(jnp.isfinite(beta_f))
+                      & jnp.all(jnp.isfinite(grad_f))
+                      & jnp.isfinite(L_f))
+        bad_dev = ~jnp.isfinite(dev) | (dev > dev_bound)
+        zero32 = jnp.int32(0)
+        health = (health
+                  | jnp.where(bad_input, jnp.int32(HEALTH_NONFINITE_INPUT),
+                              zero32)
+                  | jnp.where(bad_state, jnp.int32(HEALTH_NONFINITE_STATE),
+                              zero32)
+                  | jnp.where(bad_dev, jnp.int32(HEALTH_DIVERGED), zero32))
+        # quarantine newly-sick members' outputs so NaNs cannot escape into
+        # the carried state (next step's screen/solve) or the emitted path
+        sick_out = health != 0
+        beta_f = jnp.where(sick_out, 0, beta_f)
+        grad_f = jnp.where(sick_out, 0, grad_f)
+        L_f = jnp.where(sick_out, jnp.ones((), L_f.dtype), L_f)
+
         active = (jnp.abs(beta_f) > 0).any(axis=1)
-        dev = family.loss(X, y, fam_shape(beta_f))
         out = (beta_f, active.sum().astype(jnp.int32), n_screened, viol_count,
-               refits, iters, dev, unrepaired)
-        return (beta_f, grad_f, active, L_f), out
+               refits, iters, dev, unrepaired, health)
+        return (beta_f, grad_f, active, L_f, health), out
 
     return step
 
 
 def _init_state(X, y, family: Family):
     """Null-model start state for one problem: ``(beta0, grad0, active0,
-    L0)`` plus the null deviance — exactly the pre-scan computation
-    :func:`_engine` performs, factored out so the chunked engine's prefill
-    is bitwise the same."""
+    L0, health0)`` plus the null deviance — exactly the pre-scan
+    computation :func:`_engine` performs, factored out so the chunked
+    engine's prefill is bitwise the same.  ``health0`` is nonzero when the
+    inputs are already sick at the null model (non-finite X/y poison the
+    null gradient, deviance or Lipschitz estimate) — the member is then
+    quarantined from its very first step."""
     p = X.shape[1]
     m = family.n_classes
     dtype = X.dtype
@@ -304,20 +428,24 @@ def _init_state(X, y, family: Family):
     grad0 = grad0[:, None] if m == 1 else grad0
     null_dev = family.loss(X, y, fam0)
     L_init = default_L0(X, family).astype(dtype)
-    return zeros, grad0, null_dev, L_init
+    finite0 = (jnp.all(jnp.isfinite(grad0)) & jnp.isfinite(null_dev)
+               & jnp.isfinite(L_init))
+    health0 = jnp.where(finite0, jnp.int32(HEALTH_OK),
+                        jnp.int32(HEALTH_NONFINITE_INPUT))
+    return zeros, grad0, null_dev, L_init, health0
 
 
 def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
             kkt_tol, max_refits, p_valid=None) -> EnginePath:
     """Traced body shared by :func:`path_engine` and the vmapped batch form."""
     p = X.shape[1]
-    zeros, grad0, null_dev, L_init = _init_state(X, y, family)
+    zeros, grad0, null_dev, L_init, health0 = _init_state(X, y, family)
     step = _step_builder(X, y, lam, family, screening, max_iter, tol,
                          kkt_tol, max_refits)
-    carry0 = (zeros, grad0, jnp.zeros((p,), bool), L_init)
+    carry0 = (zeros, grad0, jnp.zeros((p,), bool), L_init, health0)
     _, outs = lax.scan(lambda c, s: step(c, s, p_valid), carry0,
                        (sigmas[:-1], sigmas[1:]))
-    betas, n_act, n_scr, viol, refits, iters, devs, unrep = outs
+    betas, n_act, n_scr, viol, refits, iters, devs, unrep, hlth = outs
 
     def pre(a, v):
         return jnp.concatenate([jnp.asarray(v, a.dtype)[None], a])
@@ -331,6 +459,7 @@ def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
         solver_iters=pre(iters, 0),
         deviance=pre(devs, null_dev),
         kkt_unrepaired=pre(unrep, False),
+        health=pre(hlth, health0),
     )
 
 
@@ -382,35 +511,38 @@ def batched_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
 def path_init_engine(X, y, family: Family):
     """Batched prefill: the state a path scan starts from, per member.
 
-    Returns ``(grad0, null_dev, L0)`` with shapes ``(B, p, m)`` / ``(B,)``
-    / ``(B,)`` — the same pre-scan computation :func:`batched_path_engine`
-    performs internally (one :func:`_init_state` per member under vmap), as
-    its own compiled program so the continuous-batching dispatcher can
-    initialise a *newly inserted* slot mid-flight with bitwise the state a
-    from-scratch run would have started with.  ``beta0``/``active0`` are
-    zeros at known shapes; the host materialises those itself.
+    Returns ``(grad0, null_dev, L0, health0)`` with shapes ``(B, p, m)`` /
+    ``(B,)`` / ``(B,)`` / ``(B,) int32`` — the same pre-scan computation
+    :func:`batched_path_engine` performs internally (one
+    :func:`_init_state` per member under vmap), as its own compiled
+    program so the continuous-batching dispatcher can initialise a *newly
+    inserted* slot mid-flight with bitwise the state a from-scratch run
+    would have started with.  ``beta0``/``active0`` are zeros at known
+    shapes; the host materialises those itself.  A nonzero ``health0``
+    marks a member quarantined before its first step (non-finite inputs).
     """
     def one(Xi, yi):
-        _, grad0, null_dev, L0 = _init_state(Xi, yi, family)
-        return grad0, null_dev, L0
+        _, grad0, null_dev, L0, health0 = _init_state(Xi, yi, family)
+        return grad0, null_dev, L0, health0
 
     return jax.vmap(one)(X, y)
 
 
 @functools.partial(jax.jit, static_argnames=_ENGINE_STATICS)
 def chunk_path_engine(X, y, lam, sig_prev, sig_next, live, beta, grad,
-                      active, L, family: Family, p_valid, *,
+                      active, L, health, family: Family, p_valid, *,
                       screening: str = "strong", max_iter: int = 5000,
                       tol: float = 1e-8, kkt_tol: float = 1e-4,
                       max_refits: int = 32):
     """Advance B carried paths by C σ-grid steps each (continuous batching).
 
     The slot-swap seam for the async serving layer: instead of one
-    monolithic scan over a member's whole grid, the path advances in chunks
-    of C steps with the scan carry ``(beta, grad, active, L)`` round-tripped
-    through the host between chunks — so a member that early-stops can free
-    its batch slot and a queued request can join the *running* cohort at
-    the next chunk boundary, each slot at its own step offset.
+    monolithic scan over a member's whole grid, the path advances in
+    chunks of C steps with the scan carry ``(beta, grad, active, L,
+    health)`` round-tripped through the host between chunks — so a member
+    that early-stops can free its batch slot and a queued request can join
+    the *running* cohort at the next chunk boundary, each slot at its own
+    step offset.
 
     ``sig_prev``/``sig_next``: (B, C) per-slot σ pairs (each slot's own
     grid, wherever its cursor stands); ``live``: (B, C) bool — steps beyond
@@ -418,9 +550,11 @@ def chunk_path_engine(X, y, lam, sig_prev, sig_next, live, beta, grad,
     effective ``p_valid`` of 0 (empty screened set → one-iteration blanked
     solve, the same trick the two-tier mixed arm uses) and the carry is
     held, so a dead step costs lockstep time but cannot perturb state.
-    ``p_valid``: (B,) int32.  Returns ``((beta, grad, active, L), EnginePath)``
-    with EnginePath arrays shaped (B, C, ...) — raw chunk steps, no null
-    head (the dispatcher owns step 0 via :func:`path_init_engine`).
+    ``p_valid``: (B,) int32; ``health``: (B,) int32 sticky quarantine words
+    (0 for healthy slots; :func:`path_init_engine` seeds them).  Returns
+    ``((beta, grad, active, L, health), EnginePath)`` with EnginePath
+    arrays shaped (B, C, ...) — raw chunk steps, no null head (the
+    dispatcher owns step 0 via :func:`path_init_engine`).
 
     Per-step traced body is :func:`_step_builder`'s — the SAME body the
     monolithic engines scan — so chunked execution is bit-identical to
@@ -429,7 +563,7 @@ def chunk_path_engine(X, y, lam, sig_prev, sig_next, live, beta, grad,
     """
     lam_axis = 0 if lam.ndim == 2 else None
 
-    def one(Xi, yi, lami, spi, sni, lvi, bi, gi, ai, Li, pvi):
+    def one(Xi, yi, lami, spi, sni, lvi, bi, gi, ai, Li, hi, pvi):
         step = _step_builder(Xi, yi, lami, family, screening, max_iter, tol,
                              kkt_tol, max_refits)
 
@@ -441,11 +575,12 @@ def chunk_path_engine(X, y, lam, sig_prev, sig_next, live, beta, grad,
                          for nw, od in zip(new_carry, carry))
             return held, out
 
-        return lax.scan(chunk_step, (bi, gi, ai, Li), (spi, sni, lvi))
+        return lax.scan(chunk_step, (bi, gi, ai, Li, hi), (spi, sni, lvi))
 
     carry, outs = jax.vmap(one, in_axes=(0, 0, lam_axis, 0, 0, 0, 0, 0, 0,
-                                         0, 0))(
-        X, y, lam, sig_prev, sig_next, live, beta, grad, active, L, p_valid)
+                                         0, 0, 0))(
+        X, y, lam, sig_prev, sig_next, live, beta, grad, active, L, health,
+        p_valid)
     return carry, EnginePath(*outs)
 
 
@@ -501,6 +636,14 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
 
     grad0 = jax.vmap(lambda Xi, yi: grad_one(Xi, yi, zeros1))(X, y)
     null_dev = jax.vmap(lambda Xi, yi: dev_one(Xi, yi, zeros1))(X, y)
+    # health inputs, mirroring _step_builder/_init_state member-for-member
+    L_init0 = jax.vmap(lambda Xi: default_L0(Xi, family))(X).astype(dtype)
+    finite0 = (jnp.isfinite(grad0).reshape(B, -1).all(axis=1)
+               & jnp.isfinite(null_dev) & jnp.isfinite(L_init0))
+    health0 = jnp.where(finite0, jnp.int32(HEALTH_OK),
+                        jnp.int32(HEALTH_NONFINITE_INPUT))
+    dev_bound = _DIVERGENCE_FACTOR * (jnp.abs(null_dev) + 1.0)  # (B,)
+    lam_bad = ~jnp.isfinite(lam).all(axis=1)                    # (B,)
 
     solver_kw = dict(max_iter=max_iter, tol=tol, prox_method="parallel")
 
@@ -519,14 +662,14 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
     solve_tier1 = solve_compact_one(W)
     solve_tier2 = None if W2 is None else solve_compact_one(W2)
 
-    def solve_all(E, lam_next, beta, L):
+    def solve_all(Xq, yq, E, lam_next, beta, L):
         need = E.sum(axis=1).astype(jnp.int32)
         # scalar reduction — keeps the fallback cond a real branch
         fell_back = jnp.any(need > W_top)
         args = (lam_next, beta, E, L)
 
         def tier1_all(a):
-            return jax.vmap(solve_tier1)(X, y, *a)
+            return jax.vmap(solve_tier1)(Xq, yq, *a)
 
         if W2 is None:
             compact_arm = tier1_all
@@ -547,9 +690,9 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                 # (the solvers already zero each member's warm start through
                 # its mask, so blanking E alone blanks the whole problem)
                 r1 = jax.vmap(solve_tier1)(
-                    X, y, lam_next, beta, E & ~over1[:, None], L)
+                    Xq, yq, lam_next, beta, E & ~over1[:, None], L)
                 r2 = jax.vmap(solve_tier2)(
-                    X, y, lam_next, beta, E & over1[:, None], L)
+                    Xq, yq, lam_next, beta, E & over1[:, None], L)
 
                 def sel(two, one):
                     o = over1.reshape((B,) + (1,) * (two.ndim - 1))
@@ -564,11 +707,11 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
 
         beta1, it1, L1 = lax.cond(
             fell_back,
-            lambda a: jax.vmap(solve_masked_one)(X, y, *a),
+            lambda a: jax.vmap(solve_masked_one)(Xq, yq, *a),
             compact_arm,
             args,
         )
-        grad1 = jax.vmap(grad_one)(X, y, beta1)
+        grad1 = jax.vmap(grad_one)(Xq, yq, beta1)
         return beta1, grad1, it1, L1, fell_back, need
 
     nv_one = functools.partial(_new_violations, p=p, m=m, screening=screening)
@@ -584,9 +727,20 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
     kkt_all = jax.vmap(kkt_one, in_axes=(0, 0, 0, 0, 0, pv_axis))
 
     def step(carry, sigs):
-        beta, grad, prev_active, L_carry = carry
+        beta, grad, prev_active, L_carry, health = carry
         sig_prev, sig = sigs                      # (B,), (B,)
         lam_next = sig[:, None] * lam             # (B, p·m)
+
+        # quarantine gate, member-for-member what _step_builder applies:
+        # sick members run on zeroed data/carry and a blanked working set
+        sick = health != 0                        # (B,)
+        Xq = jnp.where(sick[:, None, None], jnp.zeros((), dtype), X)
+        yq = jnp.where(sick.reshape((B,) + (1,) * (y.ndim - 1)),
+                       jnp.zeros((), y.dtype), y)
+        beta = jnp.where(sick[:, None, None], 0, beta)
+        grad = jnp.where(sick[:, None, None], 0, grad)
+        prev_active = prev_active & ~sick[:, None]
+        L_carry = jnp.where(sick, jnp.ones((), L_carry.dtype), L_carry)
 
         if screening == "none":
             if p_valid is None:
@@ -600,9 +754,12 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
             strong_p, E0, n_screened = jax.vmap(
                 screen_one, in_axes=(0, 0, 0, 0, 0, pv_axis)
             )(grad, prev_active, sig_prev, sig, lam, p_valid)
+        E0 = E0 & ~sick[:, None]
+        strong_p = strong_p & ~sick[:, None]
+        n_screened = jnp.where(sick, 0, n_screened)
 
-        beta1, grad1, it1, L1, fb1, need1 = solve_all(E0, lam_next, beta,
-                                                      L_carry)
+        beta1, grad1, it1, L1, fb1, need1 = solve_all(Xq, yq, E0, lam_next,
+                                                      beta, L_carry)
 
         if screening == "none":
             beta_f, grad_f, L_f = beta1, grad1, L1
@@ -619,7 +776,7 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                 beta=beta1, grad=grad1, L=L1,
                 E=E0 | viol1.reshape(B, p, m).any(axis=2),
                 checked=checked1,
-                has_viol=viol1.reshape(B, -1).any(axis=1),
+                has_viol=viol1.reshape(B, -1).any(axis=1) & ~sick,
                 viol_count=jax.vmap(nv_one)(viol1, strong_p, prev_active),
                 refits=jnp.zeros((B,), jnp.int32), iters=it1,
                 fell_back=fb1, ws_max=need1,
@@ -636,7 +793,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                 # (discarded) solve must not force the masked fallback.
                 active = s["has_viol"] & (s["refits"] < max_refits)
                 beta2, grad2, it2, L2, fb2, need2 = solve_all(
-                    s["E"] & active[:, None], lam_next, s["beta"], s["L"])
+                    Xq, yq, s["E"] & active[:, None], lam_next, s["beta"],
+                    s["L"])
                 viol2, checked2 = kkt_all(grad2, lam_next, s["E"],
                                           strong_p, s["checked"], p_valid)
 
@@ -671,24 +829,42 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
             fell_back = state["fell_back"]
             ws_max = state["ws_max"]
 
+        dev = jax.vmap(dev_one)(Xq, yq, beta_f)
+        # health detection + output quarantine, member-for-member what
+        # _step_builder applies (sticky word, NaNs never escape the carry)
+        bad_input = lam_bad | ~(jnp.isfinite(sig_prev) & jnp.isfinite(sig))
+        bad_state = ~(jnp.isfinite(beta_f).reshape(B, -1).all(axis=1)
+                      & jnp.isfinite(grad_f).reshape(B, -1).all(axis=1)
+                      & jnp.isfinite(L_f))
+        bad_dev = ~jnp.isfinite(dev) | (dev > dev_bound)
+        zero32 = jnp.zeros((B,), jnp.int32)
+        health = (health
+                  | jnp.where(bad_input, jnp.int32(HEALTH_NONFINITE_INPUT),
+                              zero32)
+                  | jnp.where(bad_state, jnp.int32(HEALTH_NONFINITE_STATE),
+                              zero32)
+                  | jnp.where(bad_dev, jnp.int32(HEALTH_DIVERGED), zero32))
+        sick_out = health != 0
+        beta_f = jnp.where(sick_out[:, None, None], 0, beta_f)
+        grad_f = jnp.where(sick_out[:, None, None], 0, grad_f)
+        L_f = jnp.where(sick_out, jnp.ones((), L_f.dtype), L_f)
+
         active = (jnp.abs(beta_f) > 0).any(axis=2)
-        dev = jax.vmap(dev_one)(X, y, beta_f)
         # which tier served each member this step: 0 on fallback steps (the
         # whole batch ran masked), else the smallest tier covering the
         # member's peak demand across repair rounds
         tier = jnp.where(fell_back, jnp.int32(0),
                          jnp.where(ws_max > W, jnp.int32(2), jnp.int32(1)))
         out = (beta_f, active.sum(axis=1).astype(jnp.int32), n_screened,
-               viol_count, refits, iters, dev, unrepaired, ws_max,
+               viol_count, refits, iters, dev, unrepaired, health, ws_max,
                tier, fell_back & jnp.ones((B,), bool))
-        return (beta_f, grad_f, active, L_f), out
+        return (beta_f, grad_f, active, L_f, health), out
 
-    L_init = jax.vmap(lambda Xi: default_L0(Xi, family))(X).astype(dtype)
     carry0 = (jnp.zeros((B, p, m), dtype), grad0, jnp.zeros((B, p), bool),
-              L_init)
+              L_init0, health0)
     xs = (sigmas[:, :-1].T, sigmas[:, 1:].T)  # scan over the path axis
     _, outs = lax.scan(step, carry0, xs)
-    (betas, n_act, n_scr, viol, refits, iters, devs, unrep, ws, tiers,
+    (betas, n_act, n_scr, viol, refits, iters, devs, unrep, hlth, ws, tiers,
      fb) = outs
 
     def pre(a, v):
@@ -707,6 +883,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
         deviance=jnp.concatenate([null_dev[:, None],
                                   jnp.moveaxis(devs, 0, 1)], axis=1),
         kkt_unrepaired=pre(unrep, False),
+        health=jnp.concatenate([health0[:, None],
+                                jnp.moveaxis(hlth, 0, 1)], axis=1),
     )
     stats = CompactStats(ws_size=pre(ws, 0), tier=pre(tiers, 1),
                          fell_back=pre(fb, False))
@@ -761,6 +939,7 @@ class BatchedPathResult:
     kkt_unrepaired: np.ndarray  # (B, L) bool — see EnginePath.kkt_unrepaired
     total_time: float
     n_samples: int            # rows per problem (early-stop rules need it)
+    health: np.ndarray | None = None      # (B, L) int32 HEALTH_* words
     working_set: int | None = None        # W bucket (None: masked engine)
     working_set_top: int | None = None    # second-tier bucket (None: one tier)
     ws_size: np.ndarray | None = None     # (B, L) peak |E| per step
@@ -779,6 +958,11 @@ class BatchedPathResult:
     @property
     def total_violations(self) -> np.ndarray:
         return self.n_violations.sum(axis=1)
+
+    @property
+    def path_health(self) -> PathHealth | None:
+        """Per-member quarantine verdicts (None for pre-health pickles)."""
+        return None if self.health is None else PathHealth(word=self.health)
 
     def path_results(self, *, early_stop: bool = True):
         """Per-problem :class:`repro.core.path.PathResult` views (the same
@@ -799,6 +983,8 @@ class BatchedPathResult:
                     solver_iters=self.solver_iters[b],
                     deviance=self.deviance[b],
                     kkt_unrepaired=self.kkt_unrepaired[b],
+                    health=(np.zeros(self.deviance[b].shape, np.int32)
+                            if self.health is None else self.health[b]),
                 ),
                 self.sigmas[b], self.lam, per, early_stop=early_stop,
                 n=self.n_samples,
@@ -1048,7 +1234,7 @@ def _fit_path_batched(
             n_active=res.n_active[:B], n_screened=res.n_screened[:B],
             n_violations=res.n_violations[:B], refits=res.refits[:B],
             solver_iters=res.solver_iters[:B], deviance=res.deviance[:B],
-            kkt_unrepaired=res.kkt_unrepaired[:B])
+            kkt_unrepaired=res.kkt_unrepaired[:B], health=res.health[:B])
         if stats is not None:
             stats = CompactStats(ws_size=stats.ws_size[:B],
                                  tier=stats.tier[:B],
@@ -1058,6 +1244,7 @@ def _fit_path_batched(
         betas = betas[:, :, :, 0]
     unrepaired = res.kkt_unrepaired
     _warn_unrepaired(unrepaired, max_refits)
+    _warn_quarantined(res.health)
     ws_size = ws_tier = fallback = None
     if stats is not None:
         ws_size = stats.ws_size
@@ -1082,6 +1269,7 @@ def _fit_path_batched(
         kkt_unrepaired=unrepaired,
         total_time=wall,
         n_samples=n,
+        health=res.health,
         working_set=W,
         working_set_top=W2,
         ws_size=ws_size,
@@ -1099,6 +1287,23 @@ def _warn_unrepaired(unrepaired: np.ndarray, max_refits: int) -> None:
             f"{int(unrepaired.sum())} path step(s) hit the KKT repair cap "
             f"(max_refits={max_refits}) with violations outstanding; those "
             "betas are not KKT-clean — raise max_refits",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+def _warn_quarantined(health: np.ndarray) -> None:
+    word = np.asarray(health)[:, -1]
+    if word.any():
+        import warnings
+
+        bad = np.nonzero(word)[0]
+        causes = sorted({c for w in word[bad] for c in health_causes(int(w))})
+        warnings.warn(
+            f"{bad.size} batch member(s) were quarantined in-graph "
+            f"(members {bad.tolist()}, causes: {', '.join(causes)}); their "
+            "betas are zeroed from the first sick step — inspect "
+            "result.path_health",
             RuntimeWarning,
             stacklevel=3,
         )

@@ -33,12 +33,17 @@ _LAZY = {
     "LambdaCanonicalizer": "batcher",
     "Pending": "batcher",
     "QueueFull": "batcher",
+    "Rejection": "batcher",
+    "RejectionError": "batcher",
     "lambda_kinds": "batcher",
     "PathService": "service",
     "PathResponse": "service",
     "CvResponse": "service",
     "AsyncPathService": "dispatch",
-    "Rejection": "dispatch",
+    "FaultPlan": "faults",
+    "FaultSpec": "faults",
+    "InjectedFault": "faults",
+    "NO_FAULTS": "faults",
 }
 
 __all__ = [

@@ -48,12 +48,49 @@ from ..core.lambda_seq import (
     oscar_sequence,
 )
 
-__all__ = ["Pending", "MicroBatcher", "QueueFull", "LambdaCanonicalizer",
-           "lambda_kinds"]
+__all__ = ["Pending", "MicroBatcher", "QueueFull", "Rejection",
+           "RejectionError", "LambdaCanonicalizer", "lambda_kinds"]
 
 
 class QueueFull(RuntimeError):
-    """Admission rejected: the batcher's bounded queue is at capacity."""
+    """Admission rejected: the batcher's bounded queue is at capacity.
+
+    Deprecated alias surface: services raise/convert this into the
+    structured :class:`Rejection` form — the synchronous service raises
+    :class:`RejectionError` (a ``QueueFull`` subclass, so existing
+    ``except QueueFull`` handlers keep working) and the async service
+    resolves the future with the :class:`Rejection` value itself.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Admission-control verdict: the request was NOT queued.
+
+    The ONE structured rejection shape both front-ends speak: the async
+    service resolves it into the submit future immediately (callers
+    distinguish "rejected now" from "missed its deadline later" without
+    waiting), the synchronous service raises it wrapped in
+    :class:`RejectionError`.
+    """
+
+    rid: int
+    reason: str
+    queued: int            # queue depth at the rejecting admission
+    max_queue: int | None  # the capacity that was hit
+
+
+class RejectionError(QueueFull):
+    """Synchronous admission rejection carrying the structured verdict.
+
+    Subclasses :class:`QueueFull` so pre-PR-7 ``except QueueFull`` code
+    keeps catching capacity rejections; new code should read
+    ``err.rejection`` for the structured fields.
+    """
+
+    def __init__(self, rejection: Rejection):
+        super().__init__(rejection.reason)
+        self.rejection = rejection
 
 
 @dataclasses.dataclass

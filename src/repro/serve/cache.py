@@ -130,7 +130,8 @@ class CompiledProgram:
 
     ``"path"`` programs take ``(Xs, ys, lam, sigmas, p_valid)``; ``"chunk"``
     programs take ``(Xs, ys, lam, sig_prev, sig_next, live, beta, grad,
-    active, L, p_valid)``; ``"init"`` programs take ``(Xs, ys)``.  Operands
+    active, L, health, p_valid)``; ``"init"`` programs take ``(Xs, ys)``.
+    Operands
     are converted as-is — AOT executables demand exact dtypes, so callers
     own them — except the trailing int32 ``p_valid``, which is cast for
     convenience on the two variants that end with it.
@@ -184,6 +185,7 @@ def _build(spec: ProgramSpec) -> tuple:
             sds((B, C), f), sds((B, C), f), sds((B, C), bool),  # σ pairs, live
             sds((B, P, m), f), sds((B, P, m), f),               # beta, grad
             sds((B, P), bool), sds((B,), f),                    # active, L
+            sds((B,), np.int32),                                # health
             spec.family, pv, **kw)
     elif spec.working_set is None:
         lowered = batched_path_engine.lower(*data, lam, sds((B, L), f),

@@ -29,11 +29,24 @@ traced body the monolithic engines scan, dead chunk steps hold the carry
 exactly, and batch slots are member-invariant — an async-served result
 equals the synchronous served result (and the direct padded call) at
 tolerance 0.  ``tests/test_serve_async.py`` pins this.
+
+Failure isolation (PR 7): a worker exception fails only the **implicated
+cohort** — the requests the failing serve had actually taken — never the
+whole outstanding future set.  The cohort is retried with exponential
+backoff + jitter (``retry_limit`` attempts); a cohort that keeps failing
+is **bisected** until the poison request is isolated — only it gets the
+exception, and the innocent members re-dispatch through the normal
+execution path, so their results are bit-identical to an unfaulted run
+(same program, same padded operands).  Requests the engine quarantines
+in-graph (non-finite inputs under ``validate="quarantine"``) resolve
+normally with ``PathResponse.quarantined`` set — sick data is a *flagged
+result*, not an exception, and never stalls the cohort.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 from concurrent.futures import Future
@@ -45,26 +58,12 @@ from ..core.engine import cv_fold_indices, cv_select, cv_val_deviance, \
 from ..core.losses import Family, ols
 from ..core.path import _stop_triggered
 from ..core.solver import DEFAULT_WS_TIERS
-from .batcher import MicroBatcher, Pending, QueueFull
+from .batcher import Pending, QueueFull, Rejection
 from .buckets import pad_batch
 from .cache import ProgramSpec
 from .service import CvResponse, PathResponse, PathService, _GroupKey
 
 __all__ = ["AsyncPathService", "Rejection"]
-
-
-@dataclasses.dataclass(frozen=True)
-class Rejection:
-    """Admission-control verdict: the request was NOT queued.
-
-    Resolved into the submit future immediately, so callers distinguish
-    "rejected now" from "missed its deadline later" without waiting.
-    """
-
-    rid: int
-    reason: str
-    queued: int            # queue depth at the rejecting admission
-    max_queue: int | None  # the capacity that was hit
 
 
 @dataclasses.dataclass
@@ -87,9 +86,11 @@ class _Slot:
     take: int = 0          # live steps requested from the current chunk
     solve_s: float = 0.0   # accumulated chunk walls while this slot ran
     finished: bool = False
+    health0: int = 0       # init-time health word (nonzero: quarantined
+    #   on admission — the slot delivers its flagged null head and frees)
     steps: list = dataclasses.field(default_factory=list)
     # each entry: (beta (p, m), n_active, n_screened, n_violations,
-    #              refits, solver_iters, deviance, kkt_unrepaired)
+    #              refits, solver_iters, deviance, kkt_unrepaired, health)
 
 
 class AsyncPathService(PathService):
@@ -104,23 +105,34 @@ class AsyncPathService(PathService):
 
     def __init__(self, *, max_batch: int = 8, max_delay: float = 0.02,
                  step_chunk: int = 8, max_queue: int | None = 64,
+                 retry_limit: int = 2, retry_backoff: float = 0.02,
+                 retry_jitter: float = 0.25,
                  autostart: bool = True, policy=None, cache=None,
-                 canonicalizer=None, clock=time.perf_counter):
+                 canonicalizer=None, clock=time.perf_counter, faults=None):
         super().__init__(max_batch=max_batch, max_delay=max_delay,
-                         policy=policy, cache=cache,
-                         canonicalizer=canonicalizer, clock=clock)
+                         max_queue=max_queue, policy=policy, cache=cache,
+                         canonicalizer=canonicalizer, clock=clock,
+                         faults=faults)
         if step_chunk < 1:
             raise ValueError(f"step_chunk must be ≥ 1, got {step_chunk}")
-        # rebuild the batcher with the admission bound (the base service
-        # keeps its historical unbounded queue)
-        self._batcher = MicroBatcher(max_batch=max_batch,
-                                     max_delay=max_delay,
-                                     max_queue=max_queue)
+        if retry_limit < 0:
+            raise ValueError(f"retry_limit must be ≥ 0, got {retry_limit}")
+        if retry_backoff < 0 or retry_jitter < 0:
+            raise ValueError("retry_backoff and retry_jitter must be ≥ 0")
         self.step_chunk = step_chunk
+        # transient-failure policy: attempt k sleeps
+        # retry_backoff · 2^(k-1) · (1 + retry_jitter·U[0,1)) seconds
+        self.retry_limit = retry_limit
+        self.retry_backoff = retry_backoff
+        self.retry_jitter = retry_jitter
+        self._jitter_rng = random.Random(0)  # deterministic under test
         self._futures: dict[int, Future] = {}
-        self._rejected = 0
         self._slot_recycles = 0
         self._chunk_batches = 0
+        self._retries = 0     # re-serve attempts after a worker failure
+        self._bisections = 0  # cohort splits while isolating a poison
+        self._poisoned = 0    # requests that individually got the exception
+        self._current_cohort: list[Pending] = []
         self._last_error: BaseException | None = None
         self._cond = threading.Condition()
         self._stop_flag = False
@@ -142,15 +154,33 @@ class AsyncPathService(PathService):
 
     def close(self, *, flush: bool = True, timeout: float = 10.0) -> None:
         """Stop the dispatcher; ``flush=True`` then serves anything still
-        queued synchronously so no admitted future is left unresolved."""
+        queued synchronously so no admitted future is left unresolved.
+
+        A fault raised during the close-time drain must not leave futures
+        permanently pending: whatever the flush could not deliver is failed
+        explicitly before returning — every admitted future resolves.
+        """
         with self._cond:
             self._stop_flag = True
             self._cond.notify_all()
         w = self._worker
         if w is not None:
             w.join(timeout=timeout)
+        drain_error: BaseException | None = None
         if flush:
-            self.flush()
+            try:
+                self.flush()
+            except BaseException as e:
+                self._last_error = drain_error = e
+        with self._lock:
+            leftovers = list(self._futures.items())
+            self._futures.clear()
+            self._cv_fold_rids.clear()
+        for rid, fut in leftovers:
+            if not fut.done():
+                fut.set_exception(RuntimeError(
+                    f"service closed with request {rid} undelivered")
+                    if drain_error is None else drain_error)
 
     def __enter__(self):
         return self
@@ -184,6 +214,7 @@ class AsyncPathService(PathService):
             fut.rid = rid
             if _cv_fold:
                 self._cv_fold_rids.add(rid)
+            item = self._maybe_corrupt(rid, item)
             now = self._clock()
             try:
                 self._batcher.admit(
@@ -220,7 +251,7 @@ class AsyncPathService(PathService):
                    sigmas, path_length, sigma_ratio, screening, solver_tol,
                    max_iter, kkt_tol, max_refits, working_set,
                    ws_tiers=DEFAULT_WS_TIERS, deadline_ms=None,
-                   priority=0) -> Future:
+                   priority=0, validate="strict") -> Future:
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -234,7 +265,7 @@ class AsyncPathService(PathService):
                         max_iter=max_iter, kkt_tol=kkt_tol,
                         max_refits=max_refits, working_set=working_set,
                         ws_tiers=ws_tiers, deadline_ms=deadline_ms,
-                        priority=priority, _cv_fold=True)
+                        priority=priority, validate=validate, _cv_fold=True)
             for tr in trains
         ]
         cv_fut: Future = Future()
@@ -310,17 +341,102 @@ class AsyncPathService(PathService):
                             timeout=max(0.0, nd - self._clock()) + 1e-4)
                 if self._stop_flag:
                     return
+            self._serve_safely(key, trigger)
+
+    # -- failure isolation: cohort-scoped retry, backoff, bisection ---------
+
+    def _note_taken(self, batch) -> None:
+        """Record what the in-flight serve has actually taken — the blast
+        radius of a worker exception is exactly this cohort."""
+        self._current_cohort.extend(batch)
+
+    def _serve_safely(self, key: _GroupKey, trigger: str) -> None:
+        """One dispatcher serve with scoped failure handling.
+
+        On an exception only the implicated cohort (requests this serve
+        took) enters recovery; every other outstanding future is untouched.
+        A failure *before* anything was taken (e.g. an injected compile
+        fault) implicates the queued group, which is popped and recovered
+        through the same path so a persistent failure cannot spin the
+        dispatcher hot on an undrainable queue.
+        """
+        self._current_cohort = []
+        try:
+            self._serve_group(key, trigger)
+        except BaseException as e:  # keep serving; recover the cohort
+            self._last_error = e
+            with self._lock:
+                cohort = [p for p in self._current_cohort
+                          if p.rid in self._futures]
+            if not cohort:
+                cohort = self._batcher.take(key)
+            self._recover(key, cohort, e)
+        finally:
+            self._current_cohort = []
+
+    def _sleep_backoff(self, attempt: int) -> None:
+        delay = self.retry_backoff * (2 ** (attempt - 1))
+        delay *= 1.0 + self.retry_jitter * self._jitter_rng.random()
+        if delay > 0:
+            time.sleep(delay)
+
+    def _recover(self, key: _GroupKey, cohort: list[Pending],
+                 exc: BaseException, *, retries: int | None = None) -> None:
+        """Retry a failed cohort, then bisect it down to the poison.
+
+        ``retries`` whole-cohort re-serves (exponential backoff + jitter)
+        absorb transient faults; a cohort that still fails is split in two
+        and each half re-served with zero retries — O(log B) extra serves
+        isolate a single poison request, which alone gets the exception.
+        Innocent members re-dispatch through the normal execution path, so
+        their results are bit-identical to an unfaulted run.  Total work is
+        bounded: retries + at most 2·B − 1 bisection serves.
+        """
+        retries = self.retry_limit if retries is None else retries
+        for attempt in range(1, retries + 1):
+            with self._lock:
+                cohort = [p for p in cohort if p.rid in self._futures]
+            if not cohort:
+                return
+            self._sleep_backoff(attempt)
+            with self._lock:
+                self._retries += 1
             try:
-                self._serve_group(key, trigger)
-            except BaseException as e:  # keep serving; fail what's in flight
+                self._serve_cohort(key, cohort)
+                return
+            except BaseException as e:
+                self._last_error = exc = e
+        with self._lock:
+            cohort = [p for p in cohort if p.rid in self._futures]
+        if not cohort:
+            return
+        if len(cohort) == 1:
+            pending = cohort[0]
+            with self._lock:
+                self._poisoned += 1
+                self._cv_fold_rids.discard(pending.rid)
+                fut = self._futures.pop(pending.rid, None)
+            if fut is not None and not fut.done():
+                fut.set_exception(exc)
+            return
+        with self._lock:
+            self._bisections += 1
+        mid = len(cohort) // 2
+        for half in (cohort[:mid], cohort[mid:]):
+            try:
+                self._serve_cohort(key, half)
+            except BaseException as e:
                 self._last_error = e
-                with self._lock:
-                    futs = list(self._futures.values())
-                    self._futures.clear()
-                    self._cv_fold_rids.clear()
-                for f in futs:
-                    if not f.done():
-                        f.set_exception(e)
+                self._recover(key, half, e, retries=0)
+
+    def _serve_cohort(self, key: _GroupKey, cohort: list[Pending]) -> None:
+        """Re-dispatch exactly ``cohort`` (no new queue pulls) through the
+        normal execution path — same programs, same padded operands, so a
+        successful re-serve is bit-identical to an unfaulted serve."""
+        if key.working_set is not None:
+            self._execute_batch(key, list(cohort), trigger="retry")
+        else:
+            self._run_continuous(key, "retry", cohort=list(cohort))
 
     def _serve_group(self, key: _GroupKey, trigger: str) -> None:
         if key.working_set is not None:
@@ -344,7 +460,8 @@ class AsyncPathService(PathService):
                 ProgramSpec(**base, variant="chunk",
                             step_chunk=self.step_chunk))
 
-    def _run_continuous(self, key: _GroupKey, trigger: str) -> None:
+    def _run_continuous(self, key: _GroupKey, trigger: str,
+                        cohort: list[Pending] | None = None) -> None:
         """Serve one masked group until it drains, recycling slots.
 
         Persistent padded operand buffers plus the scan carry round-trip
@@ -354,6 +471,10 @@ class AsyncPathService(PathService):
         and are seeded by the init program — run on the whole updated batch,
         scattered only into the inserted slots, so standing neighbours'
         state is untouched (bitwise).
+
+        ``cohort`` (retry/bisection re-dispatch) serves exactly those
+        pendings and never pulls from the queue — failure recovery must
+        not widen its own blast radius.
         """
         family = key.family
         m = family.n_classes
@@ -361,6 +482,8 @@ class AsyncPathService(PathService):
         C = self.step_chunk
         f = np.dtype(key.dtype)
         init_spec, chunk_spec = self._chunk_specs(key)
+        self._faults.fire("compile", rids=(
+            () if cohort is None else [p.rid for p in cohort]))
         init_prog, init_hit = self.cache.get(init_spec)
         chunk_prog, chunk_hit = self.cache.get(chunk_spec)
         first_hit = init_hit and chunk_hit
@@ -376,20 +499,35 @@ class AsyncPathService(PathService):
         grad = np.zeros((S, P, m), f)
         active = np.zeros((S, P), bool)
         Lc = np.ones((S,), f)
+        Hc = np.zeros((S,), np.int32)
         slots: list[_Slot | None] = [None] * S
+        # stable buffer handles for _finish_slot's lane blanking; the chunk
+        # outputs below are copied INTO these arrays (np.copyto), never
+        # rebound, so this dict cannot go stale
+        bufs = dict(Xs=Xs, ys=ys, lam=lam, p_valid=p_valid, beta=beta,
+                    grad=grad, active=active, Lc=Lc, Hc=Hc)
 
         plan_summary = chunk_spec.plan().summary()
         with self._lock:
             counter = {"fill": "_flush_fill", "deadline": "_flush_deadline",
-                       "forced": "_flush_forced"}[trigger]
+                       "forced": "_flush_forced", "retry": "_flush_retry"
+                       }[trigger]
             setattr(self, counter, getattr(self, counter) + 1)
             self._plans[plan_summary] = self._plans.get(plan_summary, 0) + 1
 
         rounds = 0
         while True:
-            # refill free slots from the queue (the slot-recycle seam)
+            # refill free slots from the queue (the slot-recycle seam), or —
+            # in cohort mode — from the re-dispatched pendings only
             free = [i for i in range(S) if slots[i] is None]
-            taken = self._batcher.take(key, limit=len(free)) if free else []
+            if cohort is not None:
+                taken = [cohort.pop(0)
+                         for _ in range(min(len(free), len(cohort)))]
+            else:
+                taken = (self._batcher.take(key, limit=len(free))
+                         if free else [])
+                if taken:
+                    self._note_taken(taken)
             occupied = S - len(free) + len(taken)
             inserted = []
             now = self._clock()
@@ -416,15 +554,23 @@ class AsyncPathService(PathService):
                     self._slot_recycles += len(inserted)
                 # prefill on the WHOLE updated batch, scatter only the new
                 # slots — standing neighbours keep their carried state
-                g0, nd0, L0 = (np.asarray(a) for a in init_prog(Xs, ys))
+                g0, nd0, L0, h0 = (np.asarray(a)
+                                   for a in init_prog(Xs, ys))
                 for i in inserted:
                     beta[i] = 0.0
                     grad[i] = g0[i]
                     active[i] = False
                     Lc[i] = L0[i]
+                    Hc[i] = h0[i]
+                    slots[i].health0 = int(h0[i])
                     slots[i].null_dev = slots[i].prev_dev = float(nd0[i])
                     if L < 2:  # degenerate grid: null model only
-                        self._finish_slot(i, slots, p_valid, key)
+                        self._finish_slot(i, slots, key, bufs)
+                    elif slots[i].health0:
+                        # sick at init (quarantine-mode admission): every
+                        # remaining step would be a quarantined no-op —
+                        # deliver the flagged null head now, free the slot
+                        self._finish_slot(i, slots, key, bufs)
             if all(s is None for s in slots):
                 break
 
@@ -448,21 +594,26 @@ class AsyncPathService(PathService):
                         live[i, c] = False
 
             t0 = self._clock()
-            (nb, ng, na, nL), ep = chunk_prog(
+            self._faults.fire("worker", rids=[
+                s.pending.rid for s in slots if s is not None])
+            (nb, ng, na, nL, nH), ep = chunk_prog(
                 Xs, ys, lam, sig_prev, sig_next, live, beta, grad, active,
-                Lc, p_valid)
-            # np.array (copy): device outputs view as read-only, but the
-            # carry buffers are scattered into at the next insertion
-            beta = np.array(nb)
-            grad = np.array(ng)
-            active = np.array(na)
-            Lc = np.array(nL)
+                Lc, Hc, p_valid)
+            # copy INTO the persistent buffers (device outputs view as
+            # read-only, and the next insertion scatters into them; copyto
+            # keeps the bufs handles above valid)
+            np.copyto(beta, nb)
+            np.copyto(grad, ng)
+            np.copyto(active, na)
+            np.copyto(Lc, nL)
+            np.copyto(Hc, nH)
             eb = np.asarray(ep.betas)
             edev = np.asarray(ep.deviance)
             scalars = [np.asarray(a) for a in
                        (ep.n_active, ep.n_screened, ep.n_violations,
                         ep.refits, ep.solver_iters)]
             eunrep = np.asarray(ep.kkt_unrepaired)
+            ehlth = np.asarray(ep.health)
             wall = self._clock() - t0
             rounds += 1
             n_live = sum(s is not None for s in slots)
@@ -480,10 +631,18 @@ class AsyncPathService(PathService):
                 for c in range(s.take):
                     b = np.array(eb[i, c, :s.p, :])
                     dev = float(edev[i, c])
+                    hw = int(ehlth[i, c])
                     s.steps.append((
                         b, *(int(a[i, c]) for a in scalars), dev,
-                        bool(eunrep[i, c])))
+                        bool(eunrep[i, c]), hw))
                     s.cursor += 1
+                    if hw:
+                        # quarantined in-graph: the remaining grid would be
+                        # no-op placeholder steps (and the NaN-blind stop
+                        # predicate below can never fire) — truncate here,
+                        # the response carries the sticky health word
+                        s.finished = True
+                        break
                     # the SAME predicate the sync path applies post-hoc —
                     # it reads only the prefix, so stopping at a chunk
                     # boundary truncates exactly where path_result() would
@@ -493,10 +652,10 @@ class AsyncPathService(PathService):
                         break
                     s.prev_dev = dev
                 if s.finished or s.cursor >= L:
-                    self._finish_slot(i, slots, p_valid, key)
+                    self._finish_slot(i, slots, key, bufs)
 
-    def _finish_slot(self, i: int, slots: list, p_valid: np.ndarray,
-                     key: _GroupKey) -> None:
+    def _finish_slot(self, i: int, slots: list, key: _GroupKey,
+                     bufs: dict) -> None:
         """Assemble the slot's response (null head + harvested steps at
         native shape), deliver its future, and free the slot."""
         s = slots[i]
@@ -511,10 +670,12 @@ class AsyncPathService(PathService):
         iters = np.zeros((k,), np.int32)
         dev = np.zeros((k,), f)
         unrep = np.zeros((k,), bool)
+        hlth = np.zeros((k,), np.int32)
         dev[0] = s.null_dev
+        hlth[0] = s.health0
         for j, st in enumerate(s.steps, start=1):
             (betas[j], n_act[j], n_scr[j], viol[j], refits[j], iters[j],
-             dev[j], unrep[j]) = st
+             dev[j], unrep[j], hlth[j]) = st
         out_betas = betas[:, :, 0] if m == 1 else betas
         item = s.pending.item
         pad_ratio = (key.n_rows * key.n_cols) / (s.n * s.p)
@@ -529,12 +690,21 @@ class AsyncPathService(PathService):
             queue_s=max(0.0, s.inserted - s.pending.submitted),
             solve_s=s.solve_s, batch_size=s.batch_size,
             batch_occupancy=s.batch_size / self.slots,
-            padding_ratio=pad_ratio, cache_hit=s.cache_hit)
+            padding_ratio=pad_ratio, cache_hit=s.cache_hit, health=hlth)
         with self._lock:
             self._padding_ratios.append(pad_ratio)
             self._deliver(s.pending.rid, resp)
         slots[i] = None
-        p_valid[i] = 0
+        # blank the freed lane EVERYWHERE — operands AND carry: dead lanes
+        # still execute in the vmapped chunk program (live=False only gates
+        # the results), so a stale non-finite operand or carry (a
+        # quarantined member leaves a NaN grad) would spin its lockstep
+        # FISTA to max_iter on every remaining chunk.  All-zero lanes
+        # converge in one iteration.
+        for name in ("Xs", "ys", "lam", "p_valid", "beta", "grad", "Hc"):
+            bufs[name][i] = 0
+        bufs["active"][i] = False
+        bufs["Lc"][i] = 1.0
 
     # -- warmup & telemetry -------------------------------------------------
 
@@ -572,12 +742,15 @@ class AsyncPathService(PathService):
         out = super().stats()
         with self._lock:
             out.update(
-                rejected=self._rejected,
                 slot_recycles=self._slot_recycles,
                 chunk_batches=self._chunk_batches,
                 step_chunk=self.step_chunk,
-                max_queue=self._batcher.max_queue,
                 inflight=len(self._futures),
+                retries=self._retries,
+                bisections=self._bisections,
+                poisoned=self._poisoned,
+                retry_limit=self.retry_limit,
+                retry_backoff=self.retry_backoff,
                 worker_alive=bool(self._worker is not None
                                   and self._worker.is_alive()),
             )

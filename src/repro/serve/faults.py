@@ -1,0 +1,171 @@
+"""Deterministic fault injection for the serve layer.
+
+The chaos-testing contract of PR 7: every recovery path the dispatcher
+claims to have (cohort-scoped failure, retry with backoff, bisection down
+to the poison request, close-mid-fault drain) must be *provable* under an
+injected fault, not just plausible from reading the code.  A
+:class:`FaultPlan` is a list of :class:`FaultSpec` triggers armed at named
+**sites** inside the services:
+
+========  ==============================================================
+site      fires
+========  ==============================================================
+admit     during ``submit``, per request — ``kind="nan"`` corrupts the
+          request's design matrix (the poison-request injector)
+compile   in the worker, before the program-cache lookup for a batch
+worker    in the worker, after compile / before the compiled call —
+          per execution round, with the in-flight rids attached
+========  ==============================================================
+
+Triggers are deterministic: a spec fires on occurrences ``after <= k <
+after + times`` of its site (counted per spec), optionally gated on a
+specific request id — so a test can say "the 2nd worker call crashes" or
+"request 17's X gains a NaN" and replay it exactly.  ``kind``:
+
+- ``"error"`` — raise :class:`InjectedFault` (worker crash / compile
+  failure; transient when ``times`` is finite, persistent when large)
+- ``"nan"``   — return a corrupted copy of the array at an ``admit`` site
+  (seeded positions, so the poisoned operand is reproducible)
+- ``"delay"`` — sleep ``delay_s`` (deadline overruns, slow workers)
+
+Services hold a plan (default :data:`NO_FAULTS`, inert) and call
+:meth:`FaultPlan.fire` / :meth:`FaultPlan.corrupt` at the sites above;
+every firing is appended to :attr:`FaultPlan.events` for assertions.
+Production code never constructs a plan — the hook costs one falsy check
+per site when inert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+__all__ = ["FaultSpec", "FaultPlan", "InjectedFault", "NO_FAULTS"]
+
+_KINDS = ("error", "nan", "delay")
+
+
+class InjectedFault(RuntimeError):
+    """The synthetic failure raised by ``kind="error"`` fault specs."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One armed trigger: *what* goes wrong, *where*, and *when*.
+
+    ``times``/``after`` window the firing on the site's occurrence count
+    (per spec): occurrences ``[after, after + times)`` fire.  ``rid``
+    (optional) gates on a specific request id — at ``admit`` the request
+    being admitted, at worker sites any in-flight rid.
+    """
+
+    site: str
+    kind: str = "error"
+    times: int = 1
+    after: int = 0
+    rid: int | None = None
+    delay_s: float = 0.0
+    message: str = "injected fault"
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, got {self.kind!r}")
+        if self.times < 1:
+            raise ValueError(f"times must be ≥ 1, got {self.times}")
+        if self.after < 0:
+            raise ValueError(f"after must be ≥ 0, got {self.after}")
+
+
+class FaultPlan:
+    """A deterministic schedule of injected faults, shared by one service.
+
+    Thread-safe: the dispatcher's worker thread and submitting threads
+    both hit the counters.
+    """
+
+    def __init__(self, specs: tuple[FaultSpec, ...] | list[FaultSpec] = (),
+                 *, seed: int = 0):
+        self.specs = tuple(specs)
+        self.seed = int(seed)
+        self.events: list[tuple[str, str, int | None]] = []  # (site, kind, rid)
+        self._counts = [0] * len(self.specs)
+        self._lock = threading.Lock()
+
+    def active(self) -> bool:
+        return bool(self.specs)
+
+    def _match(self, spec: FaultSpec, i: int, site: str,
+               rids: tuple[int, ...]) -> bool:
+        # caller holds the lock; counts advance only for matching sites so
+        # "the 2nd worker call" means the 2nd call AT that site
+        if spec.site != site:
+            return False
+        if spec.rid is not None and spec.rid not in rids:
+            return False
+        k = self._counts[i]
+        self._counts[i] = k + 1
+        return spec.after <= k < spec.after + spec.times
+
+    def fire(self, site: str, *, rids: tuple[int, ...] | list[int] = ()) -> None:
+        """Trip any armed ``error``/``delay`` spec at ``site``.
+
+        ``rids`` are the request ids implicated by this execution (used
+        both for rid-gated specs and for the event log).  Raises
+        :class:`InjectedFault` for ``error`` kinds.
+        """
+        if not self.specs:
+            return
+        rids = tuple(int(r) for r in rids)
+        delay, err = 0.0, None
+        with self._lock:
+            for i, spec in enumerate(self.specs):
+                if spec.kind == "nan" or not self._match(spec, i, site, rids):
+                    continue
+                self.events.append((site, spec.kind, spec.rid))
+                if spec.kind == "delay":
+                    delay = max(delay, spec.delay_s)
+                elif err is None:
+                    err = InjectedFault(f"{spec.message} [site={site}]")
+        if delay:
+            time.sleep(delay)
+        if err is not None:
+            raise err
+
+    def corrupt(self, site: str, rid: int, x: np.ndarray) -> np.ndarray:
+        """Return ``x`` poisoned per any matching ``nan`` spec (or ``x``
+        itself, untouched, when none fires)."""
+        if not self.specs:
+            return x
+        fire = False
+        with self._lock:
+            for i, spec in enumerate(self.specs):
+                if spec.kind != "nan":
+                    continue
+                if self._match(spec, i, site, (int(rid),)):
+                    self.events.append((site, "nan", int(rid)))
+                    fire = True
+        if not fire:
+            return x
+        bad = np.array(x, dtype=float, copy=True)
+        # seeded poison positions — the corrupted operand is replayable
+        rng = np.random.default_rng(self.seed + int(rid))
+        flat = bad.reshape(-1)
+        k = max(1, flat.size // 16)
+        flat[rng.choice(flat.size, size=k, replace=False)] = np.nan
+        return bad
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "armed": len(self.specs),
+                "fired": len(self.events),
+                "by_site": {s: sum(1 for e in self.events if e[0] == s)
+                            for s in {e[0] for e in self.events}},
+            }
+
+
+NO_FAULTS = FaultPlan()
+"""The inert plan every service defaults to (``active()`` is False)."""

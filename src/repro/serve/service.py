@@ -55,8 +55,10 @@ from ..api.specs import (
     PathSpec,
     Problem,
     SolverPolicy,
+    ValidationError,
     apply_weights,
     as_lambda_spec,
+    find_nonfinite,
     shared_canonicalizer,
 )
 from ..core.engine import (
@@ -74,9 +76,16 @@ from ..core.engine import (
 )
 from ..core.solver import DEFAULT_WS_TIERS
 from ..core.losses import Family, ols
-from .batcher import LambdaCanonicalizer, MicroBatcher
+from .batcher import (
+    LambdaCanonicalizer,
+    MicroBatcher,
+    QueueFull,
+    Rejection,
+    RejectionError,
+)
 from .buckets import ShapeBucketPolicy, default_policy, pad_batch
 from .cache import ProgramCache, ProgramSpec
+from .faults import FaultPlan, NO_FAULTS
 
 __all__ = ["PathService", "PathResponse", "CvResponse"]
 
@@ -142,10 +151,26 @@ class PathResponse:
     batch_occupancy: float       # real requests / executed slots
     padding_ratio: float         # padded n·p over native n·p
     cache_hit: bool              # compiled program was already resident
+    health: np.ndarray | None = None  # (L,) int32 per-step health word
+    #   (sticky; see repro.core.engine.PathHealth — None on pre-PR-7 paths)
 
     @property
     def total_violations(self) -> int:
         return int(self.n_violations.sum())
+
+    @property
+    def quarantined(self) -> bool:
+        """True when the engine quarantined this member in-graph (the
+        coefficients past the first sick step are zeroed placeholders)."""
+        return self.health is not None and bool(np.asarray(self.health)[-1])
+
+    @property
+    def health_causes(self) -> tuple[str, ...]:
+        from ..core.engine import health_causes
+
+        if self.health is None:
+            return ()
+        return health_causes(int(np.asarray(self.health)[-1]))
 
     def path_result(self, *, early_stop: bool = True):
         """The same :class:`repro.core.path.PathResult` contract
@@ -160,6 +185,8 @@ class PathResponse:
             n_violations=self.n_violations, refits=self.refits,
             solver_iters=self.solver_iters, deviance=self.deviance,
             kkt_unrepaired=self.kkt_unrepaired,
+            health=(self.health if self.health is not None
+                    else np.zeros(len(self.sigmas), np.int32)),
         )
         return engine_to_path_result(ep, self.sigmas, self.lam, self.solve_s,
                                      early_stop=early_stop, n=self.n_samples)
@@ -206,10 +233,12 @@ class PathService:
     """
 
     def __init__(self, *, max_batch: int = 8, max_delay: float = 0.02,
+                 max_queue: int | None = None,
                  policy: ShapeBucketPolicy | None = None,
                  cache: ProgramCache | None = None,
                  canonicalizer: LambdaCanonicalizer | None = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 faults: FaultPlan | None = None):
         # explicit None checks: the cache and canonicalizer define __len__,
         # so a freshly shared (still empty) instance is falsy.  The default
         # canonicalizer is the process-wide one repro.api.LambdaSpec
@@ -220,8 +249,11 @@ class PathService:
         self.canonicalizer = (canonicalizer if canonicalizer is not None
                               else shared_canonicalizer())
         self.slots = self.policy.batch_bucket(max_batch)
-        self._batcher = MicroBatcher(max_batch=max_batch, max_delay=max_delay)
+        self._batcher = MicroBatcher(max_batch=max_batch, max_delay=max_delay,
+                                     max_queue=max_queue)
         self._clock = clock
+        # fault injection (tests/chaos benches only; inert by default)
+        self._faults = faults if faults is not None else NO_FAULTS
         self._lock = threading.RLock()
         self._next_rid = 0
         # finished-but-unclaimed responses are bounded: clients that never
@@ -239,6 +271,12 @@ class PathService:
         self._flush_fill = 0
         self._flush_deadline = 0
         self._flush_forced = 0
+        self._flush_retry = 0
+        self._rejected = 0             # admission rejections (queue capacity)
+        self._validation_rejected = 0  # strict-mode non-finite rejections
+        # the paper's "simple check of the optimality conditions", made
+        # observable: strong-rule violations caught by the KKT repair loop
+        self._kkt_violations = 0
         # executed ExecutionPlan summaries → batch counts (planner/program
         # decisions, surfaced through stats() and the serve BENCH rows)
         self._plans: dict[str, int] = {}
@@ -268,6 +306,7 @@ class PathService:
                cv_folds: int | None = None, stratify="auto",
                selection: str = "min",
                deadline_ms: float | None = None, priority: int = 0,
+               validate: str = "strict",
                _cv_fold: bool = False,
                problem: Problem | None = None,
                path: PathSpec | None = None,
@@ -330,6 +369,18 @@ class PathService:
         if ws_tiers not in ("auto", 1, 2) or isinstance(ws_tiers, bool):
             raise ValueError(
                 f"ws_tiers must be 'auto', 1 or 2, got {ws_tiers!r}")
+        if validate not in ("strict", "quarantine", "off"):
+            raise ValueError(f"validate must be 'strict', 'quarantine' or "
+                             f"'off', got {validate!r}")
+        if validate != "off":
+            issues = find_nonfinite(X=X, y=y, lam=lam, sigmas=sigmas)
+            if issues and validate == "strict":
+                # reject host-side before any padding/compile/device work;
+                # "quarantine" admits instead and the engine's in-graph
+                # health word flags the member (PathResponse.health)
+                with self._lock:
+                    self._validation_rejected += 1
+                raise ValidationError(issues)
         # canonical tier knob for the group key: the knob is irrelevant to
         # masked programs, "auto" IS 2 under the shared recipe, and an
         # explicit W whose 2W would span the bucket degenerates to single
@@ -348,7 +399,7 @@ class PathService:
                 solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
                 max_refits=max_refits, working_set=working_set,
                 ws_tiers=ws_tiers, deadline_ms=deadline_ms,
-                priority=priority)
+                priority=priority, validate=validate)
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -388,7 +439,11 @@ class PathService:
                deadline_ms: float | None = None, priority: int = 0,
                _cv_fold: bool = False) -> int:
         """Queue one canonicalized request; the async subclass overrides
-        this to return a future and to reject-with-status at capacity."""
+        this to return a future and to reject-with-status at capacity.
+
+        At queue capacity raises :class:`RejectionError` — a
+        :class:`QueueFull` subclass carrying the structured
+        :class:`Rejection` (``err.rejection``)."""
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
@@ -398,12 +453,32 @@ class PathService:
                 # group (fill, or a deadline on a neighbour) synchronously,
                 # and the flush routes responses by this membership
                 self._cv_fold_rids.add(rid)
+            item = self._maybe_corrupt(rid, item)
             now = self._clock()
-            if self._batcher.admit(key, rid, item, now, priority=priority,
-                                   deadline=self._flush_by(now, deadline_ms)):
+            try:
+                filled = self._batcher.admit(
+                    key, rid, item, now, priority=priority,
+                    deadline=self._flush_by(now, deadline_ms))
+            except QueueFull as e:
+                self._rejected += 1
+                self._cv_fold_rids.discard(rid)
+                raise RejectionError(Rejection(
+                    rid=rid, reason=str(e), queued=self._batcher.pending(),
+                    max_queue=self._batcher.max_queue)) from None
+            if filled:
                 self._flush_group(key, trigger="fill")
             self._flush_due(now)
             return rid
+
+    def _maybe_corrupt(self, rid: int, item: _Item) -> _Item:
+        """Fault-injection "admit" site: a ``nan`` spec poisons this
+        request's design matrix (chaos tests only; inert in production)."""
+        if not self._faults.active():
+            return item
+        Xf = self._faults.corrupt("admit", rid, item.X)
+        if Xf is item.X:
+            return item
+        return dataclasses.replace(item, X=Xf)
 
     def _submit_spec(self, problem: Problem, path: PathSpec | None,
                      policy: SolverPolicy | None, *, plan=None,
@@ -449,13 +524,14 @@ class PathService:
             ws_tiers=policy.ws_tiers,
             cv_folds=path.cv_folds, stratify=path.stratify,
             selection=path.selection, deadline_ms=policy.deadline_ms,
-            priority=policy.priority, _cv_fold=_cv_fold)
+            priority=policy.priority, validate=policy.validate,
+            _cv_fold=_cv_fold)
 
     def _submit_cv(self, X, y, lam, family, *, n_folds, stratify, selection,
                    sigmas, path_length, sigma_ratio, screening, solver_tol,
                    max_iter, kkt_tol, max_refits, working_set,
                    ws_tiers=DEFAULT_WS_TIERS, deadline_ms=None,
-                   priority=0) -> int:
+                   priority=0, validate="strict") -> int:
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -471,7 +547,7 @@ class PathService:
                         max_iter=max_iter, kkt_tol=kkt_tol,
                         max_refits=max_refits, working_set=working_set,
                         ws_tiers=ws_tiers, deadline_ms=deadline_ms,
-                        priority=priority, _cv_fold=True)
+                        priority=priority, validate=validate, _cv_fold=True)
             for tr in trains
         ]
         with self._lock:
@@ -502,6 +578,23 @@ class PathService:
         batch = self._batcher.take(key)
         if not batch:
             return False
+        self._note_taken(batch)
+        self._execute_batch(key, batch, trigger=trigger)
+        return True
+
+    def _note_taken(self, batch) -> None:
+        """In-flight cohort hook: the async subclass records the requests a
+        serve implicates, so a worker failure is scoped to exactly that
+        cohort.  Base (synchronous) service: no-op — exceptions propagate
+        to the submitting caller directly."""
+
+    def _execute_batch(self, key: _GroupKey, batch, *, trigger: str) -> None:
+        """Pad, compile-or-fetch, execute and deliver one taken batch.
+
+        Also the retry/bisection re-dispatch path: serving the same
+        pendings through here is bit-identical to the original serve (same
+        program, same padded operands, slot assignment by batch order).
+        """
         now = self._clock()
         family = key.family
         m = family.n_classes
@@ -525,8 +618,11 @@ class PathService:
         pb = pad_batch([(it.item.X, it.item.y, it.item.lam, it.item.sigmas)
                         for it in batch],
                        n_rows=N, n_cols=P, n_slots=self.slots, n_classes=m)
+        rids = [p.rid for p in batch]
+        self._faults.fire("compile", rids=rids)
         prog, hit = self.cache.get(spec)
         t0 = self._clock()
+        self._faults.fire("worker", rids=rids)
         out = prog(pb.Xs, pb.ys, pb.lam, pb.sigmas, pb.p_valid)
         stats = None
         if W is not None:
@@ -549,7 +645,8 @@ class PathService:
             self._plans[plan_summary] = self._plans.get(plan_summary, 0) + 1
             self._occupancies.append(occupancy)
             counter = {"fill": "_flush_fill", "deadline": "_flush_deadline",
-                       "forced": "_flush_forced"}[trigger]
+                       "forced": "_flush_forced", "retry": "_flush_retry"
+                       }[trigger]
             setattr(self, counter, getattr(self, counter) + 1)
             for i, pending in enumerate(batch):
                 item = pending.item
@@ -574,10 +671,10 @@ class PathService:
                                       else stats.fell_back[i]),
                     queue_s=max(0.0, now - pending.submitted), solve_s=wall,
                     batch_size=B_real, batch_occupancy=occupancy,
-                    padding_ratio=pad_ratio, cache_hit=hit)
+                    padding_ratio=pad_ratio, cache_hit=hit,
+                    health=ep.health[i])
                 self._padding_ratios.append(pad_ratio)
                 self._deliver(pending.rid, resp)
-        return True
 
     def _record_latency(self, rid: int, resp: PathResponse) -> None:
         """Queue+solve latency, routed to the user-facing or the internal
@@ -593,6 +690,7 @@ class PathService:
         the async subclass overrides this to resolve the request's future).
         Caller holds ``self._lock``."""
         self._completed += 1
+        self._kkt_violations += int(resp.n_violations.sum())
         self._record_latency(rid, resp)
         if rid in self._cv_fold_rids:
             self._store(self._cv_hold, rid, resp)
@@ -689,6 +787,13 @@ class PathService:
                 "flush_fill": self._flush_fill,
                 "flush_deadline": self._flush_deadline,
                 "flush_forced": self._flush_forced,
+                "flush_retry": self._flush_retry,
+                "rejected": self._rejected,
+                "validation_rejected": self._validation_rejected,
+                "kkt_violations": self._kkt_violations,
+                "max_queue": self._batcher.max_queue,
+                "faults": self._faults.stats() if self._faults.active()
+                          else None,
                 "slots": self.slots,
                 "occupancy_mean": float(occ.mean()) if occ.size else 0.0,
                 "padding_ratio_mean": float(pads.mean()) if pads.size else 0.0,

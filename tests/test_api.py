@@ -63,6 +63,7 @@ EXPECTED_ALL = {
     "Problem", "LambdaSpec", "PathSpec", "SolverPolicy", "ExecutionPlan",
     "plan_execution", "slope_path", "SlopE", "as_lambda_spec",
     "default_service", "default_async_service", "shared_canonicalizer",
+    "ValidationError", "find_nonfinite",
 }
 
 EXPECTED_FIELDS = {
@@ -72,7 +73,7 @@ EXPECTED_FIELDS = {
                "cv_folds", "stratify", "selection"],
     SolverPolicy: ["backend", "working_set", "ws_tiers", "pad", "screening",
                    "solver_tol", "max_iter", "kkt_tol", "max_refits",
-                   "verbose", "deadline_ms", "priority"],
+                   "verbose", "deadline_ms", "priority", "validate"],
     ExecutionPlan: ["backend", "mode", "batch", "n", "p", "working_set",
                     "ws_tiers", "pad", "exec_shape", "screening", "device",
                     "reasons"],

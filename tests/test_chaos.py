@@ -1,0 +1,290 @@
+"""Chaos suite: fault injection against the serving stack (ISSUE 7).
+
+Every recovery path is exercised under a deterministic
+:class:`repro.serve.FaultPlan` (fixed spec windows, seeded corruption —
+replayable in CI):
+
+1. **Acceptance scenario.**  One poison request in a cohort of 8: exactly
+   that future gets the exception; the other 7 complete and are
+   **bit-identical** (maxdiff == 0) to an unfaulted run of the same 8
+   problems.
+2. **Transient faults** are absorbed by retry-with-backoff: every request
+   completes, no exception escapes, telemetry counts the retries.
+3. **Cohort scoping**: a failing serve never touches futures outside its
+   cohort.
+4. **Close-mid-fault**: a fault raised during the close-time drain fails
+   the undelivered futures instead of leaving them pending forever.
+5. **Sync rejection unification**: bounded sync queues raise
+   ``RejectionError`` — a ``QueueFull`` subclass carrying the structured
+   ``Rejection``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ols
+from repro.serve import (
+    AsyncPathService,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    PathService,
+    ProgramCache,
+    QueueFull,
+    Rejection,
+    RejectionError,
+)
+
+L = 6
+KW = dict(path_length=L, solver_tol=1e-10, max_iter=20000)
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    return ProgramCache(capacity=16)
+
+
+def _problem(n, p, seed=0, k=4):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, p))
+    beta = np.zeros(p)
+    beta[:k] = rng.normal(size=k) * 2.0
+    y = X @ beta + 0.1 * rng.normal(size=n)
+    return X, y
+
+
+PROBLEMS = [_problem(18 + 2 * i, 22 + i, seed=40 + i) for i in range(8)]
+
+
+def _asvc(shared_cache, *, faults=None, **kw):
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_delay", 0.005)
+    kw.setdefault("step_chunk", 3)
+    kw.setdefault("retry_backoff", 0.001)
+    return AsyncPathService(cache=shared_cache, faults=faults, **kw)
+
+
+def _serve_all(svc, problems):
+    futs = [svc.submit(X, y, family=ols, **KW) for X, y in problems]
+    return futs
+
+
+def _reference(shared_cache):
+    """The unfaulted run every chaos scenario is compared against."""
+    svc = _asvc(shared_cache)
+    try:
+        futs = _serve_all(svc, PROBLEMS)
+        return [f.result(timeout=180) for f in futs]
+    finally:
+        svc.close()
+
+
+@pytest.fixture(scope="module")
+def reference(shared_cache):
+    resps = _reference(shared_cache)
+    assert not any(isinstance(r, Rejection) for r in resps)
+    return resps
+
+
+# ---------------------------------------------------------------------------
+# 1. the acceptance scenario: poison one of 8, innocents bitwise-identical
+# ---------------------------------------------------------------------------
+
+def test_poison_request_isolated_cohort_of_8(shared_cache, reference):
+    poison = 3
+    # the fault keys on the poison request's rid: every serve whose
+    # in-flight cohort contains it crashes, so retries fail and bisection
+    # must walk the cohort down to the single poisoned request
+    plan = FaultPlan([FaultSpec(site="worker", kind="error", rid=poison,
+                                times=10_000, message="poisoned request")])
+    svc = _asvc(shared_cache, faults=plan, retry_limit=1)
+    try:
+        futs = _serve_all(svc, PROBLEMS)
+        assert futs[poison].rid == poison
+        with pytest.raises(InjectedFault):
+            futs[poison].result(timeout=180)
+        got = [f.result(timeout=180) for i, f in enumerate(futs)
+               if i != poison]
+        stats = svc.stats()
+    finally:
+        svc.close()
+    # exactly one request failed; 7/8 availability
+    assert stats["poisoned"] == 1
+    assert stats["retries"] >= 1
+    assert stats["bisections"] >= 1
+    assert stats["completed"] == 7
+    # innocents: maxdiff == 0 against the unfaulted run
+    want = [r for i, r in enumerate(reference) if i != poison]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.betas, w.betas)
+        np.testing.assert_array_equal(g.deviance, w.deviance)
+        np.testing.assert_array_equal(g.sigmas, w.sigmas)
+
+
+# ---------------------------------------------------------------------------
+# 2. transient faults are absorbed by retry + backoff
+# ---------------------------------------------------------------------------
+
+def test_transient_worker_fault_retried(shared_cache, reference):
+    plan = FaultPlan([FaultSpec(site="worker", kind="error", times=1)])
+    svc = _asvc(shared_cache, faults=plan, retry_limit=2)
+    try:
+        futs = _serve_all(svc, PROBLEMS)
+        got = [f.result(timeout=180) for f in futs]
+        stats = svc.stats()
+    finally:
+        svc.close()
+    assert not any(isinstance(r, Rejection) for r in got)
+    assert stats["poisoned"] == 0
+    assert stats["retries"] >= 1
+    assert plan.stats()["fired"] == 1
+    for g, w in zip(got, reference):
+        np.testing.assert_array_equal(g.betas, w.betas)
+
+
+def test_transient_compile_fault_retried(shared_cache, reference):
+    plan = FaultPlan([FaultSpec(site="compile", kind="error", times=1)])
+    svc = _asvc(shared_cache, faults=plan, retry_limit=2)
+    try:
+        futs = _serve_all(svc, PROBLEMS)
+        got = [f.result(timeout=180) for f in futs]
+        stats = svc.stats()
+    finally:
+        svc.close()
+    assert stats["poisoned"] == 0
+    for g, w in zip(got, reference):
+        np.testing.assert_array_equal(g.betas, w.betas)
+
+
+# ---------------------------------------------------------------------------
+# 3. failure stays cohort-scoped: delivered neighbours are untouched
+# ---------------------------------------------------------------------------
+
+def test_failure_does_not_touch_other_futures(shared_cache):
+    # first serve (requests 0..7) is clean; a later poisoned request must
+    # not disturb anything already delivered or queued outside its cohort
+    plan = FaultPlan([FaultSpec(site="worker", kind="error", rid=8,
+                                times=10_000)])
+    svc = _asvc(shared_cache, faults=plan, retry_limit=0)
+    try:
+        futs = _serve_all(svc, PROBLEMS)
+        first = [f.result(timeout=180) for f in futs]
+        assert not any(isinstance(r, Rejection) for r in first)
+        bad = svc.submit(*PROBLEMS[0], family=ols, **KW)
+        assert bad.rid == 8
+        with pytest.raises(InjectedFault):
+            bad.result(timeout=180)
+        after = svc.submit(*PROBLEMS[1], family=ols, **KW)
+        ok = after.result(timeout=180)
+        stats = svc.stats()
+    finally:
+        svc.close()
+    assert not isinstance(ok, Rejection)
+    np.testing.assert_array_equal(ok.betas, first[1].betas)
+    assert stats["poisoned"] == 1
+    assert stats["worker_alive"]  # the dispatcher survived every fault
+
+
+# ---------------------------------------------------------------------------
+# 4. close() mid-fault: no future is left permanently pending
+# ---------------------------------------------------------------------------
+
+def test_close_mid_fault_resolves_all_futures(shared_cache):
+    plan = FaultPlan([FaultSpec(site="compile", kind="error",
+                                times=10_000)])
+    svc = _asvc(shared_cache, faults=plan, autostart=False, retry_limit=0)
+    futs = _serve_all(svc, PROBLEMS[:3])
+    svc.close(flush=True)  # the drain hits the persistent fault
+    for f in futs:
+        assert f.done()
+        with pytest.raises((InjectedFault, RuntimeError)):
+            f.result(timeout=0)
+    assert svc.stats()["inflight"] == 0
+
+
+def test_close_clean_leaves_nothing_pending(shared_cache):
+    svc = _asvc(shared_cache, autostart=False)
+    futs = _serve_all(svc, PROBLEMS[:2])
+    svc.close(flush=True)
+    for f in futs:
+        resp = f.result(timeout=0)
+        assert not isinstance(resp, Rejection)
+    assert svc.stats()["inflight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 5. sync rejection unification + async Rejection parity
+# ---------------------------------------------------------------------------
+
+def test_sync_bounded_queue_raises_rejection_error(shared_cache):
+    svc = PathService(cache=shared_cache, max_batch=8, max_delay=60.0,
+                      max_queue=1)
+    X, y = PROBLEMS[0]
+    svc.submit(X, y, family=ols, **KW)
+    with pytest.raises(QueueFull) as ei:  # deprecated alias still catches
+        svc.submit(X, y, family=ols, **KW)
+    err = ei.value
+    assert isinstance(err, RejectionError)
+    rej = err.rejection
+    assert isinstance(rej, Rejection)
+    assert rej.max_queue == 1 and rej.queued == 1 and rej.rid == 1
+    assert svc.stats()["rejected"] == 1
+
+
+def test_sync_unbounded_queue_never_rejects(shared_cache):
+    svc = PathService(cache=shared_cache, max_batch=8, max_delay=60.0)
+    X, y = PROBLEMS[0]
+    for _ in range(4):
+        svc.submit(X, y, family=ols, **KW)
+    assert svc.stats()["rejected"] == 0
+
+
+def test_nan_injection_at_admit_quarantines_not_crashes(shared_cache):
+    # kind="nan" is the poison-request injector: the request is admitted
+    # with a corrupted X and must come back as a FLAGGED response (in-graph
+    # quarantine) while its cohort completes normally
+    plan = FaultPlan([FaultSpec(site="admit", kind="nan", rid=2)], seed=3)
+    svc = _asvc(shared_cache, faults=plan)
+    try:
+        futs = _serve_all(svc, PROBLEMS)
+        got = [f.result(timeout=180) for f in futs]
+        stats = svc.stats()
+    finally:
+        svc.close()
+    assert got[2].quarantined
+    assert not any(r.quarantined for i, r in enumerate(got) if i != 2)
+    assert stats["poisoned"] == 0  # a flagged result, not an exception
+    assert ("admit", "nan", 2) in plan.events
+
+
+# ---------------------------------------------------------------------------
+# 6. FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_windows_and_determinism():
+    plan = FaultPlan([FaultSpec(site="worker", times=2, after=1)])
+    plan.fire("worker")  # occurrence 0: before the window
+    for _ in range(2):   # occurrences 1, 2: inside
+        with pytest.raises(InjectedFault):
+            plan.fire("worker")
+    plan.fire("worker")  # occurrence 3: expired
+    plan.fire("compile")  # other sites don't advance this spec
+    assert plan.stats()["fired"] == 2
+
+    a = FaultPlan([FaultSpec(site="admit", kind="nan")], seed=9)
+    b = FaultPlan([FaultSpec(site="admit", kind="nan")], seed=9)
+    x = np.ones((6, 6))
+    xa, xb = a.corrupt("admit", 5, x), b.corrupt("admit", 5, x)
+    np.testing.assert_array_equal(xa, xb)  # seeded → replayable
+    assert np.isnan(xa).any() and not np.isnan(x).any()
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="worker", kind="nuke")
+    with pytest.raises(ValueError):
+        FaultSpec(site="worker", times=0)
+    plan = FaultPlan()
+    assert not plan.active()
+    plan.fire("worker")  # inert plan: no-op everywhere
+    assert plan.corrupt("admit", 0, np.ones(3)) is not None

@@ -1,0 +1,235 @@
+"""Non-finite propagation and in-graph quarantine (ISSUE 7 tentpole 1+3).
+
+The contracts under test:
+
+1. **In-graph quarantine.**  A NaN/Inf in one batch member's X, y or λ is
+   detected inside the scan, the member's health word goes sticky-nonzero,
+   its coefficients are zeroed placeholders, and — crucially — the batch
+   neither stalls (the poisoned solve is blanked, so FISTA's NaN-blind
+   stop criteria are never exercised on NaN data) nor contaminates: the
+   innocent members' arrays are **bit-identical** to the same batch with a
+   clean member in the sick slot (vmap lanes are independent; quarantine
+   must keep them so).
+2. **Admission validation.**  ``validate="strict"`` (the default) rejects
+   non-finite operands host-side with a structured
+   :class:`~repro.api.ValidationError` on every front door (``slope_path``
+   all backends, ``PathService.submit``); ``"quarantine"`` admits and the
+   response comes back flagged; ``"off"`` skips the host scan.
+3. **Serve parity.**  A quarantined request resolves as a *flagged
+   response*, not an exception, and a clean co-batched neighbour's betas
+   equal a solo serve of the same request at tolerance 0.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    LambdaSpec,
+    PathSpec,
+    Problem,
+    SolverPolicy,
+    ValidationError,
+    find_nonfinite,
+    slope_path,
+)
+from repro.core import bh_sequence, ols
+from repro.core.engine import (
+    HEALTH_NONFINITE_INPUT,
+    PathHealth,
+    health_causes,
+)
+from repro.serve import PathService, ProgramCache
+
+KW = dict(path_length=6, solver_tol=1e-10, max_iter=20000, kkt_tol=1e-4)
+
+
+def _problems(B=3, n=24, p=16, seed0=0):
+    rng = np.random.default_rng(seed0)
+    Xs = rng.normal(size=(B, n, p))
+    beta = np.zeros(p)
+    beta[:4] = 2.0
+    ys = Xs @ beta + 0.1 * rng.normal(size=(B, n))
+    return Xs, ys
+
+
+def _fit(Xs, ys, lam, *, backend, validate="quarantine", working_set=None):
+    return slope_path(
+        Problem(Xs, ys, family=ols),
+        PathSpec(lam=LambdaSpec.explicit(lam), path_length=KW["path_length"],
+                 early_stop=False),
+        SolverPolicy(backend=backend, working_set=working_set,
+                     validate=validate, solver_tol=KW["solver_tol"],
+                     max_iter=KW["max_iter"], kkt_tol=KW["kkt_tol"],
+                     pad=None))
+
+
+def _poison(arr, kind):
+    bad = np.array(arr, copy=True)
+    flat = bad.reshape(-1)
+    flat[3] = np.nan if kind == "nan" else np.inf
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# find_nonfinite / ValidationError / Problem.check_finite
+# ---------------------------------------------------------------------------
+
+def test_find_nonfinite_reports_name_count_index():
+    x = np.zeros((2, 3))
+    x[1, 1] = np.inf
+    issues = find_nonfinite(X=x, y=np.ones(3), skip=None)
+    assert issues == (("X", 1, 4),)
+    assert find_nonfinite(X=np.ones(4)) == ()
+
+
+def test_validation_error_is_structured_valueerror():
+    err = ValidationError((("X", 2, 7),))
+    assert isinstance(err, ValueError)
+    assert err.issues == (("X", 2, 7),)
+    assert "X" in str(err) and "quarantine" in str(err)
+
+
+def test_problem_check_finite():
+    Xs, ys = _problems(B=1)
+    Problem(Xs[0], ys[0]).check_finite()
+    with pytest.raises(ValidationError) as ei:
+        Problem(_poison(Xs[0], "nan"), ys[0]).check_finite()
+    assert ei.value.issues[0][0] == "X"
+
+
+# ---------------------------------------------------------------------------
+# strict rejection on every direct backend (host included)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["host", "masked"])
+def test_strict_rejects_nonfinite_direct(backend):
+    Xs, ys = _problems(B=1)
+    lam = np.asarray(bh_sequence(Xs.shape[-1], q=0.1))
+    X1, y1 = Xs[0], ys[0]
+    if backend == "masked":
+        X1, y1 = Xs, ys  # batched problem → the batched device engine
+    with pytest.raises(ValidationError):
+        _fit(_poison(X1, "nan"), y1, lam, backend=backend,
+             validate="strict")
+    with pytest.raises(ValidationError):
+        _fit(X1, _poison(y1, "inf"), lam, backend=backend,
+             validate="strict")
+    with pytest.raises(ValidationError):
+        _fit(X1, y1, _poison(lam, "nan"), backend=backend,
+             validate="strict")
+
+
+# ---------------------------------------------------------------------------
+# in-graph quarantine: masked and compact engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("working_set", [None, 8],
+                         ids=["masked", "compact"])
+@pytest.mark.parametrize("target", ["X", "y", "lam"])
+def test_quarantine_flags_sick_member_only(working_set, target):
+    Xs, ys = _problems()
+    lam = np.asarray(bh_sequence(Xs.shape[-1], q=0.1))
+    backend = "masked" if working_set is None else "compact"
+
+    clean = _fit(Xs, ys, lam, backend=backend, working_set=working_set)
+    assert clean.path_health is not None
+    assert not clean.path_health.quarantined.any()
+
+    Xb, yb, lamb = Xs, ys, lam
+    if target == "X":
+        Xb = Xs.copy()
+        Xb[1] = _poison(Xs[1], "nan")
+    elif target == "y":
+        yb = ys.copy()
+        yb[1] = _poison(ys[1], "nan")
+    else:
+        # λ is shared across the batch: poisoning it sickens EVERY member
+        lamb = _poison(lam, "nan")
+
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        res = _fit(Xb, yb, lamb, backend=backend, working_set=working_set)
+
+    ph = res.path_health
+    assert isinstance(ph, PathHealth)
+    if target == "lam":
+        assert ph.quarantined.all()
+        assert all(ph.causes(b) for b in range(3))
+        return
+    np.testing.assert_array_equal(ph.quarantined, [False, True, False])
+    assert ph.first_bad_step[1] >= 0
+    assert "nonfinite" in "".join(ph.causes(1))
+    # the sick member's path is a zeroed placeholder, finite throughout
+    assert np.isfinite(res.betas[1]).all()
+    assert (res.betas[1][ph.first_bad_step[1]:] == 0).all()
+    # innocents: bit-identical to the all-clean batch, slot for slot
+    for b in (0, 2):
+        np.testing.assert_array_equal(res.betas[b], clean.betas[b])
+        np.testing.assert_array_equal(res.deviance[b], clean.deviance[b])
+
+
+def test_health_causes_names():
+    assert health_causes(0) == ()
+    assert "nonfinite_input" in health_causes(HEALTH_NONFINITE_INPUT)
+    assert health_causes(7) == ("nonfinite_input", "nonfinite_state",
+                                "diverged")
+
+
+# ---------------------------------------------------------------------------
+# serve: strict rejects, quarantine flags, neighbours stay bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    return ProgramCache(capacity=8)
+
+
+def _svc(shared_cache, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_delay", 60.0)
+    return PathService(cache=shared_cache, **kw)
+
+
+def test_serve_strict_rejects(shared_cache):
+    Xs, ys = _problems(B=1)
+    svc = _svc(shared_cache)
+    with pytest.raises(ValidationError):
+        svc.submit(_poison(Xs[0], "nan"), ys[0], family=ols, **KW)
+    assert svc.stats()["validation_rejected"] == 1
+    assert svc.stats()["submitted"] == 0  # rejected before admission
+
+
+def test_serve_quarantine_flags_and_isolates(shared_cache):
+    Xs, ys = _problems(B=2, seed0=7)
+    svc = _svc(shared_cache)
+    # reference: the clean request served solo (same compiled program and
+    # padded slot count, so co-batching must reproduce it bitwise)
+    rid_solo = svc.submit(Xs[0], ys[0], family=ols, **KW)
+    solo = svc.poll(rid_solo, flush=True)
+
+    svc2 = _svc(shared_cache)
+    rid_ok = svc2.submit(Xs[0], ys[0], family=ols, **KW)
+    rid_bad = svc2.submit(_poison(Xs[1], "nan"), ys[1], family=ols,
+                          validate="quarantine", **KW)
+    ok = svc2.poll(rid_ok, flush=True)
+    bad = svc2.poll(rid_bad)
+
+    assert not ok.quarantined and ok.health_causes == ()
+    assert bad.quarantined
+    assert "nonfinite" in "".join(bad.health_causes)
+    assert np.isfinite(bad.betas).all()
+    # a sick neighbour changes NOTHING for the clean request
+    np.testing.assert_array_equal(ok.betas, solo.betas)
+    np.testing.assert_array_equal(ok.deviance, solo.deviance)
+    # path_result() round-trips the health word
+    pr = bad.path_result(early_stop=False)
+    assert pr is not None
+
+
+def test_serve_validate_off_skips_host_scan(shared_cache):
+    Xs, ys = _problems(B=1, seed0=11)
+    svc = _svc(shared_cache)
+    rid = svc.submit(_poison(Xs[0], "nan"), ys[0], family=ols,
+                     validate="off", **KW)
+    resp = svc.poll(rid, flush=True)
+    assert resp.quarantined  # the in-graph detector is always on
+    assert svc.stats()["validation_rejected"] == 0

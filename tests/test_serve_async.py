@@ -98,15 +98,17 @@ def test_chunk_engine_bitwise_equals_monolithic():
                                pb.p_valid, **ENG_KW)
     mono = EnginePath(*(np.asarray(a) for a in mono))
 
-    grad0, null_dev, L0 = (np.asarray(a)
-                           for a in path_init_engine(pb.Xs, pb.ys, ols))
+    grad0, null_dev, L0, h0 = (np.asarray(a)
+                               for a in path_init_engine(pb.Xs, pb.ys, ols))
     np.testing.assert_array_equal(null_dev, mono.deviance[:, 0])
+    np.testing.assert_array_equal(h0, 0)  # clean inputs: healthy at init
 
     B, P = 4, 32
     beta = np.zeros((B, P, 1))
     grad = grad0.copy()
     active = np.zeros((B, P), bool)
     Lc = L0.copy()
+    Hc = h0.copy()
     chunks = []
     cursor = 1
     while cursor < L:
@@ -118,11 +120,11 @@ def test_chunk_engine_bitwise_equals_monolithic():
             sp[:, c] = np.asarray(pb.sigmas)[:, cursor - 1 + c]
             sn[:, c] = np.asarray(pb.sigmas)[:, cursor + c]
             lv[:, c] = True
-        (beta, grad, active, Lc), ep = chunk_path_engine(
-            pb.Xs, pb.ys, pb.lam, sp, sn, lv, beta, grad, active, Lc, ols,
-            pb.p_valid, **ENG_KW)
-        beta, grad, active, Lc = (np.asarray(a)
-                                  for a in (beta, grad, active, Lc))
+        (beta, grad, active, Lc, Hc), ep = chunk_path_engine(
+            pb.Xs, pb.ys, pb.lam, sp, sn, lv, beta, grad, active, Lc, Hc,
+            ols, pb.p_valid, **ENG_KW)
+        beta, grad, active, Lc, Hc = (np.asarray(a)
+                                      for a in (beta, grad, active, Lc, Hc))
         chunks.append(EnginePath(*(np.asarray(a)[:, :take] for a in ep)))
         cursor += take
 
