@@ -86,3 +86,23 @@ def write_json(path: str):
     with open(path, "w") as fh:
         json.dump(RESULTS, fh, indent=2)
     print(f"# wrote {len(RESULTS)} rows to {path}", flush=True)
+
+
+# observability events (registry snapshots, serve stats, screening-efficacy
+# summaries) collected during a sweep — exported as JSONL next to the
+# BENCH_ci.json artifact when --metrics is passed
+METRICS: list[dict] = []
+
+
+def record_metrics(events) -> int:
+    """Append pre-built JSON-safe event dicts (one per metric series)."""
+    events = list(events)
+    METRICS.extend(events)
+    return len(events)
+
+
+def write_metrics(path: str):
+    from repro.obs import write_jsonl
+
+    n = write_jsonl(path, METRICS)
+    print(f"# wrote {n} metric events to {path}", flush=True)

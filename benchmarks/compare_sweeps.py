@@ -68,10 +68,18 @@ def main_bench(prev_path, new_path):
     or the first run after a new benchmark section lands — so they produce
     a clean "baseline recorded" summary instead of a traceback.
     """
-    new = json.loads(pathlib.Path(new_path).read_text())
+    rows = json.loads(pathlib.Path(new_path).read_text())
+    # metrics/ rows are observability measurements (occupancy %, hit rates,
+    # latency quantiles, fallback counts), not wall times: they get their
+    # own informational table below and are exempt from the regression flag
+    new = [r for r in rows if not r["name"].startswith("metrics/")]
+    new_metrics = [r for r in rows if r["name"].startswith("metrics/")]
     try:
         prev_rows = json.loads(pathlib.Path(prev_path).read_text())
-        prev = {r["name"]: r for r in prev_rows}
+        prev = {r["name"]: r for r in prev_rows
+                if not r["name"].startswith("metrics/")}
+        prev_metrics = {r["name"]: r for r in prev_rows
+                        if r["name"].startswith("metrics/")}
     except (OSError, ValueError):
         print("### Benchmark trajectory\n")
         print(f"No previous artifact at `{prev_path}` — baseline recorded "
@@ -80,6 +88,7 @@ def main_bench(prev_path, new_path):
         print("|---|---|")
         for r in new:
             print(f"| {r['name']} | {r['us_per_call']:.1f} |")
+        _print_metrics_table(new_metrics, {})
         return 0
     print("### Benchmark trajectory (vs previous run)\n")
     print("| row | prev µs | now µs | Δ | |")
@@ -120,8 +129,30 @@ def main_bench(prev_path, new_path):
     elif ratios:
         print("\nno row regressed beyond the "
               f"{BENCH_REGRESSION_THRESHOLD:.2f}x threshold")
+    _print_metrics_table(new_metrics, prev_metrics)
     # informational: CI runners are too noisy to hard-fail on wall time
     return 0
+
+
+def _print_metrics_table(new_metrics, prev_metrics):
+    """Observability metrics (cache hit rate, p95 latency, screening
+    occupancy, fallback steps) as their own markdown section.  Deltas are
+    shown for orientation only — a moved metric is a conversation starter,
+    never a CI verdict, so nothing here feeds the regression block."""
+    if not new_metrics:
+        return
+    print("\n### Observability metrics (informational)\n")
+    print("| metric | prev | now | Δ | what |")
+    print("|---|---|---|---|---|")
+    for r in new_metrics:
+        name, val = r["name"], r["us_per_call"]
+        p = prev_metrics.get(name)
+        if p is None:
+            print(f"| {name} | — | {val:.1f} | new | {r.get('derived', '')} |")
+            continue
+        delta = val - p["us_per_call"]
+        print(f"| {name} | {p['us_per_call']:.1f} | {val:.1f} | "
+              f"{delta:+.1f} | {r.get('derived', '')} |")
 
 
 if __name__ == "__main__":

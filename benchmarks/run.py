@@ -38,13 +38,34 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import fit, row, sequence, timed, write_json
+from benchmarks.common import (
+    fit,
+    record_metrics,
+    row,
+    sequence,
+    timed,
+    write_json,
+    write_metrics,
+)
 from repro.data import (
     make_classification,
     make_multinomial,
     make_poisson,
     make_regression,
 )
+from repro.obs import registry_events
+
+
+def metric(name: str, value: float, derived: str):
+    """An observability measurement riding the BENCH artifact as a
+    ``metrics/``-prefixed row: a fraction, count or latency quantile, NOT a
+    wall time.  compare_sweeps renders these in a separate informational
+    section and never flags them against the regression threshold.  Each
+    also lands in the ``--metrics`` JSONL export as a ``bench_metric``
+    event."""
+    row(f"metrics/{name}", value, derived)
+    record_metrics([{"kind": "bench_metric", "name": f"metrics/{name}",
+                     "value": round(float(value), 6), "derived": derived}])
 
 
 def table1_speedup(full: bool):
@@ -432,6 +453,25 @@ def compact_two_tier(full: bool):
         f"speedup_vs_single={t_single / t_grown:.2f}x "
         f"maxdiff_masked={diff_grown:.1e} {_compact_detail(grown)}")
 
+    # -- solver introspection (ISSUE 8): screening-efficacy trajectory ------
+    # the same two-tier fit with telemetry="summary" — the PathTrace is a
+    # host-side summary attached after the fit, so the compiled program (and
+    # its numbers) are untouched; its aggregates become metrics/ rows
+    tele_pol = SolverPolicy(backend="compact", working_set=W, ws_tiers=2,
+                            telemetry="summary", **tol)
+    tele = slope_path(batch, spec, tele_pol)
+    np.testing.assert_array_equal(np.asarray(tele.betas), np.asarray(two.betas))
+    pts = tele.path_trace.summary()
+    metric("screening/occupancy_pct",
+           pts["screened_occupancy_mean"] * 100,
+           f"mean screened-set occupancy, % of p={p} (two-tier arm)")
+    metric("screening/fallback_steps", float(pts["fallback_steps"]),
+           f"full-width fallback steps across B={B} members x L={L} steps")
+    metric("screening/violation_steps", float(pts["violation_steps"]),
+           "path steps that needed at least one KKT repair refit")
+    record_metrics([{"kind": "path_trace", "sweep": "compact_two_tier",
+                     "arm": "two_tier", **pts}])
+
     # -- block-compacted GEMVs: dead blocks are never fetched ---------------
     from repro.kernels import (
         compact_gemv_stats,
@@ -561,6 +601,20 @@ def serve(full: bool, stream: str = "mixed"):
         f"kkt_violations={st['kkt_violations']} "
         f"plans={plans} "
         f"ws_buckets={wsb['size']}sz/{wsb['updates']}upd/{wsb['hits']}hit")
+    # observability rows (ISSUE 8): the headline serving-health metrics as
+    # their own trajectory, plus the full registry snapshot for the JSONL
+    # artifact
+    metric(f"serve/cache_hit_rate_pct_{stream}",
+           st["cache"]["hit_rate"] * 100, "cold-cache program hit rate, %")
+    metric(f"serve/occupancy_pct_{stream}",
+           st["occupancy_mean"] * 100, "mean batch-slot occupancy, %")
+    metric(f"serve/latency_p95_ms_{stream}",
+           st["latency_ms_p95"], "client p95 latency, ms (cold cache)")
+    metric(f"serve/kkt_violations_{stream}",
+           float(st["kkt_violations"]), "KKT repair refits across the stream")
+    record_metrics(registry_events(svc.metrics, sweep="serve", arm="cold"))
+    record_metrics(registry_events(svc.cache.metrics, sweep="serve",
+                                   arm="cold"))
 
     # -- service steady state: warm compiled-program cache ------------------
     # a FRESH service sharing the warm cache, so this row's telemetry is
@@ -663,6 +717,12 @@ def serve_async(full: bool):
         f"occupancy={st['occupancy_mean']:.2f} "
         f"kkt_violations={st['kkt_violations']} "
         f"flush_fill={st['flush_fill']} flush_deadline={st['flush_deadline']}")
+    metric(f"serve_async/latency_p95_ms_R{R}", p95,
+           f"client p95 latency, ms (deadline {deadline_ms:.0f} ms)")
+    metric(f"serve_async/slot_recycles_R{R}", float(st["slot_recycles"]),
+           "batch slots recycled mid-flight under load")
+    record_metrics(registry_events(svc.metrics, sweep="serve_async",
+                                   arm="load"))
     svc.close()
 
     # -- burst arm: admission control on a stopped service -------------------
@@ -865,6 +925,10 @@ def main() -> None:
                     help="serve section: request-shape distribution")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact (CI: BENCH_ci.json)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="also export observability events (registry "
+                         "snapshots, screening-efficacy summaries) as JSONL "
+                         "(CI: METRICS_ci.jsonl)")
     args = ap.parse_args()
     names = list(BENCHES)
     if args.only:
@@ -881,6 +945,8 @@ def main() -> None:
             fn(args.full)
     if args.json:
         write_json(args.json)
+    if args.metrics:
+        write_metrics(args.metrics)
 
 
 if __name__ == "__main__":

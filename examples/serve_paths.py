@@ -14,6 +14,11 @@ triples the direct ``repro.api.slope_path`` front door takes, so served
 results are bit-identical to direct ``pad="bucket"`` execution of the same
 specs, and ``svc.stats()["plans"]`` shows which execution plans actually
 ran.
+
+The service is built with ``tracing=True``, so every response carries a
+gap-free admit→deliver span timeline (``resp.trace``), and the unified
+metrics registry behind ``svc.stats()`` is dumped in Prometheus text
+format at the end.
 """
 
 import jax
@@ -26,6 +31,7 @@ import numpy as np
 
 from repro.api import LambdaSpec, PathSpec, Problem, SolverPolicy, slope_path
 from repro.data import make_regression
+from repro.obs import prometheus_text
 from repro.serve import PathService
 
 
@@ -65,7 +71,7 @@ def main():
           f"[{base[0].plan.summary()}]")
 
     # -- served: bucketed, micro-batched, compiled-program cache ------------
-    svc = PathService(max_batch=8, max_delay=0.05)
+    svc = PathService(max_batch=8, max_delay=0.05, tracing=True)
     t0 = time.perf_counter()
     rids = [svc.submit(problem=pb, path=spec, policy=policy) for pb in reqs]
     svc.flush()
@@ -106,6 +112,19 @@ def main():
           f"{cv.best_sigma:.4f} at index {cv.best_index} "
           f"(min rule: index {cv.best_index_min}); "
           f"fold occupancy {cv.fold_responses[0].batch_occupancy:.2f}")
+
+    # -- observability: one request's span timeline + the registry dump -----
+    # tracing=True stamps every response with a gap-free admit→deliver
+    # timeline; where a request's wall time went (queueing? compile?
+    # execute?) is readable straight off the response
+    tr = resps[0].trace
+    print(f"\nrequest {tr.rid} timeline ({tr.total_s * 1e3:.0f} ms total):")
+    print(tr.render())
+    # every counter/gauge/histogram behind svc.stats() lives in one
+    # registry; the Prometheus text dump is scrape-ready
+    dump = prometheus_text(svc.metrics)
+    print(f"\nmetrics registry ({len(dump.splitlines())} lines, head):")
+    print("\n".join(dump.splitlines()[:18]))
 
 
 if __name__ == "__main__":

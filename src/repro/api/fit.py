@@ -160,7 +160,8 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
                                 max_refits=policy.max_refits,
                                 working_set=_ws_arg(pln, policy),
                                 ws_tiers=policy.ws_tiers,
-                                pad=pln.pad, **kw)
+                                pad=pln.pad, telemetry=policy.telemetry,
+                                **kw)
     elif pln.mode == "masked":
         # identical call path to the legacy fit_path(engine="device")
         res = _fit_path_device(X, y, lam, family, early_stop=path.early_stop,
@@ -171,7 +172,8 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
                                     max_refits=policy.max_refits,
                                     working_set=_ws_arg(pln, policy),
                                     ws_tiers=policy.ws_tiers,
-                                    pad=pln.pad, **kw)
+                                    pad=pln.pad,
+                                    telemetry=policy.telemetry, **kw)
         res = batched.path_results(early_stop=path.early_stop)[0]
     res.plan = pln
     return res

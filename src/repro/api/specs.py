@@ -302,6 +302,13 @@ class SolverPolicy:
     admits the request and relies on the engine's in-graph health word to
     flag the member (``PathHealth`` / ``PathResponse.health``); ``"off"``
     skips the host-side scan (the in-graph detector stays on regardless).
+
+    ``telemetry`` selects solver introspection: ``"off"`` (default) skips
+    it entirely, ``"summary"`` attaches per-member aggregates and
+    ``"steps"`` the full per-σ-step diagnostics as a
+    :class:`repro.obs.PathTrace` on ``BatchedPathResult.path_trace``.
+    Built host-side from arrays the fit already transfers — it never
+    changes the compiled program or the coefficients.
     """
 
     backend: str = "auto"
@@ -317,12 +324,17 @@ class SolverPolicy:
     deadline_ms: float | None = None
     priority: int = 0
     validate: str = "strict"
+    telemetry: str = "off"
 
     def __post_init__(self):
         if self.validate not in ("strict", "quarantine", "off"):
             raise ValueError(
                 f"validate must be 'strict', 'quarantine' or 'off', "
                 f"got {self.validate!r}")
+        if self.telemetry not in ("off", "summary", "steps"):
+            raise ValueError(
+                f"telemetry must be 'off', 'summary' or 'steps', "
+                f"got {self.telemetry!r}")
         if self.backend not in _BACKENDS:
             raise ValueError(
                 f"backend must be one of {_BACKENDS}, got {self.backend!r}")

@@ -950,6 +950,8 @@ class BatchedPathResult:
     #   pad="bucket" routed the batch through the serve layer's buckets
     plan: object | None = None            # repro.api ExecutionPlan when the
     #   fit was dispatched through slope_path (None for direct impl calls)
+    path_trace: object | None = None      # repro.obs.PathTrace when the fit
+    #   ran with telemetry="summary"|"steps" (None when "off")
 
     @property
     def batch(self) -> int:
@@ -1129,6 +1131,7 @@ def _fit_path_batched(
     working_set: int | str | None = None,
     ws_tiers: int | str = DEFAULT_WS_TIERS,
     pad: str | None = None,
+    telemetry: str = "off",
 ) -> BatchedPathResult:
     """Fit B independent SLOPE paths in one compiled device program.
 
@@ -1171,6 +1174,10 @@ def _fit_path_batched(
             f"ys must be (B, n[, ...]) matching Xs {Xs.shape[:2]}, got {ys.shape}")
     if pad not in (None, "bucket"):
         raise ValueError(f"pad must be None or 'bucket', got {pad!r}")
+    if telemetry not in ("off", "summary", "steps"):
+        raise ValueError(
+            f"telemetry must be 'off', 'summary' or 'steps', got "
+            f"{telemetry!r}")
     lam = np.asarray(lam)
     B, n, p = Xs.shape
     m = family.n_classes
@@ -1256,6 +1263,19 @@ def _fit_path_batched(
         if working_set == "auto":
             grow_ws_bucket(ws_key, ws_size, fallback, W, p_run,
                            two_tier=ws_tiers != 1)
+    path_trace = None
+    if telemetry != "off":
+        # built host-side from arrays the transfer above already landed —
+        # one per fit, off the compiled program's path entirely
+        from ..obs import PathTrace
+
+        path_trace = PathTrace.from_arrays(
+            mode=telemetry, p=p, sigmas=sigmas,
+            n_screened=res.n_screened, n_active=res.n_active,
+            n_violations=res.n_violations, refits=res.refits,
+            solver_iters=res.solver_iters, health=res.health,
+            working_set=W, working_set_top=W2, ws_size=ws_size,
+            ws_tier=ws_tier, compact_fallback=fallback)
     return BatchedPathResult(
         betas=betas,
         sigmas=sigmas,
@@ -1276,6 +1296,7 @@ def _fit_path_batched(
         ws_tier=ws_tier,
         compact_fallback=fallback,
         pad_shape=pad_shape,
+        path_trace=path_trace,
     )
 
 

@@ -29,6 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..obs import MetricsRegistry
 from . import ref as _ref
 from .prox_sorted_l1 import VMEM_ELEM_LIMIT, prox_pool_kernel_call
 from .screen_scan import DEFAULT_BLOCK, screen_scan_kernel_call
@@ -59,6 +60,7 @@ __all__ = [
     "prox_sorted_l1_kernel",
     "CompactGemvStats",
     "compact_gemv_stats",
+    "COMPACT_METRICS",
 ]
 
 
@@ -198,12 +200,21 @@ class CompactGemvStats:
 # thread's interleaved one (e.g. parallel test workers in one process)
 _COMPACT_TELEMETRY = threading.local()
 
+# process-wide dispatch accounting (counts + live-ratio histogram, labeled
+# by op) — the aggregate view the serving stack's exporters can dump; the
+# thread-local table above stays the per-dispatch assertion surface
+COMPACT_METRICS = MetricsRegistry("kernels.compact")
+
 
 def _record_compact(op: str, stats: "CompactGemvStats") -> None:
     table = getattr(_COMPACT_TELEMETRY, "table", None)
     if table is None:
         table = _COMPACT_TELEMETRY.table = {}
     table[op] = stats
+    COMPACT_METRICS.inc("dispatches", op=op)
+    COMPACT_METRICS.inc("blocks_live", stats.blocks_live, op=op)
+    COMPACT_METRICS.inc("blocks_total", stats.blocks_total, op=op)
+    COMPACT_METRICS.observe("live_ratio", stats.live_ratio, op=op)
 
 
 def compact_gemv_stats(op: str | None = None):

@@ -1,0 +1,33 @@
+"""`repro.obs` — observability: metrics registry, request tracing, solver
+introspection, exporters and profiler hooks.
+
+Layering contract: importing this package touches **stdlib + NumPy only**
+(:mod:`repro.serve.buckets` routes its counters here while ``repro.core``
+is still initialising, and the kernels module feeds dispatch telemetry in
+at import time).  jax is reached only lazily, inside
+:mod:`repro.obs.profile` helpers.
+"""
+
+from .export import prometheus_text, registry_events, trace_events, \
+    write_jsonl
+from .introspect import TELEMETRY_MODES, PathTrace
+from .profile import annotate, capture
+from .registry import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import Span, Trace
+
+__all__ = [
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Trace",
+    "Span",
+    "PathTrace",
+    "TELEMETRY_MODES",
+    "registry_events",
+    "trace_events",
+    "write_jsonl",
+    "prometheus_text",
+    "annotate",
+    "capture",
+]

@@ -1,0 +1,102 @@
+"""Exporters: JSONL event streams and Prometheus-style text dumps.
+
+Two render paths over the same sources (:class:`MetricsRegistry` snapshots
+and :class:`Trace` timelines):
+
+* :func:`write_jsonl` / :func:`registry_events` / :func:`trace_events` —
+  newline-delimited JSON, the machine-readable artifact CI uploads next to
+  ``BENCH_ci.json`` (``benchmarks/run.py --metrics``).
+* :func:`prometheus_text` — the conventional ``# TYPE``-annotated text
+  exposition (counters/gauges as-is, histograms as quantile series), for
+  scraping or eyeballing (``examples/serve_paths.py`` prints one).
+
+stdlib-only; safe to import anywhere in the layering.
+"""
+
+from __future__ import annotations
+
+import json
+
+__all__ = ["registry_events", "trace_events", "write_jsonl",
+           "prometheus_text"]
+
+
+def registry_events(registry, **extra) -> list[dict]:
+    """Flatten a registry snapshot into one-event-per-series dicts."""
+    snap = registry.snapshot()
+    ns = snap["namespace"]
+    events = []
+    for series, value in snap["counters"].items():
+        events.append({"kind": "counter", "namespace": ns, "series": series,
+                       "value": value, **extra})
+    for series, value in snap["gauges"].items():
+        events.append({"kind": "gauge", "namespace": ns, "series": series,
+                       "value": value, **extra})
+    for series, summary in snap["histograms"].items():
+        events.append({"kind": "histogram", "namespace": ns,
+                       "series": series, **summary, **extra})
+    return events
+
+
+def trace_events(trace, **extra) -> list[dict]:
+    """One event per span (relative times) — see :meth:`Trace.to_events`."""
+    return trace.to_events(**extra)
+
+
+def write_jsonl(path: str, events, *, append: bool = False) -> int:
+    """Write events (dicts) as JSON Lines; returns the count written."""
+    n = 0
+    with open(path, "a" if append else "w") as fh:
+        for ev in events:
+            fh.write(json.dumps(ev, sort_keys=True, default=str) + "\n")
+            n += 1
+    return n
+
+
+def _prom_name(namespace: str, series: str) -> str:
+    # series already carries {label=value} suffixes; prefix the namespace
+    # and swap the dots/dashes Prometheus identifiers forbid
+    base, brace, labels = series.partition("{")
+    safe = "".join(c if c.isalnum() or c == "_" else "_" for c in base)
+    ns = "".join(c if c.isalnum() or c == "_" else "_" for c in namespace)
+    if brace:
+        kv = ",".join(f'{k}="{v}"'
+                      for k, _, v in (part.partition("=") for part in
+                                      labels.rstrip("}").split(",")))
+        return f"{ns}_{safe}{{{kv}}}"
+    return f"{ns}_{safe}"
+
+
+def prometheus_text(registry) -> str:
+    """Prometheus text exposition of one registry's current state."""
+    snap = registry.snapshot()
+    ns = snap["namespace"]
+    lines = []
+    typed = set()  # one ``# TYPE`` line per metric name, not per series
+
+    def _type_line(base: str, kind: str):
+        if base not in typed:
+            typed.add(base)
+            lines.append(f"# TYPE {base} {kind}")
+
+    for series, value in sorted(snap["counters"].items()):
+        name = _prom_name(ns, series)
+        _type_line(name.split("{")[0], "counter")
+        lines.append(f"{name} {value}")
+    for series, value in sorted(snap["gauges"].items()):
+        name = _prom_name(ns, series)
+        _type_line(name.split("{")[0], "gauge")
+        lines.append(f"{name} {value}")
+    for series, summary in sorted(snap["histograms"].items()):
+        name = _prom_name(ns, series)
+        base, brace, labels = name.partition("{")
+        labels = labels.rstrip("}")
+        _type_line(base, "summary")
+        for q_label, q_key in (("0.5", "p50"), ("0.95", "p95"),
+                               ("0.99", "p99")):
+            extra = f'quantile="{q_label}"'
+            inner = f"{labels},{extra}" if labels else extra
+            lines.append(f"{base}{{{inner}}} {summary[q_key]}")
+        suffix = f"{{{labels}}}" if labels else ""
+        lines.append(f"{base}_count{suffix} {summary['count']}")
+    return "\n".join(lines) + ("\n" if lines else "")

@@ -1,0 +1,182 @@
+"""Solver introspection: structured per-fit telemetry (`PathTrace`).
+
+The device engines already compute, in-graph, everything the paper's
+screening argument needs to be *watched* in production — screened-set size
+per σ-step, KKT violations caught by the safeguard, compact-tier occupancy
+and fallback steps, health-bit transitions.  This module packages those
+already-host-transferred arrays (one transfer per fit, off the hot path)
+into a :class:`PathTrace` attached to
+:class:`repro.core.engine.BatchedPathResult` when
+``SolverPolicy(telemetry="summary"|"steps")`` asks for it.
+
+``"summary"`` keeps only per-member aggregates (O(B) memory);
+``"steps"`` additionally retains the raw (B, L) per-step arrays.
+NumPy + stdlib only — built host-side after the engine returns, so it can
+never perturb compiled programs or bit-identity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["PathTrace", "TELEMETRY_MODES"]
+
+TELEMETRY_MODES = ("off", "summary", "steps")
+
+
+def _health_transitions(health: np.ndarray) -> np.ndarray:
+    """Per-member count of σ-steps where the sticky health word changed."""
+    h = np.asarray(health)
+    if h.ndim != 2 or h.shape[1] < 2:
+        return np.zeros(h.shape[0] if h.ndim else 1, np.int32)
+    return (h[:, 1:] != h[:, :-1]).sum(axis=1).astype(np.int32)
+
+
+@dataclasses.dataclass
+class PathTrace:
+    """Per-fit solver diagnostics (leading axis = batch member).
+
+    Summary fields are always present; the per-step ``(B, L)`` arrays are
+    retained only under ``mode="steps"`` (None otherwise).
+    """
+
+    mode: str                      # "summary" | "steps"
+    n_members: int
+    n_steps: int
+    p: int                         # native column count (occupancy basis)
+    working_set: int | None        # compact W (None: masked engine)
+    working_set_top: int | None
+    # -- per-member aggregates (always populated) --
+    screened_mean: np.ndarray      # (B,) mean |screened| over the path
+    screened_peak: np.ndarray      # (B,) peak |screened|
+    screened_occupancy: np.ndarray  # (B,) screened_mean / p
+    total_violations: np.ndarray   # (B,) KKT violations repaired
+    violation_steps: np.ndarray    # (B,) steps with ≥ 1 violation
+    total_refits: np.ndarray       # (B,)
+    total_solver_iters: np.ndarray  # (B,)
+    fallback_steps: np.ndarray     # (B,) masked-fallback steps (0 if masked)
+    tier_steps: np.ndarray         # (B, 3) steps served at tier 0/1/2
+    health_transitions: np.ndarray  # (B,) health-word change count
+    quarantined: np.ndarray        # (B,) bool, final health word nonzero
+    # -- per-step arrays (mode == "steps" only) --
+    sigmas: np.ndarray | None = None
+    n_screened: np.ndarray | None = None
+    n_active: np.ndarray | None = None
+    n_violations: np.ndarray | None = None
+    refits: np.ndarray | None = None
+    solver_iters: np.ndarray | None = None
+    health: np.ndarray | None = None
+    ws_size: np.ndarray | None = None
+    ws_tier: np.ndarray | None = None
+    compact_fallback: np.ndarray | None = None
+
+    @classmethod
+    def from_arrays(cls, *, mode: str, p: int, sigmas, n_screened, n_active,
+                    n_violations, refits, solver_iters, health,
+                    working_set=None, working_set_top=None, ws_size=None,
+                    ws_tier=None, compact_fallback=None) -> "PathTrace":
+        if mode not in ("summary", "steps"):
+            raise ValueError(
+                f"telemetry mode must be 'summary' or 'steps', got {mode!r}")
+        scr = np.asarray(n_screened)
+        viol = np.asarray(n_violations)
+        hlth = np.asarray(health)
+        B, L = scr.shape
+        fb = (np.zeros((B, L), bool) if compact_fallback is None
+              else np.asarray(compact_fallback).astype(bool))
+        tier = (np.full((B, L), 1, np.int32) if ws_tier is None
+                else np.asarray(ws_tier))
+        tier_steps = np.stack(
+            [(tier == t).sum(axis=1) for t in (0, 1, 2)], axis=1
+        ).astype(np.int32)
+        tr = cls(
+            mode=mode, n_members=B, n_steps=L, p=int(p),
+            working_set=working_set, working_set_top=working_set_top,
+            screened_mean=scr.mean(axis=1),
+            screened_peak=scr.max(axis=1).astype(np.int32),
+            screened_occupancy=scr.mean(axis=1) / max(int(p), 1),
+            total_violations=viol.sum(axis=1).astype(np.int64),
+            violation_steps=(viol > 0).sum(axis=1).astype(np.int32),
+            total_refits=np.asarray(refits).sum(axis=1).astype(np.int64),
+            total_solver_iters=np.asarray(solver_iters).sum(axis=1)
+                                 .astype(np.int64),
+            fallback_steps=fb.sum(axis=1).astype(np.int32),
+            tier_steps=tier_steps,
+            health_transitions=_health_transitions(hlth),
+            quarantined=hlth[:, -1].astype(bool),
+        )
+        if mode == "steps":
+            tr.sigmas = np.asarray(sigmas)
+            tr.n_screened = scr
+            tr.n_active = np.asarray(n_active)
+            tr.n_violations = viol
+            tr.refits = np.asarray(refits)
+            tr.solver_iters = np.asarray(solver_iters)
+            tr.health = hlth
+            tr.ws_size = None if ws_size is None else np.asarray(ws_size)
+            tr.ws_tier = None if ws_tier is None else np.asarray(ws_tier)
+            tr.compact_fallback = (None if compact_fallback is None
+                                   else np.asarray(compact_fallback))
+        return tr
+
+    # -- views --------------------------------------------------------------
+
+    def member(self, b: int) -> dict:
+        """One member's aggregates as a JSON-safe dict."""
+        out = {
+            "member": int(b),
+            "screened_mean": float(self.screened_mean[b]),
+            "screened_peak": int(self.screened_peak[b]),
+            "screened_occupancy": float(self.screened_occupancy[b]),
+            "total_violations": int(self.total_violations[b]),
+            "violation_steps": int(self.violation_steps[b]),
+            "total_refits": int(self.total_refits[b]),
+            "total_solver_iters": int(self.total_solver_iters[b]),
+            "fallback_steps": int(self.fallback_steps[b]),
+            "tier_steps": [int(t) for t in self.tier_steps[b]],
+            "health_transitions": int(self.health_transitions[b]),
+            "quarantined": bool(self.quarantined[b]),
+        }
+        return out
+
+    def summary(self) -> dict:
+        """Batch-level aggregates — what the metrics exporters embed."""
+        return {
+            "mode": self.mode,
+            "members": self.n_members,
+            "steps": self.n_steps,
+            "p": self.p,
+            "working_set": self.working_set,
+            "working_set_top": self.working_set_top,
+            "screened_occupancy_mean": float(self.screened_occupancy.mean()),
+            "screened_peak_max": int(self.screened_peak.max()),
+            "total_violations": int(self.total_violations.sum()),
+            "violation_steps": int(self.violation_steps.sum()),
+            "fallback_steps": int(self.fallback_steps.sum()),
+            "tier_steps": [int(t) for t in self.tier_steps.sum(axis=0)],
+            "health_transitions": int(self.health_transitions.sum()),
+            "quarantined": int(self.quarantined.sum()),
+        }
+
+    def render(self, b: int = 0) -> str:
+        """Per-step table for one member (requires ``mode="steps"``)."""
+        if self.mode != "steps":
+            rows = [f"PathTrace[{self.mode}] member {b}:"]
+            rows += [f"  {k}: {v}" for k, v in self.member(b).items()
+                     if k != "member"]
+            return "\n".join(rows)
+        head = f"{'step':>4} {'sigma':>10} {'|screen|':>8} {'|active|':>8} " \
+               f"{'viol':>5} {'refit':>5} {'iters':>6} {'tier':>4}"
+        lines = [f"PathTrace member {b} (p={self.p}):", head]
+        for s in range(self.n_steps):
+            tier = "-" if self.ws_tier is None else int(self.ws_tier[b, s])
+            lines.append(
+                f"{s:>4} {float(self.sigmas[b, s]):>10.4g} "
+                f"{int(self.n_screened[b, s]):>8} "
+                f"{int(self.n_active[b, s]):>8} "
+                f"{int(self.n_violations[b, s]):>5} "
+                f"{int(self.refits[b, s]):>5} "
+                f"{int(self.solver_iters[b, s]):>6} {tier:>4}")
+        return "\n".join(lines)

@@ -1,0 +1,60 @@
+"""JAX profiler hooks: trace annotations and optional xplane capture.
+
+Thin, lazily-importing wrappers so the rest of ``repro.obs`` stays
+importable before (or without) jax:
+
+* :func:`annotate` — a context manager emitting a
+  ``jax.profiler.TraceAnnotation`` around a host-side region (the program
+  cache wraps ``lower().compile()`` with it, the services wrap batch
+  execution), so compile-vs-execute attribution shows up in xplane/perfetto
+  captures the same way MaxText's ``profiler=xplane`` runs do.
+* :func:`capture` — start/stop a ``jax.profiler`` trace writing an xplane
+  dump under a directory (ROADMAP item 3's real-TPU perf pass reads these).
+
+Both degrade to no-ops when jax (or its profiler) is unavailable, so the
+observability layer never becomes an import-order or dependency hazard.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+__all__ = ["annotate", "capture"]
+
+
+def _profiler():
+    try:
+        import jax.profiler as prof
+        return prof
+    except Exception:  # pragma: no cover - jax always present in this repo
+        return None
+
+
+@contextlib.contextmanager
+def annotate(name: str, **attrs):
+    """``with annotate("compile/ols/B8..."):`` — named profiler region.
+
+    Shows up as a host TraceAnnotation in xplane captures; a no-op (empty
+    context) when the profiler is unavailable.
+    """
+    prof = _profiler()
+    if prof is None:
+        yield
+        return
+    with prof.TraceAnnotation(name, **attrs):
+        yield
+
+
+@contextlib.contextmanager
+def capture(log_dir: str, *, create_perfetto_link: bool = False):
+    """``with capture("/tmp/xplane"):`` — record an xplane profile of the
+    enclosed region (compile + execute annotations included)."""
+    prof = _profiler()
+    if prof is None:
+        yield
+        return
+    prof.start_trace(log_dir, create_perfetto_link=create_perfetto_link)
+    try:
+        yield
+    finally:
+        prof.stop_trace()

@@ -1,0 +1,226 @@
+"""Unified metrics registry: counters, gauges, bounded histograms.
+
+Every counter the serving stack used to hand-roll — the service's
+submitted/completed/flush tallies, the program cache's hit/miss/build
+accounting, the bucket registry's counters, the compact-GEMV dispatch
+telemetry — routes through one :class:`MetricsRegistry` per component, so
+``stats()`` dicts become read-through views that cannot drift from the
+numbers actually incremented, and one snapshot/export path serves them all.
+
+Design constraints:
+
+* **stdlib + NumPy only.**  :mod:`repro.serve.buckets` is imported while
+  ``repro.core`` is still initialising, and it routes its counters here —
+  so this module (and the whole ``repro.obs`` package at import time) must
+  not import jax or any ``repro`` sibling.
+* **One lock per registry.**  All mutation goes through registry methods
+  under a single ``RLock``; increments are exact under concurrency (the
+  thread test in ``tests/test_obs.py`` pins this).  Components that already
+  serialize on their own lock pay one cheap re-entrant acquire.
+* **Bounded histograms.**  Every distribution is a fixed-window deque
+  (default 4096 samples — the one eviction policy, replacing the three
+  ad-hoc deques PR 3/6 grew): percentiles are over the recent window,
+  ``total`` counts every observation ever made.
+
+Series are labeled: ``reg.inc("flush", trigger="fill")`` and
+``reg.inc("flush", trigger="deadline")`` are distinct monotonic counters
+under one name, which is how per-plan batch counts and the user/internal
+latency split are kept apart without inventing key-name schemas.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+import numpy as np
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+
+DEFAULT_WINDOW = 4096
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _series_name(name: str, key: tuple) -> str:
+    if not key:
+        return name
+    inner = ",".join(f"{k}={v}" for k, v in key)
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    """Monotonic counter (int or float increments)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def _inc(self, n=1):
+        self.value += n
+        return self.value
+
+
+class Gauge:
+    """Last-written value (occupancy, queue depth, ...)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def _set(self, v):
+        self.value = v
+
+
+class Histogram:
+    """Bounded sample window with percentile/mean summaries.
+
+    ``observe`` appends to a ``maxlen``-bounded deque (oldest evicted);
+    ``total`` is the monotonic count of every observation, ``retained``
+    the window size the percentiles are computed over.
+    """
+
+    __slots__ = ("_window", "total")
+
+    def __init__(self, maxlen: int = DEFAULT_WINDOW):
+        self._window: deque = deque(maxlen=maxlen)
+        self.total = 0
+
+    def _observe(self, v: float):
+        self._window.append(float(v))
+        self.total += 1
+
+    @property
+    def retained(self) -> int:
+        return len(self._window)
+
+    @property
+    def maxlen(self) -> int:
+        return self._window.maxlen
+
+    def values(self) -> np.ndarray:
+        return np.asarray(self._window, dtype=float)
+
+    def percentile(self, q: float) -> float:
+        vals = self.values()
+        return float(np.percentile(vals, q)) if vals.size else 0.0
+
+    def mean(self) -> float:
+        vals = self.values()
+        return float(vals.mean()) if vals.size else 0.0
+
+    def summary(self) -> dict:
+        """JSON-safe p50/p95/p99 + mean over the retained window."""
+        vals = self.values()
+        if not vals.size:
+            return {"count": self.total, "retained": 0, "mean": 0.0,
+                    "p50": 0.0, "p95": 0.0, "p99": 0.0}
+        p50, p95, p99 = np.percentile(vals, [50, 95, 99])
+        return {"count": self.total, "retained": int(vals.size),
+                "mean": float(vals.mean()), "p50": float(p50),
+                "p95": float(p95), "p99": float(p99)}
+
+
+class MetricsRegistry:
+    """Thread-safe named/labeled counters, gauges and histograms.
+
+    One instance per component (each :class:`~repro.serve.PathService`,
+    :class:`~repro.serve.ProgramCache`, :class:`~repro.serve.BucketRegistry`
+    owns its own — shared instances would alias the per-service exact-count
+    assertions the serve tests make).  ``snapshot()`` is the JSON-safe
+    export every dump/exporter reads.
+    """
+
+    def __init__(self, namespace: str = "repro"):
+        self.namespace = namespace
+        self._lock = threading.RLock()
+        self._counters: dict[tuple, Counter] = {}
+        self._gauges: dict[tuple, Gauge] = {}
+        self._hists: dict[tuple, Histogram] = {}
+
+    # -- counters -----------------------------------------------------------
+
+    def counter(self, name: str, **labels) -> Counter:
+        key = (name, _label_key(labels))
+        with self._lock:
+            c = self._counters.get(key)
+            if c is None:
+                c = self._counters[key] = Counter()
+            return c
+
+    def inc(self, name: str, n=1, **labels):
+        """Increment (and create on first use) a counter; returns the new
+        value.  ``n`` may be a float (e.g. accumulated build seconds)."""
+        with self._lock:
+            return self.counter(name, **labels)._inc(n)
+
+    def value(self, name: str, default=0, **labels):
+        """Current counter value (``default`` when never incremented)."""
+        key = (name, _label_key(labels))
+        with self._lock:
+            c = self._counters.get(key)
+            return default if c is None else c.value
+
+    def label_values(self, name: str, label: str) -> dict:
+        """``{label value → counter value}`` across one name's series —
+        how ``stats()["plans"]`` reconstructs its per-plan dict."""
+        with self._lock:
+            out = {}
+            for (n, lk), c in self._counters.items():
+                if n != name:
+                    continue
+                for k, v in lk:
+                    if k == label:
+                        out[v] = c.value
+            return out
+
+    # -- gauges -------------------------------------------------------------
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        key = (name, _label_key(labels))
+        with self._lock:
+            g = self._gauges.get(key)
+            if g is None:
+                g = self._gauges[key] = Gauge()
+            return g
+
+    def set_gauge(self, name: str, value, **labels) -> None:
+        with self._lock:
+            self.gauge(name, **labels)._set(value)
+
+    # -- histograms ---------------------------------------------------------
+
+    def histogram(self, name: str, maxlen: int = DEFAULT_WINDOW,
+                  **labels) -> Histogram:
+        key = (name, _label_key(labels))
+        with self._lock:
+            h = self._hists.get(key)
+            if h is None:
+                h = self._hists[key] = Histogram(maxlen=maxlen)
+            return h
+
+    def observe(self, name: str, value: float, maxlen: int = DEFAULT_WINDOW,
+                **labels) -> None:
+        with self._lock:
+            self.histogram(name, maxlen=maxlen, **labels)._observe(value)
+
+    # -- export -------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """JSON-safe state dump: ``{"counters": {...}, "gauges": {...},
+        "histograms": {series: summary}}`` with Prometheus-style
+        ``name{label=value}`` series keys."""
+        with self._lock:
+            return {
+                "namespace": self.namespace,
+                "counters": {_series_name(n, lk): c.value
+                             for (n, lk), c in self._counters.items()},
+                "gauges": {_series_name(n, lk): g.value
+                           for (n, lk), g in self._gauges.items()},
+                "histograms": {_series_name(n, lk): h.summary()
+                               for (n, lk), h in self._hists.items()},
+            }

@@ -38,6 +38,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from ..obs import MetricsRegistry
+
 __all__ = [
     "next_pow2",
     "BucketRegistry",
@@ -82,18 +84,17 @@ class BucketRegistry:
         self.capacity = capacity
         self._data: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
-        self._hits = 0
-        self._misses = 0
-        self._updates = 0
-        self._evictions = 0
+        # counters live on the unified registry (repro.obs); stats() reads
+        # back through it so this module stays NumPy+stdlib importable
+        self.metrics = MetricsRegistry(f"buckets.{name}")
 
     def get(self, key, default=None):
         with self._lock:
             if key in self._data:
                 self._data.move_to_end(key)
-                self._hits += 1
+                self.metrics.inc("hits")
                 return self._data[key]
-            self._misses += 1
+            self.metrics.inc("misses")
             return default
 
     def __getitem__(self, key):
@@ -106,10 +107,10 @@ class BucketRegistry:
         with self._lock:
             self._data[key] = value
             self._data.move_to_end(key)
-            self._updates += 1
+            self.metrics.inc("updates")
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
-                self._evictions += 1
+                self.metrics.inc("evictions")
 
     def __contains__(self, key) -> bool:
         with self._lock:
@@ -139,14 +140,14 @@ class BucketRegistry:
             current = self._data.get(key)
             if current is not None and current >= value:
                 self._data.move_to_end(key)
-                self._hits += 1
+                self.metrics.inc("hits")
                 return False
             self._data[key] = value
             self._data.move_to_end(key)
-            self._updates += 1
+            self.metrics.inc("updates")
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
-                self._evictions += 1
+                self.metrics.inc("evictions")
             return True
 
     def pop(self, key, default=None):
@@ -158,15 +159,16 @@ class BucketRegistry:
             self._data.clear()
 
     def stats(self) -> dict:
+        m = self.metrics
         with self._lock:
             return {
                 "name": self.name,
                 "size": len(self._data),
                 "capacity": self.capacity,
-                "hits": self._hits,
-                "misses": self._misses,
-                "updates": self._updates,
-                "evictions": self._evictions,
+                "hits": m.value("hits"),
+                "misses": m.value("misses"),
+                "updates": m.value("updates"),
+                "evictions": m.value("evictions"),
                 "entries": dict(self._data),
             }
 

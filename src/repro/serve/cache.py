@@ -27,6 +27,8 @@ import numpy as np
 import jax
 
 from ..core.losses import Family
+from ..obs import MetricsRegistry
+from ..obs.profile import annotate
 
 __all__ = ["ProgramSpec", "CompiledProgram", "ProgramCache"]
 
@@ -196,7 +198,8 @@ def _build(spec: ProgramSpec) -> tuple:
                                             width=spec.working_set,
                                             width2=spec.working_set_top,
                                             **kw)
-    compiled = lowered.compile()
+    with annotate(f"repro.compile/{spec.short()}"):
+        compiled = lowered.compile()
     return compiled, time.perf_counter() - t0
 
 
@@ -217,26 +220,26 @@ class ProgramCache:
         self.capacity = capacity
         self._data: OrderedDict[ProgramSpec, CompiledProgram] = OrderedDict()
         self._lock = threading.Lock()
-        self._hits = 0
-        self._misses = 0
-        self._evictions = 0
-        self._build_seconds = 0.0
+        # hits/misses/evictions/build_seconds live on the unified registry;
+        # stats() below is a read-through view preserving the legacy keys
+        self.metrics = MetricsRegistry("cache")
 
     def get(self, spec: ProgramSpec) -> tuple[CompiledProgram, bool]:
         with self._lock:
             prog = self._data.get(spec)
             if prog is not None:
                 self._data.move_to_end(spec)
-                self._hits += 1
+                self.metrics.inc("hits")
                 return prog, True
-            self._misses += 1
+            self.metrics.inc("misses")
             compiled, dt = _build(spec)
             prog = CompiledProgram(spec, compiled, dt)
-            self._build_seconds += dt
+            self.metrics.inc("build_seconds", dt)
+            self.metrics.observe("build_s", dt)
             self._data[spec] = prog
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
-                self._evictions += 1
+                self.metrics.inc("evictions")
             return prog, False
 
     def warmup(self, specs) -> dict[str, float]:
@@ -257,15 +260,18 @@ class ProgramCache:
             return spec in self._data
 
     def stats(self) -> dict:
+        m = self.metrics
         with self._lock:
-            total = self._hits + self._misses
+            hits = m.value("hits")
+            misses = m.value("misses")
+            total = hits + misses
             return {
                 "size": len(self._data),
                 "capacity": self.capacity,
-                "hits": self._hits,
-                "misses": self._misses,
-                "hit_rate": self._hits / total if total else 0.0,
-                "evictions": self._evictions,
-                "build_seconds": round(self._build_seconds, 3),
+                "hits": hits,
+                "misses": misses,
+                "hit_rate": hits / total if total else 0.0,
+                "evictions": m.value("evictions"),
+                "build_seconds": round(m.value("build_seconds", 0.0), 3),
                 "programs": {s.short(): p.calls for s, p in self._data.items()},
             }

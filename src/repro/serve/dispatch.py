@@ -108,11 +108,12 @@ class AsyncPathService(PathService):
                  retry_limit: int = 2, retry_backoff: float = 0.02,
                  retry_jitter: float = 0.25,
                  autostart: bool = True, policy=None, cache=None,
-                 canonicalizer=None, clock=time.perf_counter, faults=None):
+                 canonicalizer=None, clock=time.perf_counter, faults=None,
+                 tracing: bool = False):
         super().__init__(max_batch=max_batch, max_delay=max_delay,
                          max_queue=max_queue, policy=policy, cache=cache,
                          canonicalizer=canonicalizer, clock=clock,
-                         faults=faults)
+                         faults=faults, tracing=tracing)
         if step_chunk < 1:
             raise ValueError(f"step_chunk must be ≥ 1, got {step_chunk}")
         if retry_limit < 0:
@@ -127,11 +128,9 @@ class AsyncPathService(PathService):
         self.retry_jitter = retry_jitter
         self._jitter_rng = random.Random(0)  # deterministic under test
         self._futures: dict[int, Future] = {}
-        self._slot_recycles = 0
-        self._chunk_batches = 0
-        self._retries = 0     # re-serve attempts after a worker failure
-        self._bisections = 0  # cohort splits while isolating a poison
-        self._poisoned = 0    # requests that individually got the exception
+        # slot_recycles / chunk_batches / retries / bisections / poisoned
+        # live on the inherited MetricsRegistry (self.metrics) — stats()
+        # reads them back through the same registry the sync service uses
         self._current_cohort: list[Pending] = []
         self._last_error: BaseException | None = None
         self._cond = threading.Condition()
@@ -175,6 +174,7 @@ class AsyncPathService(PathService):
         with self._lock:
             leftovers = list(self._futures.items())
             self._futures.clear()
+            self._traces.clear()
             self._cv_fold_rids.clear()
         for rid, fut in leftovers:
             if not fut.done():
@@ -207,10 +207,11 @@ class AsyncPathService(PathService):
     def _admit(self, key: _GroupKey, item, *, deadline_ms=None, priority=0,
                _cv_fold: bool = False) -> Future:
         fut: Future = Future()
+        t_in = self._clock()
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            self._submitted += 1
+            self.metrics.inc("submitted")
             fut.rid = rid
             if _cv_fold:
                 self._cv_fold_rids.add(rid)
@@ -221,12 +222,13 @@ class AsyncPathService(PathService):
                     key, rid, item, now, priority=priority,
                     deadline=self._flush_by(now, deadline_ms))
             except QueueFull as e:
-                self._rejected += 1
+                self.metrics.inc("rejected")
                 self._cv_fold_rids.discard(rid)
                 fut.set_result(Rejection(
                     rid=rid, reason=str(e), queued=self._batcher.pending(),
                     max_queue=self._batcher.max_queue))
                 return fut
+            self._start_trace(rid, t_in)
             self._futures[rid] = fut
         with self._cond:
             self._cond.notify_all()  # wake the dispatcher: new work/deadline
@@ -234,8 +236,10 @@ class AsyncPathService(PathService):
 
     def _deliver(self, rid: int, resp: PathResponse) -> None:
         """Resolve the request's future (caller holds ``self._lock``)."""
-        self._completed += 1
+        self.metrics.inc("completed")
+        self.metrics.inc("kkt_violations", int(resp.n_violations.sum()))
         self._record_latency(rid, resp)   # before dropping fold membership
+        self._finish_trace(rid, resp)
         self._cv_fold_rids.discard(rid)
         fut = self._futures.pop(rid, None)
         if fut is not None and not fut.done():
@@ -272,7 +276,7 @@ class AsyncPathService(PathService):
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            self._submitted += 1
+            self.metrics.inc("submitted")
         cv_fut.rid = rid
         remaining = [len(fold_futs)]
         agg_lock = threading.Lock()
@@ -296,8 +300,7 @@ class AsyncPathService(PathService):
                 val_dev = cv_val_deviance(X, y, vals, betas, family)
                 mean, se, best_min, best_1se = cv_select(val_dev)
                 best = best_1se if selection == "1se" else best_min
-                with self._lock:
-                    self._completed += 1
+                self.metrics.inc("completed")
                 cv_fut.set_result(CvResponse(
                     rid=rid, sigmas=sigmas, lam=lam, val_deviance=val_dev,
                     mean_val_deviance=mean, se_val_deviance=se,
@@ -380,6 +383,19 @@ class AsyncPathService(PathService):
         if delay > 0:
             time.sleep(delay)
 
+    def _trace_recovery(self, cohort: list[Pending], name: str,
+                        **attrs) -> None:
+        """Attach a zero-width recovery child span (retry/bisect) to every
+        traced cohort member — poison isolation stays visible per request."""
+        if not self._traces:
+            return
+        now = self._clock()
+        with self._lock:
+            for p in cohort:
+                tr = self._traces.get(p.rid)
+                if tr is not None:
+                    tr.child(name, t0=now, t1=now, **attrs)
+
     def _recover(self, key: _GroupKey, cohort: list[Pending],
                  exc: BaseException, *, retries: int | None = None) -> None:
         """Retry a failed cohort, then bisect it down to the poison.
@@ -399,8 +415,9 @@ class AsyncPathService(PathService):
             if not cohort:
                 return
             self._sleep_backoff(attempt)
-            with self._lock:
-                self._retries += 1
+            self.metrics.inc("retries")
+            self._trace_recovery(cohort, "retry", attempt=attempt,
+                                 cohort_size=len(cohort))
             try:
                 self._serve_cohort(key, cohort)
                 return
@@ -413,14 +430,23 @@ class AsyncPathService(PathService):
         if len(cohort) == 1:
             pending = cohort[0]
             with self._lock:
-                self._poisoned += 1
+                self.metrics.inc("poisoned")
                 self._cv_fold_rids.discard(pending.rid)
                 fut = self._futures.pop(pending.rid, None)
+                tr = self._traces.pop(pending.rid, None)
+            if tr is not None:
+                # the failed request's timeline rides on the exception so
+                # callers can see the retry/bisect history that isolated it
+                tr.mark("poisoned", self._clock())
+                try:
+                    exc.trace = tr
+                except Exception:  # exceptions with __slots__
+                    pass
             if fut is not None and not fut.done():
                 fut.set_exception(exc)
             return
-        with self._lock:
-            self._bisections += 1
+        self.metrics.inc("bisections")
+        self._trace_recovery(cohort, "bisect", cohort_size=len(cohort))
         mid = len(cohort) // 2
         for half in (cohort[:mid], cohort[mid:]):
             try:
@@ -508,12 +534,8 @@ class AsyncPathService(PathService):
                     grad=grad, active=active, Lc=Lc, Hc=Hc)
 
         plan_summary = chunk_spec.plan().summary()
-        with self._lock:
-            counter = {"fill": "_flush_fill", "deadline": "_flush_deadline",
-                       "forced": "_flush_forced", "retry": "_flush_retry"
-                       }[trigger]
-            setattr(self, counter, getattr(self, counter) + 1)
-            self._plans[plan_summary] = self._plans.get(plan_summary, 0) + 1
+        self.metrics.inc("flush", trigger=trigger)
+        self.metrics.inc("plans", plan=plan_summary)
 
         rounds = 0
         while True:
@@ -531,6 +553,12 @@ class AsyncPathService(PathService):
             occupied = S - len(free) + len(taken)
             inserted = []
             now = self._clock()
+            if self._traces and taken:
+                with self._lock:
+                    for pend in taken:
+                        tr = self._traces.get(pend.rid)
+                        if tr is not None:
+                            tr.mark("queue", now, trigger=trigger)
             for i, pending in zip(free, taken):
                 item = pending.item
                 pb = pad_batch(
@@ -551,7 +579,7 @@ class AsyncPathService(PathService):
             if inserted:
                 if rounds > 0:
                     # joined a cohort already in flight: true recycling
-                    self._slot_recycles += len(inserted)
+                    self.metrics.inc("slot_recycles", len(inserted))
                 # prefill on the WHOLE updated batch, scatter only the new
                 # slots — standing neighbours keep their carried state
                 g0, nd0, L0, h0 = (np.asarray(a)
@@ -564,6 +592,12 @@ class AsyncPathService(PathService):
                     Hc[i] = h0[i]
                     slots[i].health0 = int(h0[i])
                     slots[i].null_dev = slots[i].prev_dev = float(nd0[i])
+                    if self._traces:
+                        with self._lock:
+                            tr = self._traces.get(slots[i].pending.rid)
+                        if tr is not None:
+                            tr.mark("init", self._clock(),
+                                    recycled=rounds > 0, slot=i)
                     if L < 2:  # degenerate grid: null model only
                         self._finish_slot(i, slots, key, bufs)
                     elif slots[i].health0:
@@ -617,10 +651,19 @@ class AsyncPathService(PathService):
             wall = self._clock() - t0
             rounds += 1
             n_live = sum(s is not None for s in slots)
-            with self._lock:
-                self._batches += 1
-                self._chunk_batches += 1
-                self._occupancies.append(n_live / S)
+            self.metrics.inc("batches")
+            self.metrics.inc("chunk_batches")
+            self.metrics.observe("batch_occupancy", n_live / S)
+            if self._traces:
+                t_chunk = self._clock()
+                with self._lock:
+                    for s in slots:
+                        if s is None:
+                            continue
+                        tr = self._traces.get(s.pending.rid)
+                        if tr is not None:
+                            tr.mark("chunk", t_chunk, round=rounds,
+                                    solve_ms=round(wall * 1e3, 3))
 
             # harvest: native-width steps, early stop on the growing prefix
             for i in range(S):
@@ -691,8 +734,13 @@ class AsyncPathService(PathService):
             solve_s=s.solve_s, batch_size=s.batch_size,
             batch_occupancy=s.batch_size / self.slots,
             padding_ratio=pad_ratio, cache_hit=s.cache_hit, health=hlth)
+        self.metrics.observe("padding_ratio", pad_ratio)
         with self._lock:
-            self._padding_ratios.append(pad_ratio)
+            if self._traces:
+                tr = self._traces.get(s.pending.rid)
+                if tr is not None:
+                    tr.mark("harvest", self._clock(),
+                            padding_ratio=round(pad_ratio, 3))
             self._deliver(s.pending.rid, resp)
         slots[i] = None
         # blank the freed lane EVERYWHERE — operands AND carry: dead lanes
@@ -739,16 +787,19 @@ class AsyncPathService(PathService):
         return self.cache.warmup(specs)
 
     def stats(self) -> dict:
+        """Strict superset of :meth:`PathService.stats` — the async-only
+        keys are a read-through over the same :attr:`metrics` registry."""
         out = super().stats()
+        m = self.metrics
         with self._lock:
             out.update(
-                slot_recycles=self._slot_recycles,
-                chunk_batches=self._chunk_batches,
+                slot_recycles=m.value("slot_recycles"),
+                chunk_batches=m.value("chunk_batches"),
                 step_chunk=self.step_chunk,
                 inflight=len(self._futures),
-                retries=self._retries,
-                bisections=self._bisections,
-                poisoned=self._poisoned,
+                retries=m.value("retries"),
+                bisections=m.value("bisections"),
+                poisoned=m.value("poisoned"),
                 retry_limit=self.retry_limit,
                 retry_backoff=self.retry_backoff,
                 worker_alive=bool(self._worker is not None

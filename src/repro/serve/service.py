@@ -46,7 +46,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 
 import numpy as np
 
@@ -76,6 +76,8 @@ from ..core.engine import (
 )
 from ..core.solver import DEFAULT_WS_TIERS
 from ..core.losses import Family, ols
+from ..obs import MetricsRegistry, Trace
+from ..obs.profile import annotate
 from .batcher import (
     LambdaCanonicalizer,
     MicroBatcher,
@@ -153,6 +155,7 @@ class PathResponse:
     cache_hit: bool              # compiled program was already resident
     health: np.ndarray | None = None  # (L,) int32 per-step health word
     #   (sticky; see repro.core.engine.PathHealth — None on pre-PR-7 paths)
+    trace: Trace | None = None   # opt-in span timeline (service tracing=True)
 
     @property
     def total_violations(self) -> int:
@@ -238,7 +241,8 @@ class PathService:
                  cache: ProgramCache | None = None,
                  canonicalizer: LambdaCanonicalizer | None = None,
                  clock=time.perf_counter,
-                 faults: FaultPlan | None = None):
+                 faults: FaultPlan | None = None,
+                 tracing: bool = False):
         # explicit None checks: the cache and canonicalizer define __len__,
         # so a freshly shared (still empty) instance is falsy.  The default
         # canonicalizer is the process-wide one repro.api.LambdaSpec
@@ -263,33 +267,27 @@ class PathService:
         self._cv: dict[int, _CvPending] = {}
         self._cv_hold: OrderedDict[int, PathResponse] = OrderedDict()
         self._cv_fold_rids: set[int] = set()
-        self._results_evicted = 0
-        # telemetry
-        self._submitted = 0
-        self._completed = 0
-        self._batches = 0
-        self._flush_fill = 0
-        self._flush_deadline = 0
-        self._flush_forced = 0
-        self._flush_retry = 0
-        self._rejected = 0             # admission rejections (queue capacity)
-        self._validation_rejected = 0  # strict-mode non-finite rejections
-        # the paper's "simple check of the optimality conditions", made
-        # observable: strong-rule violations caught by the KKT repair loop
-        self._kkt_violations = 0
-        # executed ExecutionPlan summaries → batch counts (planner/program
-        # decisions, surfaced through stats() and the serve BENCH rows)
-        self._plans: dict[str, int] = {}
-        # bounded: a long-running service must not accumulate one entry per
-        # request forever — percentiles are over the recent window.  User
-        # latencies and internal CV-fold-fit latencies are tracked apart:
-        # a caller's SLO is measured on what the caller sees, and fold fits
-        # (K per CV request, often faster than user traffic) would skew the
-        # percentiles toward the service's own internal work.
-        self._occupancies: deque = deque(maxlen=4096)
-        self._latencies: deque = deque(maxlen=4096)
-        self._latencies_internal: deque = deque(maxlen=4096)
-        self._padding_ratios: deque = deque(maxlen=4096)
+        # every counter/distribution this service reports lives in ONE
+        # thread-safe registry; stats() is a read-through view over it, so
+        # the dict schema and the incremented numbers cannot drift.
+        # Counters: submitted, completed, batches, rejected,
+        # validation_rejected, results_evicted, flush{trigger=...},
+        # plans{plan=...}, and kkt_violations — the paper's "simple check
+        # of the optimality conditions", made observable: strong-rule
+        # violations caught by the KKT repair loop.  Histograms (bounded
+        # windows — one eviction policy for what used to be ad-hoc deques):
+        # batch_occupancy, padding_ratio, and latency_s split by
+        # scope=user/internal, because a caller's SLO is measured on what
+        # the caller sees and CV fold fits would skew the percentiles
+        # toward the service's own internal work.
+        self.metrics = MetricsRegistry("serve")
+        # opt-in request tracing: when enabled, every admitted request
+        # carries a Trace whose cursor-built spans cover admit → deliver
+        # with no gaps (PathResponse.trace).  Off by default — every
+        # touch-point is guarded by `self._traces` truthiness, so the
+        # disabled cost is one falsy dict check.
+        self.tracing = bool(tracing)
+        self._traces: dict[int, Trace] = {}
 
     # -- admission ----------------------------------------------------------
 
@@ -378,8 +376,7 @@ class PathService:
                 # reject host-side before any padding/compile/device work;
                 # "quarantine" admits instead and the engine's in-graph
                 # health word flags the member (PathResponse.health)
-                with self._lock:
-                    self._validation_rejected += 1
+                self.metrics.inc("validation_rejected")
                 raise ValidationError(issues)
         # canonical tier knob for the group key: the knob is irrelevant to
         # masked programs, "auto" IS 2 under the shared recipe, and an
@@ -444,10 +441,11 @@ class PathService:
         At queue capacity raises :class:`RejectionError` — a
         :class:`QueueFull` subclass carrying the structured
         :class:`Rejection` (``err.rejection``)."""
+        t_in = self._clock()
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            self._submitted += 1
+            self.metrics.inc("submitted")
             if _cv_fold:
                 # register BEFORE admission: admitting can flush this very
                 # group (fill, or a deadline on a neighbour) synchronously,
@@ -460,15 +458,26 @@ class PathService:
                     key, rid, item, now, priority=priority,
                     deadline=self._flush_by(now, deadline_ms))
             except QueueFull as e:
-                self._rejected += 1
+                self.metrics.inc("rejected")
                 self._cv_fold_rids.discard(rid)
                 raise RejectionError(Rejection(
                     rid=rid, reason=str(e), queued=self._batcher.pending(),
                     max_queue=self._batcher.max_queue)) from None
+            self._start_trace(rid, t_in)
             if filled:
                 self._flush_group(key, trigger="fill")
             self._flush_due(now)
             return rid
+
+    def _start_trace(self, rid: int, t_in: float) -> None:
+        """Open a request trace (tracing opt-in only): the "admit" span
+        covers rid assignment, fault hooks and queue insertion.  Must run
+        BEFORE any flush this admission triggers — a fill flush delivers
+        (and closes) the trace synchronously.  Caller holds the lock."""
+        if self.tracing:
+            tr = Trace(rid=rid, t0=t_in)
+            tr.mark("admit", self._clock())
+            self._traces[rid] = tr
 
     def _maybe_corrupt(self, rid: int, item: _Item) -> _Item:
         """Fault-injection "admit" site: a ``nan`` spec poisons this
@@ -553,7 +562,7 @@ class PathService:
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            self._submitted += 1
+            self.metrics.inc("submitted")
             self._cv[rid] = _CvPending(
                 fold_rids=fold_rids, val_indices=vals, X=X, y=y, lam=lam,
                 sigmas=sigmas, family=family, selection=selection)
@@ -615,22 +624,38 @@ class PathService:
             solver_tol=key.solver_tol, max_iter=key.max_iter,
             kkt_tol=key.kkt_tol, max_refits=key.max_refits, working_set=W,
             working_set_top=W2, dtype=key.dtype, y_dtype=key.y_dtype)
+        rids = [p.rid for p in batch]
+        # opt-in tracing: traces for the rids this serve carries (empty
+        # dict when tracing is off — the disabled cost is one falsy check)
+        trs = ([t for t in (self._traces.get(r) for r in rids)
+                if t is not None] if self._traces else [])
+        for t in trs:
+            # the queue span ended when the batcher released the request;
+            # flush covers padding + program-spec assembly
+            t.mark("queue", now)
         pb = pad_batch([(it.item.X, it.item.y, it.item.lam, it.item.sigmas)
                         for it in batch],
                        n_rows=N, n_cols=P, n_slots=self.slots, n_classes=m)
-        rids = [p.rid for p in batch]
         self._faults.fire("compile", rids=rids)
+        for t in trs:
+            t.mark("flush", self._clock(), trigger=trigger,
+                   slots=self.slots, batch=pb.n_batch)
         prog, hit = self.cache.get(spec)
+        for t in trs:
+            t.mark("compile", self._clock(), hit=hit, program=spec.short())
         t0 = self._clock()
         self._faults.fire("worker", rids=rids)
-        out = prog(pb.Xs, pb.ys, pb.lam, pb.sigmas, pb.p_valid)
-        stats = None
-        if W is not None:
-            out, stats = out
-        ep = EnginePath(*(np.asarray(a) for a in out))
-        if stats is not None:
-            stats = CompactStats(*(np.asarray(a) for a in stats))
+        with annotate(f"repro.serve.execute/{spec.short()}"):
+            out = prog(pb.Xs, pb.ys, pb.lam, pb.sigmas, pb.p_valid)
+            stats = None
+            if W is not None:
+                out, stats = out
+            ep = EnginePath(*(np.asarray(a) for a in out))
+            if stats is not None:
+                stats = CompactStats(*(np.asarray(a) for a in stats))
         wall = self._clock() - t0
+        for t in trs:
+            t.mark("execute", self._clock(), solve_ms=round(wall * 1e3, 3))
         B_real = pb.n_batch
         # grow-on-overflow through the same helper (and the same registry)
         # fit_path_batched(working_set="auto") uses
@@ -641,13 +666,10 @@ class PathService:
         occupancy = B_real / self.slots
         plan_summary = spec.plan().summary()
         with self._lock:
-            self._batches += 1
-            self._plans[plan_summary] = self._plans.get(plan_summary, 0) + 1
-            self._occupancies.append(occupancy)
-            counter = {"fill": "_flush_fill", "deadline": "_flush_deadline",
-                       "forced": "_flush_forced", "retry": "_flush_retry"
-                       }[trigger]
-            setattr(self, counter, getattr(self, counter) + 1)
+            self.metrics.inc("batches")
+            self.metrics.inc("plans", plan=plan_summary)
+            self.metrics.observe("batch_occupancy", occupancy)
+            self.metrics.inc("flush", trigger=trigger)
             for i, pending in enumerate(batch):
                 item = pending.item
                 n_i, p_i = item.X.shape
@@ -673,25 +695,38 @@ class PathService:
                     batch_size=B_real, batch_occupancy=occupancy,
                     padding_ratio=pad_ratio, cache_hit=hit,
                     health=ep.health[i])
-                self._padding_ratios.append(pad_ratio)
+                self.metrics.observe("padding_ratio", pad_ratio)
+                if trs:
+                    t = self._traces.get(pending.rid)
+                    if t is not None:
+                        t.mark("harvest", self._clock(),
+                               padding_ratio=round(pad_ratio, 3))
                 self._deliver(pending.rid, resp)
 
     def _record_latency(self, rid: int, resp: PathResponse) -> None:
         """Queue+solve latency, routed to the user-facing or the internal
         (CV-fold-fit) window — percentiles must measure what a caller sees."""
         lat = resp.queue_s + resp.solve_s
-        if rid in self._cv_fold_rids:
-            self._latencies_internal.append(lat)
-        else:
-            self._latencies.append(lat)
+        scope = "internal" if rid in self._cv_fold_rids else "user"
+        self.metrics.observe("latency_s", lat, scope=scope)
+
+    def _finish_trace(self, rid: int, resp: PathResponse) -> None:
+        """Close and attach the request's trace (the final "deliver" span)."""
+        if not self._traces:
+            return
+        tr = self._traces.pop(rid, None)
+        if tr is not None:
+            tr.mark("deliver", self._clock())
+            resp.trace = tr
 
     def _deliver(self, rid: int, resp: PathResponse) -> None:
         """Hand one finished response over for collection (``poll`` here;
         the async subclass overrides this to resolve the request's future).
         Caller holds ``self._lock``."""
-        self._completed += 1
-        self._kkt_violations += int(resp.n_violations.sum())
+        self.metrics.inc("completed")
+        self.metrics.inc("kkt_violations", int(resp.n_violations.sum()))
         self._record_latency(rid, resp)
+        self._finish_trace(rid, resp)
         if rid in self._cv_fold_rids:
             self._store(self._cv_hold, rid, resp)
         else:
@@ -704,7 +739,7 @@ class PathService:
             # an evicted fold orphans its CV request; drop the membership
             # so the set cannot grow unboundedly with abandoned folds
             self._cv_fold_rids.discard(old)
-            self._results_evicted += 1
+            self.metrics.inc("results_evicted")
 
     # -- collection ---------------------------------------------------------
 
@@ -735,7 +770,7 @@ class PathService:
                                   cv.family)
         mean, se, best_min, best_1se = cv_select(val_dev)
         best = best_1se if cv.selection == "1se" else best_min
-        self._completed += 1
+        self.metrics.inc("completed")
         return CvResponse(
             rid=rid, sigmas=cv.sigmas, lam=cv.lam, val_deviance=val_dev,
             mean_val_deviance=mean, se_val_deviance=se, best_index=best,
@@ -771,45 +806,48 @@ class PathService:
 
     def stats(self) -> dict:
         """Service-level telemetry: throughput, occupancy, latency
-        percentiles, cache and bucket-registry counters."""
+        percentiles, cache and bucket-registry counters.
+
+        A read-through view over :attr:`metrics` (the unified
+        :class:`repro.obs.MetricsRegistry`) — the key schema is pinned by
+        ``tests/test_obs.py`` and the async override is a strict superset."""
+        m = self.metrics
         with self._lock:
-            lat = np.asarray(self._latencies) * 1e3
-            lat_int = np.asarray(self._latencies_internal) * 1e3
-            occ = np.asarray(self._occupancies)
-            pads = np.asarray(self._padding_ratios)
+            lat = m.histogram("latency_s", scope="user")
+            lat_int = m.histogram("latency_s", scope="internal")
+            occ = m.histogram("batch_occupancy")
+            pads = m.histogram("padding_ratio")
             return {
-                "submitted": self._submitted,
-                "completed": self._completed,
+                "submitted": m.value("submitted"),
+                "completed": m.value("completed"),
                 "pending": self._batcher.pending() + len(self._cv),
                 "unclaimed": len(self._done) + len(self._cv_hold),
-                "results_evicted": self._results_evicted,
-                "batches": self._batches,
-                "flush_fill": self._flush_fill,
-                "flush_deadline": self._flush_deadline,
-                "flush_forced": self._flush_forced,
-                "flush_retry": self._flush_retry,
-                "rejected": self._rejected,
-                "validation_rejected": self._validation_rejected,
-                "kkt_violations": self._kkt_violations,
+                "results_evicted": m.value("results_evicted"),
+                "batches": m.value("batches"),
+                "flush_fill": m.value("flush", trigger="fill"),
+                "flush_deadline": m.value("flush", trigger="deadline"),
+                "flush_forced": m.value("flush", trigger="forced"),
+                "flush_retry": m.value("flush", trigger="retry"),
+                "rejected": m.value("rejected"),
+                "validation_rejected": m.value("validation_rejected"),
+                "kkt_violations": m.value("kkt_violations"),
                 "max_queue": self._batcher.max_queue,
                 "faults": self._faults.stats() if self._faults.active()
                           else None,
                 "slots": self.slots,
-                "occupancy_mean": float(occ.mean()) if occ.size else 0.0,
-                "padding_ratio_mean": float(pads.mean()) if pads.size else 0.0,
+                "occupancy_mean": occ.mean(),
+                "padding_ratio_mean": pads.mean(),
                 # user-facing requests only — internal CV fold fits are
                 # reported apart so SLO rows measure what a caller sees
-                "latency_ms_p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
-                "latency_ms_p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
-                "latency_count": int(lat.size),
-                "internal_latency_ms_p50": (float(np.percentile(lat_int, 50))
-                                            if lat_int.size else 0.0),
-                "internal_latency_ms_p95": (float(np.percentile(lat_int, 95))
-                                            if lat_int.size else 0.0),
-                "internal_latency_count": int(lat_int.size),
+                "latency_ms_p50": lat.percentile(50) * 1e3,
+                "latency_ms_p95": lat.percentile(95) * 1e3,
+                "latency_count": lat.retained,
+                "internal_latency_ms_p50": lat_int.percentile(50) * 1e3,
+                "internal_latency_ms_p95": lat_int.percentile(95) * 1e3,
+                "internal_latency_count": lat_int.retained,
                 "cache": self.cache.stats(),
                 # executed ExecutionPlan summaries → batch counts: the
                 # planner/program decisions behind the numbers above
-                "plans": dict(self._plans),
+                "plans": m.label_values("plans", "plan"),
                 "ws_buckets": _WS_BUCKETS.summary(),
             }

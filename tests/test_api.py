@@ -73,7 +73,8 @@ EXPECTED_FIELDS = {
                "cv_folds", "stratify", "selection"],
     SolverPolicy: ["backend", "working_set", "ws_tiers", "pad", "screening",
                    "solver_tol", "max_iter", "kkt_tol", "max_refits",
-                   "verbose", "deadline_ms", "priority", "validate"],
+                   "verbose", "deadline_ms", "priority", "validate",
+                   "telemetry"],
     ExecutionPlan: ["backend", "mode", "batch", "n", "p", "working_set",
                     "ws_tiers", "pad", "exec_shape", "screening", "device",
                     "reasons"],
@@ -114,6 +115,8 @@ def test_spec_validation_errors():
         SolverPolicy(priority=1.5)
     with pytest.raises(ValueError):
         SolverPolicy(priority=True)
+    with pytest.raises(ValueError):
+        SolverPolicy(telemetry="verbose")
 
 
 def test_planner_routes_slo_knobs_to_serve():

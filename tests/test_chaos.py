@@ -97,11 +97,11 @@ def test_poison_request_isolated_cohort_of_8(shared_cache, reference):
     # must walk the cohort down to the single poisoned request
     plan = FaultPlan([FaultSpec(site="worker", kind="error", rid=poison,
                                 times=10_000, message="poisoned request")])
-    svc = _asvc(shared_cache, faults=plan, retry_limit=1)
+    svc = _asvc(shared_cache, faults=plan, retry_limit=1, tracing=True)
     try:
         futs = _serve_all(svc, PROBLEMS)
         assert futs[poison].rid == poison
-        with pytest.raises(InjectedFault):
+        with pytest.raises(InjectedFault) as ei:
             futs[poison].result(timeout=180)
         got = [f.result(timeout=180) for i, f in enumerate(futs)
                if i != poison]
@@ -113,12 +113,25 @@ def test_poison_request_isolated_cohort_of_8(shared_cache, reference):
     assert stats["retries"] >= 1
     assert stats["bisections"] >= 1
     assert stats["completed"] == 7
-    # innocents: maxdiff == 0 against the unfaulted run
+    # the poisoned request's timeline rides on the exception: the recovery
+    # history (retry + bisection child spans) ends at a "poisoned" mark
+    ptr = ei.value.trace
+    assert ptr is not None and ptr.rid == poison
+    child_names = [s.name for s in ptr.children()]
+    assert "retry" in child_names
+    assert "bisect" in child_names
+    assert ptr.span_names()[-1] == "poisoned"
+    assert ptr.well_parented()
+    # innocents: maxdiff == 0 against the unfaulted run — tracing observes,
+    # never perturbs — and each carries a gap-free admit→deliver timeline
     want = [r for i, r in enumerate(reference) if i != poison]
     for g, w in zip(got, want):
         np.testing.assert_array_equal(g.betas, w.betas)
         np.testing.assert_array_equal(g.deviance, w.deviance)
         np.testing.assert_array_equal(g.sigmas, w.sigmas)
+        assert g.trace is not None and g.trace.contiguous()
+        assert g.trace.span_names()[0] == "admit"
+        assert g.trace.span_names()[-1] == "deliver"
 
 
 # ---------------------------------------------------------------------------

@@ -315,7 +315,8 @@ def test_latency_split_user_vs_internal(shared_cache):
 def test_threaded_stress_no_lost_or_duplicate_responses(shared_cache):
     n_threads, per_thread = 4, 6
     asvc = _asvc(shared_cache, max_batch=4, max_delay=0.002,
-                 max_queue=None)  # unbounded: every submit must complete
+                 max_queue=None,  # unbounded: every submit must complete
+                 tracing=True)    # every response must carry a full timeline
     results: dict[int, object] = {}
     res_lock = threading.Lock()
     errors: list[BaseException] = []
@@ -356,6 +357,15 @@ def test_threaded_stress_no_lost_or_duplicate_responses(shared_cache):
         assert st["pending"] == 0
         cache_stats = asvc.cache.stats()
         assert cache_stats["hits"] + cache_stats["misses"] >= 2
+        # under 4-thread contention every trace is still per-request
+        # coherent: gap-free admit→deliver, children parented in order
+        for resp in results.values():
+            tr = resp.trace
+            assert tr is not None and tr.rid == resp.rid
+            names = tr.span_names()
+            assert names[0] == "admit" and names[-1] == "deliver"
+            assert tr.contiguous(), names
+            assert tr.well_parented()
         assert time.monotonic() - t0 < 180
     finally:
         asvc.close()
