@@ -24,6 +24,9 @@ Default sizes are scaled to finish on this CPU-only container in minutes;
                        of 8 → availability ≥ 7/8, innocents bit-identical to
                        the unfaulted run, bounded recovery latency; transient
                        faults absorbed by retry; NaN poison quarantined
+  resample             materialize-free replicates: O(n·p + B·n) fused state
+                       vs O(B·n·p) materialized, replicates/sec at B ∈
+                       {8, 64, 256} against the materialized batched baseline
 """
 
 from __future__ import annotations
@@ -879,6 +882,89 @@ def serve_chaos(full: bool):
         f"innocents_maxdiff={diff_q:.1f} poisoned={st_q['poisoned']}")
 
 
+def resample(full: bool):
+    """ISSUE 9 acceptance: materialize-free replicates vs the materialized
+    baseline.
+
+    One shared (n, p) design + a (B, n) weight matrix replaces B row-
+    duplicated (n, p) copies.  Two row families per B ∈ {8, 64, 256}:
+
+    * ``mem`` — replicate-state bytes, fused O(n·p + B·n) vs materialized
+      O(B·n·p), at the acceptance config n=80, p=2048 (analytic: both
+      layouts are fully determined by the shapes).
+    * ``fit`` — measured replicates/sec of the weight-fused engine at that
+      config, with the materialized batched engine timed at B=8 as the
+      baseline (its per-replicate cost is B-independent; materializing
+      B=256 costs 256·80·2048·8 B ≈ 335 MB and is exactly what this
+      subsystem exists to avoid).
+    """
+    from repro.core import bh_sequence, ols
+    from repro.core.engine import _fit_path_batched, null_sigma_grid
+    from repro.resample import ResamplePlan
+
+    n, p = (80, 2048) if not full else (200, 8192)
+    L = 4
+    X, y, _ = make_regression(n, p, k=8, rho=0.2, seed=7)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    sigmas = np.asarray(null_sigma_grid(X, y, lam, ols,
+                                        path_length=L, sigma_ratio=None))
+    kw = dict(sigmas=sigmas, solver_tol=1e-5, max_iter=500,
+              screening="strong")
+    itemsize = X.dtype.itemsize
+
+    # -- materialized baseline, B=8: per-replicate cost is B-independent --
+    B0 = 8
+    plan0 = ResamplePlan(kind="bootstrap", n_replicates=B0, seed=1)
+    idx0 = plan0.replicate_indices(n)
+    Xs = np.stack([X[i] for i in idx0])
+    ys = np.stack([y[i] for i in idx0])
+
+    def mat_fit():
+        jax.block_until_ready(
+            _fit_path_batched(Xs, ys, lam, ols, **kw).betas)
+
+    t_mat = bench_best(mat_fit, repeats=3)
+    per_rep_mat = t_mat / B0
+    row(f"resample/fit_materialized_B{B0}_n{n}_p{p}", t_mat * 1e6,
+        f"replicates_per_s={B0 / t_mat:.2f} "
+        f"bytes={B0 * n * p * itemsize}")
+
+    from repro.core.engine import _fit_replicate_batched
+
+    for B in (8, 64, 256):
+        fused_bytes = n * p * itemsize + B * n * itemsize
+        mat_bytes = B * n * p * itemsize
+        row(f"resample/mem_B{B}_n{n}_p{p}", 0.0,
+            f"fused_bytes={fused_bytes} materialized_bytes={mat_bytes} "
+            f"ratio={mat_bytes / fused_bytes:.1f}x")
+
+        plan = ResamplePlan(kind="bootstrap", n_replicates=B, seed=1)
+        W = np.asarray(plan.row_weights(n, dtype=jnp.float64))
+
+        def fused_fit():
+            jax.block_until_ready(
+                _fit_replicate_batched(X, y, lam, ols, W, **kw).betas)
+
+        if B == B0:
+            t_f = bench_best(fused_fit, repeats=3)
+            note = ""
+        else:
+            # large-B rows are minutes-scale on the CI CPU: one execution
+            # (compile included — it is <5% of the row) keeps the sweep
+            # inside the bench-smoke budget while still proving the
+            # B=256 acceptance config runs without materializing
+            t0 = time.perf_counter()
+            fused_fit()
+            t_f = time.perf_counter() - t0
+            note = " single_run_incl_compile=1"
+        row(f"resample/fit_fused_B{B}_n{n}_p{p}", t_f * 1e6,
+            f"replicates_per_s={B / t_f:.2f} "
+            f"est_materialized_s={per_rep_mat * B:.3f} "
+            f"speedup_vs_materialized={per_rep_mat * B / t_f:.2f}x{note}")
+        metric(f"resample/replicates_per_s_B{B}", B / t_f,
+               f"fused n={n} p={p} L={L}")
+
+
 def resolve_only(spec: str) -> list[str]:
     """Parse ``--only``'s comma list: strip whitespace, drop empty items,
     dedupe preserving first-seen order, and reject unknown sweep names with
@@ -912,6 +998,7 @@ BENCHES = {
     "serve": serve,
     "serve_async": serve_async,
     "serve_chaos": serve_chaos,
+    "resample": resample,
 }
 
 

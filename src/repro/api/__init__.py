@@ -20,6 +20,7 @@ kwargs keep working bit-identically and warn once per knob (see
 ``docs/MIGRATION.md`` for the mapping).
 """
 
+from ..resample import ResamplePlan
 from .estimator import SlopE
 from .fit import default_async_service, default_service, slope_path
 from .plan import ExecutionPlan, plan_execution
@@ -39,6 +40,7 @@ __all__ = [
     "LambdaSpec",
     "PathSpec",
     "SolverPolicy",
+    "ResamplePlan",
     "ValidationError",
     "ExecutionPlan",
     "plan_execution",

@@ -31,6 +31,8 @@ from __future__ import annotations
 
 import threading
 
+import numpy as np
+
 from .plan import ExecutionPlan, plan_execution
 from .specs import (
     PathSpec,
@@ -38,6 +40,7 @@ from .specs import (
     SolverPolicy,
     ValidationError,
     apply_weights,
+    check_weights,
     find_nonfinite,
 )
 
@@ -117,7 +120,22 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
         # the service enforces policy.validate at admission
         return _serve_path(problem, path, policy, pln)
 
-    X, y = apply_weights(problem)
+    if path.resample is not None:
+        return _resample_path(problem, path, policy, pln)
+
+    # weighted single problems on the device engines ride the replicate
+    # row-weight path (B = 1) instead of materialising √w·X — the same
+    # code path weighted replicates use (one weighting seam, satellite of
+    # the resample subsystem); host/CV/padded routes keep the exact
+    # √w-scaling reduction
+    rw = None
+    if (problem.weights is not None and pln.backend == "device"
+            and not path.cv_folds and not problem.batched
+            and pln.pad != "bucket"):
+        rw = check_weights(problem)
+        X, y = np.asarray(problem.X), np.asarray(problem.y)
+    else:
+        X, y = apply_weights(problem)
     family = problem.family
     n, p, m = problem.n, problem.p, family.n_classes
     lam = path.lam.resolve(p * m, n=n)
@@ -162,6 +180,24 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
                                 ws_tiers=policy.ws_tiers,
                                 pad=pln.pad, telemetry=policy.telemetry,
                                 **kw)
+    elif rw is not None:
+        # single weighted problem on a device engine: a 1-member replicate
+        # batch against the shared design (no √w·X materialisation)
+        from ..core.engine import _fit_replicate_batched, null_sigma_grid
+
+        if kw["sigmas"] is None:
+            # the σ grid must see the weighted problem — same statistics
+            # the √w-scaled host reference derives its grid from
+            sw = np.sqrt(rw)
+            kw["sigmas"] = null_sigma_grid(
+                X * sw[:, None], y * sw, lam, family,
+                path_length=path.path_length, sigma_ratio=path.sigma_ratio)
+        batched = _fit_replicate_batched(X, y, lam, family, rw[None, :],
+                                         max_refits=policy.max_refits,
+                                         working_set=_ws_arg(pln, policy),
+                                         ws_tiers=policy.ws_tiers,
+                                         telemetry=policy.telemetry, **kw)
+        res = batched.path_results(early_stop=path.early_stop)[0]
     elif pln.mode == "masked":
         # identical call path to the legacy fit_path(engine="device")
         res = _fit_path_device(X, y, lam, family, early_stop=path.early_stop,
@@ -176,6 +212,65 @@ def slope_path(problem: Problem, path: PathSpec | None = None,
                                     telemetry=policy.telemetry, **kw)
         res = batched.path_results(early_stop=path.early_stop)[0]
     res.plan = pln
+    return res
+
+
+def _resample_path(problem: Problem, path: PathSpec, policy: SolverPolicy,
+                   pln: ExecutionPlan):
+    """Fit the B-replicate weight-fused batch a :class:`ResamplePlan` asks
+    for: one shared (n, p) design, per-member row weights, one compiled
+    program.  Returns a :class:`~repro.core.engine.BatchedPathResult` over
+    the replicates with ``.plan`` and ``.resample`` attached."""
+    from ..core.engine import _fit_replicate_batched, null_sigma_grid
+    from ..resample.metrics import RESAMPLE_METRICS
+
+    rs = path.resample
+    X = np.asarray(problem.X)
+    y = np.asarray(problem.y)
+    family = problem.family
+    n, p, m = problem.n, problem.p, family.n_classes
+    lam = path.lam.resolve(p * m, n=n)
+    if getattr(lam, "ndim", 1) != 1:
+        raise ValueError(
+            "replicates share ONE design, so they share one (p·m,) λ "
+            f"sequence; got a per-problem stack of shape {lam.shape}")
+    if policy.validate == "strict":
+        issues = find_nonfinite(X=X, y=y, lam=lam, sigmas=path.sigmas,
+                                weights=problem.weights)
+        if issues:
+            raise ValidationError(issues)
+
+    W = np.asarray(rs.row_weights(n, dtype=X.dtype))
+    if problem.weights is not None:
+        # weighted resampling: the member weight is w ⊙ c_b — exactly the
+        # weighted loss of the member's resampled rows (OLS-only gate,
+        # same messages as every other weighted route)
+        W = W * check_weights(problem)[None, :]
+    sigmas = path.sigmas
+    if sigmas is None:
+        sigmas = null_sigma_grid(X, y, lam, family,
+                                 path_length=path.path_length,
+                                 sigma_ratio=path.sigma_ratio)
+    sigmas = np.asarray(sigmas)
+    y_fit = np.asarray(rs.permuted_targets(y)) if rs.kind == "permutation" \
+        else y
+
+    RESAMPLE_METRICS.set_gauge("replicates_in_flight", rs.n_replicates,
+                               kind=rs.kind)
+    RESAMPLE_METRICS.inc("replicates", rs.n_replicates, kind=rs.kind,
+                         backend=pln.mode)
+    try:
+        res = _fit_replicate_batched(
+            X, y_fit, lam, family, W,
+            screening=policy.screening, sigmas=sigmas,
+            solver_tol=policy.solver_tol, max_iter=policy.max_iter,
+            kkt_tol=policy.kkt_tol, max_refits=policy.max_refits,
+            working_set=_ws_arg(pln, policy), ws_tiers=policy.ws_tiers,
+            telemetry=policy.telemetry)
+    finally:
+        RESAMPLE_METRICS.set_gauge("replicates_in_flight", 0, kind=rs.kind)
+    res.plan = pln
+    res.resample = rs
     return res
 
 

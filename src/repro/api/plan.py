@@ -144,6 +144,24 @@ def plan_execution(problem: Problem, path: PathSpec | None = None,
             f"{path.cv_folds}-fold CV: {B} equal-shape training designs of "
             f"{n_fit}×{p} batch into one compiled program")
 
+    rs = path.resample
+    if rs is not None:
+        if batched:
+            raise ValueError(
+                "resampling takes a single (n, p) problem — the replicate "
+                "axis IS the batch axis (B members share one design)")
+        if policy.backend == "host":
+            raise ValueError(
+                "resampling runs all replicates as ONE weight-fused device "
+                "program against the shared design; backend='host' cannot "
+                "execute a ResamplePlan — use 'auto', 'masked', 'compact' "
+                "or 'serve'")
+        B, batched = rs.n_replicates, True
+        reasons.append(
+            f"{rs.kind} resampling: B={B} replicates share ONE {n}×{p} "
+            f"design via per-member row weights (O(n·p + B·n) memory, "
+            f"no (B, n, p) materialization)")
+
     serve = policy.backend == "serve"
 
     # -- SLO knobs route through the serving layer --------------------------
@@ -174,6 +192,11 @@ def plan_execution(problem: Problem, path: PathSpec | None = None,
             "the serving layer always executes at canonical bucket shapes; "
             "SolverPolicy(pad=None) cannot be honoured with "
             "backend='serve' — use pad='auto' or 'bucket'")
+    if rs is not None and not serve and pad == "bucket":
+        raise ValueError(
+            "direct replicate execution runs at the shared design's native "
+            "shape (the weights are O(B·n) — there is nothing to bucket); "
+            "pad='bucket' with a ResamplePlan requires backend='serve'")
     exec_shape = None
     n_key, p_key = n_fit, p
     if pad == "bucket":

@@ -42,6 +42,7 @@ from ..core.solver import (
     DEFAULT_PATH_TOL,
     DEFAULT_WS_TIERS,
 )
+from ..resample.plans import ResamplePlan
 from ..serve.batcher import LambdaCanonicalizer, lambda_kinds
 
 __all__ = [
@@ -52,6 +53,7 @@ __all__ = [
     "ValidationError",
     "as_lambda_spec",
     "apply_weights",
+    "check_weights",
     "find_nonfinite",
     "shared_canonicalizer",
 ]
@@ -170,18 +172,15 @@ class Problem:
         return _shape_of(self.X)[-1]
 
 
-def apply_weights(problem: Problem):
-    """Materialise ``problem.weights`` into transformed ``(X, y)`` arrays.
+def check_weights(problem: Problem) -> np.ndarray:
+    """Validate ``problem.weights`` and return them as an (n,) array.
 
-    OLS only: ``0.5·Σ wᵢ(xᵢβ − yᵢ)²`` is exactly the unweighted loss on
-    ``(√w·X, √w·y)``, so the whole path stack (screening, KKT, deviances)
-    applies unchanged to the scaled data.  Returns ``(X, y)`` untouched when
-    no weights are set.
+    The ONE admission gate every weighted execution route shares — the
+    √w-scaling host path, the device per-member row-weight path, and
+    weighted resampling — so they reject identically: OLS only (no exact
+    reduction exists for the other GLM losses), strictly positive.
     """
     X = np.asarray(problem.X)
-    y = np.asarray(problem.y)
-    if problem.weights is None:
-        return X, y
     if problem.family.name != "ols":
         raise ValueError(
             "sample weights are currently supported for the OLS family only "
@@ -190,7 +189,24 @@ def apply_weights(problem: Problem):
     w = np.asarray(problem.weights, dtype=X.dtype)
     if (w <= 0).any():
         raise ValueError("sample weights must be strictly positive")
-    sw = np.sqrt(w)
+    return w
+
+
+def apply_weights(problem: Problem):
+    """Materialise ``problem.weights`` into transformed ``(X, y)`` arrays.
+
+    OLS only: ``0.5·Σ wᵢ(xᵢβ − yᵢ)²`` is exactly the unweighted loss on
+    ``(√w·X, √w·y)``, so the whole path stack (screening, KKT, deviances)
+    applies unchanged to the scaled data.  Returns ``(X, y)`` untouched when
+    no weights are set.  This is the *host/batched* weighting route; the
+    device engines instead thread ``check_weights`` output through the
+    replicate row-weight path (no X copy — see ``repro.resample``).
+    """
+    X = np.asarray(problem.X)
+    y = np.asarray(problem.y)
+    if problem.weights is None:
+        return X, y
+    sw = np.sqrt(check_weights(problem))
     return (X * sw.reshape((1,) * (X.ndim - 2) + (-1, 1)),
             y * sw.reshape((1,) * (y.ndim - 1) + (-1,)))
 
@@ -248,7 +264,11 @@ def as_lambda_spec(lam) -> LambdaSpec:
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class PathSpec:
-    """What path to fit: penalty, σ grid, early stop, and the CV block."""
+    """What path to fit: penalty, σ grid, early stop, the CV block, and the
+    resampling block (``resample`` is a
+    :class:`~repro.resample.ResamplePlan`: the path is then fit B times
+    against the ONE shared design with per-member row weights — bootstrap /
+    permutation / subsample replicates, see ``repro.resample``)."""
 
     lam: Any = LambdaSpec()
     path_length: int = 100
@@ -258,6 +278,7 @@ class PathSpec:
     cv_folds: int | None = None
     stratify: Any = "auto"
     selection: str = "min"
+    resample: ResamplePlan | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "lam", as_lambda_spec(self.lam))
@@ -266,6 +287,16 @@ class PathSpec:
                 f"selection must be 'min' or '1se', got {self.selection!r}")
         if self.cv_folds is not None and self.cv_folds < 2:
             raise ValueError(f"cv_folds must be ≥ 2, got {self.cv_folds}")
+        if self.resample is not None:
+            if not isinstance(self.resample, ResamplePlan):
+                raise ValueError(
+                    f"resample must be a repro.resample.ResamplePlan, got "
+                    f"{type(self.resample).__name__}")
+            if self.cv_folds is not None:
+                raise ValueError(
+                    "resample and cv_folds are mutually exclusive: fold "
+                    "geometry and replicate weighting both own the batch "
+                    "axis — run them as separate fits")
 
 
 _BACKENDS = ("auto", "host", "masked", "compact", "serve")

@@ -56,6 +56,7 @@ from .solver import (
     default_L0,
     fista_compact,
     fista_masked,
+    fista_shared_masked,
 )
 
 __all__ = [
@@ -72,6 +73,8 @@ __all__ = [
     "compact_path_engine",
     "chunk_path_engine",
     "path_init_engine",
+    "replicate_path_engine",
+    "replicate_compact_path_engine",
     "fit_path_batched",
     "grow_ws_bucket",
     "resolve_ws_tiers",
@@ -249,7 +252,7 @@ def _new_violations(viol_flat, strong_p, prev_active, *, p, m, screening):
 
 
 def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
-                  kkt_tol, max_refits):
+                  kkt_tol, max_refits, rw=None, shared_x=False):
     """Build the per-σ-point path step for ONE problem.
 
     Returns ``step(carry, sigs, p_valid) -> (carry, out)`` with carry
@@ -272,15 +275,28 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
     With zeroed data and a blanked working set the quarantined solve exits
     in one iteration — the same blanked-solve trick the two-tier mixed arm
     and the chunked engine's dead steps use.
+
+    ``rw`` (optional, (n,)) is a per-member row-weight vector: the solves
+    minimise the reweighted loss Σ wᵢℓᵢ — the count-vector representation
+    of a bootstrap replicate, and the row-weight form of OLS sample
+    weights.  ``shared_x=True`` marks X as a batch-shared operand (the
+    replicate engine vmaps this builder with ``in_axes=None`` on X): the
+    quarantine gate then zeroes the member's WEIGHTS instead of the data —
+    ``jnp.where`` on a shared X would materialize a per-member copy — and
+    the masked solves route through :func:`fista_shared_masked` (gradient
+    masking) for the same reason.  Zero weights make every row inert, so
+    the blanked-solve quarantine trick carries over unchanged.
     """
     p = X.shape[1]
     m = family.n_classes
     dtype = X.dtype
     lam = lam.astype(dtype)
+    if shared_x and rw is None:
+        raise ValueError("shared_x=True requires row weights (rw)")
     # loop-invariant health inputs, hoisted by XLA out of the scan: the
     # divergence bound from the null deviance, and whether λ itself is sick
     null_dev_in = family.loss(X, y, jnp.zeros((p,) if m == 1 else (p, m),
-                                              dtype))
+                                              dtype), weights=rw)
     dev_bound = _DIVERGENCE_FACTOR * (jnp.abs(null_dev_in) + 1.0)
     lam_bad = ~jnp.all(jnp.isfinite(lam))
 
@@ -290,18 +306,20 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
     def lift(b):  # family shape -> (p, m)
         return b[:, None] if m == 1 else b
 
-    def solve(Xs, ys, E, lam_next, beta, L):
+    def solve(Xs, ys, E, lam_next, beta, L, rws=None):
         # The stack PAVA prox is a p·m-length sequential loop — under vmap
         # every batch member pays the slowest member's pooling in lockstep.
         # The sweep-merging prox is a handful of dense ops per sweep, so it
         # batches with near-perfect efficiency.  L is the curvature estimate
         # carried from the previous solve — device-resident state the host
         # driver cannot keep, which skips the backtracking ramp-up.
-        res = fista_masked(Xs, ys, lam_next, fam_shape(beta), E, family,
-                           max_iter=max_iter, tol=tol,
-                           prox_method="parallel", L0=L)
+        masked = fista_shared_masked if shared_x else fista_masked
+        res = masked(Xs, ys, lam_next, fam_shape(beta), E, family,
+                     max_iter=max_iter, tol=tol,
+                     prox_method="parallel", L0=L, weights=rws)
         beta_new = lift(res.beta)
-        grad = lift(family.gradient(Xs, ys, fam_shape(beta_new)))
+        grad = lift(family.gradient(Xs, ys, fam_shape(beta_new),
+                                    weights=rws))
         return beta_new, grad, res.iters.astype(jnp.int32), res.L
 
     count_viol = functools.partial(_new_violations, p=p, m=m,
@@ -317,9 +335,15 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
         # quarantine gate: a member already sick runs this step on zeroed
         # data, zeroed carry and an empty working set — a one-iteration
         # no-op solve.  All selects are value-identity when sick is False.
+        # With a shared X the member's row WEIGHTS are zeroed instead of
+        # the data (a where() on shared X would materialize a per-member
+        # copy under vmap); zero weights make every row inert, so the
+        # blanked solve still exits in one iteration.
         sick = health != 0
-        Xq = jnp.where(sick, jnp.zeros((), dtype), X)
+        Xq = X if shared_x else jnp.where(sick, jnp.zeros((), dtype), X)
         yq = jnp.where(sick, jnp.zeros((), y.dtype), y)
+        rwq = (None if rw is None
+               else jnp.where(sick, jnp.zeros((), rw.dtype), rw))
         beta = jnp.where(sick, 0, beta)
         grad = jnp.where(sick, 0, grad)
         prev_active = prev_active & ~sick
@@ -338,7 +362,8 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
         strong_p = strong_p & ~sick
         n_screened = jnp.where(sick, 0, n_screened)
 
-        beta1, grad1, it1, L1 = solve(Xq, yq, E0, lam_next, beta, L_carry)
+        beta1, grad1, it1, L1 = solve(Xq, yq, E0, lam_next, beta, L_carry,
+                                      rwq)
 
         if screening == "none":
             beta_f, grad_f, L_f = beta1, grad1, L1
@@ -362,7 +387,7 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
 
             def body(s):
                 beta2, grad2, it2, L2 = solve(Xq, yq, s["E"], lam_next,
-                                              s["beta"], s["L"])
+                                              s["beta"], s["L"], rwq)
                 viol2, checked2 = kkt_check(grad2, lam_next, s["E"],
                                             strong_p, s["checked"])
                 return dict(
@@ -381,7 +406,7 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
             iters = state["iters"]
             unrepaired = state["has_viol"]  # loop exited on the refit cap
 
-        dev = family.loss(Xq, yq, fam_shape(beta_f))
+        dev = family.loss(Xq, yq, fam_shape(beta_f), weights=rwq)
         # health detection: non-finite σ/λ inputs, non-finite solver state,
         # objective divergence.  Sticky — once sick, always sick.
         bad_input = lam_bad | ~(jnp.isfinite(sig_prev) & jnp.isfinite(sig))
@@ -411,23 +436,24 @@ def _step_builder(X, y, lam, family: Family, screening, max_iter, tol,
     return step
 
 
-def _init_state(X, y, family: Family):
+def _init_state(X, y, family: Family, rw=None):
     """Null-model start state for one problem: ``(beta0, grad0, active0,
     L0, health0)`` plus the null deviance — exactly the pre-scan
     computation :func:`_engine` performs, factored out so the chunked
     engine's prefill is bitwise the same.  ``health0`` is nonzero when the
     inputs are already sick at the null model (non-finite X/y poison the
     null gradient, deviance or Lipschitz estimate) — the member is then
-    quarantined from its very first step."""
+    quarantined from its very first step.  ``rw`` (optional, (n,)) seeds
+    the state of the row-reweighted problem (replicates / OLS weights)."""
     p = X.shape[1]
     m = family.n_classes
     dtype = X.dtype
     zeros = jnp.zeros((p, m), dtype)
     fam0 = zeros[:, 0] if m == 1 else zeros
-    grad0 = family.gradient(X, y, fam0)
+    grad0 = family.gradient(X, y, fam0, weights=rw)
     grad0 = grad0[:, None] if m == 1 else grad0
-    null_dev = family.loss(X, y, fam0)
-    L_init = default_L0(X, family).astype(dtype)
+    null_dev = family.loss(X, y, fam0, weights=rw)
+    L_init = default_L0(X, family, rw).astype(dtype)
     finite0 = (jnp.all(jnp.isfinite(grad0)) & jnp.isfinite(null_dev)
                & jnp.isfinite(L_init))
     health0 = jnp.where(finite0, jnp.int32(HEALTH_OK),
@@ -436,12 +462,13 @@ def _init_state(X, y, family: Family):
 
 
 def _engine(X, y, lam, sigmas, family: Family, screening, max_iter, tol,
-            kkt_tol, max_refits, p_valid=None) -> EnginePath:
+            kkt_tol, max_refits, p_valid=None, rw=None,
+            shared_x=False) -> EnginePath:
     """Traced body shared by :func:`path_engine` and the vmapped batch form."""
     p = X.shape[1]
-    zeros, grad0, null_dev, L_init, health0 = _init_state(X, y, family)
+    zeros, grad0, null_dev, L_init, health0 = _init_state(X, y, family, rw)
     step = _step_builder(X, y, lam, family, screening, max_iter, tol,
-                         kkt_tol, max_refits)
+                         kkt_tol, max_refits, rw=rw, shared_x=shared_x)
     carry0 = (zeros, grad0, jnp.zeros((p,), bool), L_init, health0)
     _, outs = lax.scan(lambda c, s: step(c, s, p_valid), carry0,
                        (sigmas[:-1], sigmas[1:]))
@@ -505,6 +532,41 @@ def batched_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
 
     return jax.vmap(one, in_axes=(0, 0, 0, lam_axis, pv_axis))(
         X, y, sigmas, lam, p_valid)
+
+
+@functools.partial(jax.jit, static_argnames=_ENGINE_STATICS)
+def replicate_path_engine(X, y, lam, sigmas, weights, family: Family,
+                          p_valid=None, *, screening: str = "strong",
+                          max_iter: int = 5000, tol: float = 1e-8,
+                          kkt_tol: float = 1e-4,
+                          max_refits: int = 32) -> EnginePath:
+    """B row-reweighted SLOPE paths against ONE shared (n, p) design.
+
+    The materialize-free replicate engine (ROADMAP item 4): a bootstrap /
+    permutation / subsample replicate is represented as ``(shared X,
+    per-member row-weight vector)`` instead of a row-duplicated copy of X,
+    so the resident operands are O(n·p + B·n) — the vmap closes over X
+    with ``in_axes=None``, which turns every per-member GEMV inside FISTA
+    into one shared (n, p) × (p, B) GEMM and never stacks a (B, n, p) X.
+
+    ``X``: (n, p) shared; ``y``: (n,) shared or (B, n) per-member (the
+    permutation-null workload permutes y, not X); ``weights``: (B, n)
+    per-member row weights (bootstrap count vectors, subsample 0/1 masks,
+    OLS sample weights); ``lam``: one shared (p·m,) sequence; ``sigmas``:
+    (L,) — replicates share the master problem's σ grid, like CV folds
+    share the full-data grid; ``p_valid`` (optional scalar) marks shared
+    bucket padding.  An all-zero weight vector is a legal edge member: its
+    loss surface is identically 0, every path step solves the blanked
+    null problem in one iteration, and its coefficients come back exactly
+    0.  Returns an :class:`EnginePath` with a leading (B,) replicate axis.
+    """
+    y_axis = 0 if y.ndim == 2 else None
+
+    def one(yi, wi):
+        return _engine(X, yi, lam, sigmas, family, screening, max_iter, tol,
+                       kkt_tol, max_refits, p_valid, rw=wi, shared_x=True)
+
+    return jax.vmap(one, in_axes=(y_axis, 0))(y, weights)
 
 
 @functools.partial(jax.jit, static_argnames=("family",))
@@ -586,7 +648,7 @@ def chunk_path_engine(X, y, lam, sig_prev, sig_next, live, beta, grad,
 
 def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                     tol, kkt_tol, max_refits, width, p_valid=None,
-                    width2=None):
+                    width2=None, rw=None, shared_x=False):
     """Natively-batched compact-working-set engine, now two-tier.
 
     Identical per-step semantics to ``vmap(_engine)`` with one structural
@@ -606,8 +668,24 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
     3·n·W), so a member whose screened set creeps just past W costs three
     W-solves instead of one O(n·p) masked solve for the whole batch.  The
     batch-wide masked fallback now fires only for demand beyond ``width2``.
+
+    ``rw`` (optional, (B, n)) row-reweights each member's loss; with
+    ``shared_x=True`` X is one shared (n, p) design (y then (B, n)), the
+    replicate representation: each member's compact gather reads the SAME
+    X, so resident memory is O(n·p + B·n·W) — the quarantine gate zeroes a
+    sick member's weights instead of the shared data, and the masked
+    fallback masks gradients (:func:`fista_shared_masked`) instead of
+    columns of X.
     """
-    B, n, p = X.shape
+    if shared_x:
+        if rw is None:
+            raise ValueError("shared_x=True requires row weights (rw)")
+        n, p = X.shape
+        B = rw.shape[0]
+    else:
+        B, n, p = X.shape
+    x_ax = None if shared_x else 0       # vmap axis for the design matrix
+    w_ax = None if rw is None else 0     # vmap axis for the row weights
     m = family.n_classes
     dtype = X.dtype
     lam = lam.astype(dtype)
@@ -628,16 +706,19 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
 
     zeros1 = jnp.zeros((p, m), dtype)
 
-    def grad_one(Xi, yi, beta):
-        return lift(family.gradient(Xi, yi, fam_shape(beta)))
+    def grad_one(Xi, yi, beta, wi=None):
+        return lift(family.gradient(Xi, yi, fam_shape(beta), weights=wi))
 
-    def dev_one(Xi, yi, beta):
-        return family.loss(Xi, yi, fam_shape(beta))
+    def dev_one(Xi, yi, beta, wi=None):
+        return family.loss(Xi, yi, fam_shape(beta), weights=wi)
 
-    grad0 = jax.vmap(lambda Xi, yi: grad_one(Xi, yi, zeros1))(X, y)
-    null_dev = jax.vmap(lambda Xi, yi: dev_one(Xi, yi, zeros1))(X, y)
+    grad0 = jax.vmap(lambda Xi, yi, wi: grad_one(Xi, yi, zeros1, wi),
+                     in_axes=(x_ax, 0, w_ax))(X, y, rw)
+    null_dev = jax.vmap(lambda Xi, yi, wi: dev_one(Xi, yi, zeros1, wi),
+                        in_axes=(x_ax, 0, w_ax))(X, y, rw)
     # health inputs, mirroring _step_builder/_init_state member-for-member
-    L_init0 = jax.vmap(lambda Xi: default_L0(Xi, family))(X).astype(dtype)
+    L_init0 = jax.vmap(lambda Xi, wi: default_L0(Xi, family, wi),
+                       in_axes=(x_ax, w_ax))(X, rw).astype(dtype)
     finite0 = (jnp.isfinite(grad0).reshape(B, -1).all(axis=1)
                & jnp.isfinite(null_dev) & jnp.isfinite(L_init0))
     health0 = jnp.where(finite0, jnp.int32(HEALTH_OK),
@@ -647,29 +728,34 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
 
     solver_kw = dict(max_iter=max_iter, tol=tol, prox_method="parallel")
 
-    def solve_masked_one(Xi, yi, lam_next, beta, E, L):
-        res = fista_masked(Xi, yi, lam_next, fam_shape(beta), E, family,
-                           L0=L, **solver_kw)
+    def solve_masked_one(Xi, yi, wi, lam_next, beta, E, L):
+        masked = fista_shared_masked if shared_x else fista_masked
+        res = masked(Xi, yi, lam_next, fam_shape(beta), E, family,
+                     L0=L, weights=wi, **solver_kw)
         return lift(res.beta), res.iters.astype(jnp.int32), res.L
 
     def solve_compact_one(width_t):
-        def one(Xi, yi, lam_next, beta, E, L):
+        def one(Xi, yi, wi, lam_next, beta, E, L):
             res = fista_compact(Xi, yi, lam_next, fam_shape(beta), E, family,
-                                width=width_t, L0=L, **solver_kw)
+                                width=width_t, L0=L, weights=wi, **solver_kw)
             return lift(res.beta), res.iters.astype(jnp.int32), res.L
         return one
 
     solve_tier1 = solve_compact_one(W)
     solve_tier2 = None if W2 is None else solve_compact_one(W2)
 
-    def solve_all(Xq, yq, E, lam_next, beta, L):
+    # per-member solve axes: the shared-X replicate form broadcasts X
+    # (in_axes=None) and batches the weights; the plain form is unchanged
+    solve_axes = (x_ax, 0, w_ax, 0, 0, 0, 0)
+
+    def solve_all(Xq, yq, wq, E, lam_next, beta, L):
         need = E.sum(axis=1).astype(jnp.int32)
         # scalar reduction — keeps the fallback cond a real branch
         fell_back = jnp.any(need > W_top)
         args = (lam_next, beta, E, L)
 
         def tier1_all(a):
-            return jax.vmap(solve_tier1)(Xq, yq, *a)
+            return jax.vmap(solve_tier1, in_axes=solve_axes)(Xq, yq, wq, *a)
 
         if W2 is None:
             compact_arm = tier1_all
@@ -689,10 +775,10 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                 lam_next, beta, E, L = a
                 # (the solvers already zero each member's warm start through
                 # its mask, so blanking E alone blanks the whole problem)
-                r1 = jax.vmap(solve_tier1)(
-                    Xq, yq, lam_next, beta, E & ~over1[:, None], L)
-                r2 = jax.vmap(solve_tier2)(
-                    Xq, yq, lam_next, beta, E & over1[:, None], L)
+                r1 = jax.vmap(solve_tier1, in_axes=solve_axes)(
+                    Xq, yq, wq, lam_next, beta, E & ~over1[:, None], L)
+                r2 = jax.vmap(solve_tier2, in_axes=solve_axes)(
+                    Xq, yq, wq, lam_next, beta, E & over1[:, None], L)
 
                 def sel(two, one):
                     o = over1.reshape((B,) + (1,) * (two.ndim - 1))
@@ -707,11 +793,13 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
 
         beta1, it1, L1 = lax.cond(
             fell_back,
-            lambda a: jax.vmap(solve_masked_one)(Xq, yq, *a),
+            lambda a: jax.vmap(solve_masked_one, in_axes=solve_axes)(
+                Xq, yq, wq, *a),
             compact_arm,
             args,
         )
-        grad1 = jax.vmap(grad_one)(Xq, yq, beta1)
+        grad1 = jax.vmap(grad_one, in_axes=(x_ax, 0, 0, w_ax))(
+            Xq, yq, beta1, wq)
         return beta1, grad1, it1, L1, fell_back, need
 
     nv_one = functools.partial(_new_violations, p=p, m=m, screening=screening)
@@ -733,10 +821,14 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
 
         # quarantine gate, member-for-member what _step_builder applies:
         # sick members run on zeroed data/carry and a blanked working set
+        # (shared X stays untouched — the member's weights are zeroed)
         sick = health != 0                        # (B,)
-        Xq = jnp.where(sick[:, None, None], jnp.zeros((), dtype), X)
+        Xq = (X if shared_x
+              else jnp.where(sick[:, None, None], jnp.zeros((), dtype), X))
         yq = jnp.where(sick.reshape((B,) + (1,) * (y.ndim - 1)),
                        jnp.zeros((), y.dtype), y)
+        wq = (None if rw is None
+              else jnp.where(sick[:, None], jnp.zeros((), rw.dtype), rw))
         beta = jnp.where(sick[:, None, None], 0, beta)
         grad = jnp.where(sick[:, None, None], 0, grad)
         prev_active = prev_active & ~sick[:, None]
@@ -758,8 +850,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
         strong_p = strong_p & ~sick[:, None]
         n_screened = jnp.where(sick, 0, n_screened)
 
-        beta1, grad1, it1, L1, fb1, need1 = solve_all(Xq, yq, E0, lam_next,
-                                                      beta, L_carry)
+        beta1, grad1, it1, L1, fb1, need1 = solve_all(Xq, yq, wq, E0,
+                                                      lam_next, beta, L_carry)
 
         if screening == "none":
             beta_f, grad_f, L_f = beta1, grad1, L1
@@ -793,8 +885,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
                 # (discarded) solve must not force the masked fallback.
                 active = s["has_viol"] & (s["refits"] < max_refits)
                 beta2, grad2, it2, L2, fb2, need2 = solve_all(
-                    Xq, yq, s["E"] & active[:, None], lam_next, s["beta"],
-                    s["L"])
+                    Xq, yq, wq, s["E"] & active[:, None], lam_next,
+                    s["beta"], s["L"])
                 viol2, checked2 = kkt_all(grad2, lam_next, s["E"],
                                           strong_p, s["checked"], p_valid)
 
@@ -829,7 +921,8 @@ def _compact_engine(X, y, lam, sigmas, family: Family, screening, max_iter,
             fell_back = state["fell_back"]
             ws_max = state["ws_max"]
 
-        dev = jax.vmap(dev_one)(Xq, yq, beta_f)
+        dev = jax.vmap(dev_one, in_axes=(x_ax, 0, 0, w_ax))(Xq, yq, beta_f,
+                                                            wq)
         # health detection + output quarantine, member-for-member what
         # _step_builder applies (sticky word, NaNs never escape the carry)
         bad_input = lam_bad | ~(jnp.isfinite(sig_prev) & jnp.isfinite(sig))
@@ -917,6 +1010,36 @@ def compact_path_engine(X, y, lam, sigmas, family: Family, p_valid=None, *,
     """
     return _compact_engine(X, y, lam, sigmas, family, screening, max_iter,
                            tol, kkt_tol, max_refits, width, p_valid, width2)
+
+
+@functools.partial(jax.jit, static_argnames=_COMPACT_STATICS)
+def replicate_compact_path_engine(X, y, lam, sigmas, weights,
+                                  family: Family, p_valid=None, *,
+                                  width: int, width2: int | None = None,
+                                  screening: str = "strong",
+                                  max_iter: int = 5000, tol: float = 1e-8,
+                                  kkt_tol: float = 1e-4,
+                                  max_refits: int = 32):
+    """Compact-working-set replicate engine: B row-reweighted paths against
+    ONE shared (n, p) X with per-member W-bucket gathers.
+
+    The compact counterpart of :func:`replicate_path_engine`: each member
+    gathers its ≤ W screened columns from the SAME shared design, so the
+    resident footprint is O(n·p + B·n·W) — the only per-member matrix ever
+    built is the (n, W) compact gather the inner solves run on.  ``X``:
+    (n, p); ``y``: (n,) shared or (B, n) per-member; ``weights``: (B, n);
+    ``sigmas``: (L,) shared grid; ``lam`` one (p·m,) sequence.  Returns
+    ``(EnginePath, CompactStats)`` with leading (B,) replicate axes.
+    """
+    B = weights.shape[0]
+    if y.ndim == 1:
+        y = jnp.broadcast_to(y, (B,) + y.shape)
+    sig = jnp.broadcast_to(sigmas, (B,) + sigmas.shape)
+    if p_valid is not None:  # shared scalar -> the engine's per-member form
+        p_valid = jnp.broadcast_to(jnp.asarray(p_valid, jnp.int32), (B,))
+    return _compact_engine(X, y, lam, sig, family, screening, max_iter,
+                           tol, kkt_tol, max_refits, width, p_valid, width2,
+                           rw=weights, shared_x=True)
 
 
 # ---------------------------------------------------------------------------
@@ -1296,6 +1419,126 @@ def _fit_path_batched(
         ws_tier=ws_tier,
         compact_fallback=fallback,
         pad_shape=pad_shape,
+        path_trace=path_trace,
+    )
+
+
+def _fit_replicate_batched(
+    X, y, lam, family: Family, weights, *,
+    screening: str = "strong",
+    path_length: int = 100,
+    sigma_ratio: float | None = None,
+    sigmas: np.ndarray | None = None,
+    solver_tol: float = DEFAULT_PATH_TOL,
+    max_iter: int = DEFAULT_PATH_MAX_ITER,
+    kkt_tol: float = DEFAULT_KKT_TOL,
+    max_refits: int = DEFAULT_MAX_REFITS,
+    working_set: int | str | None = None,
+    ws_tiers: int | str = DEFAULT_WS_TIERS,
+    telemetry: str = "off",
+) -> BatchedPathResult:
+    """Fit B row-reweighted paths against ONE shared (n, p) design.
+
+    The replicate counterpart of :func:`_fit_path_batched`: ``X`` is a
+    single (n, p) design shared by every member, ``weights`` a (B, n)
+    per-member row-weight matrix (bootstrap counts / subsample masks /
+    direct sample weights), ``y`` the shared (n,) response or a (B, n)
+    per-member stack (permutation replicates).  Memory stays
+    O(n·p + B·n) — no (B, n, p) batch is ever materialized.
+
+    The σ grid is shared across members (computed from the *unweighted*
+    problem when not given), so per-grid-point statistics compare like
+    with like; a (B, n) ``y`` needs an explicit ``sigmas``.
+    """
+    X = np.asarray(X)
+    lam = np.asarray(lam)
+    weights_np = np.asarray(weights)
+    if X.ndim != 2:
+        raise ValueError(f"X must be one shared (n, p) design, got {X.shape}")
+    n, p = X.shape
+    if weights_np.ndim != 2 or weights_np.shape[1] != n:
+        raise ValueError(
+            f"weights must be (B, n) = (B, {n}), got {weights_np.shape}")
+    B = weights_np.shape[0]
+    m = family.n_classes
+    y_np = np.asarray(y)
+    if sigmas is None:
+        if y_np.ndim != 1:  # per-member (B, n) stack: no canonical grid
+            raise ValueError(
+                "per-member (B, n) responses need an explicit shared σ "
+                "grid (compute it from the original problem first)")
+        sigmas = null_sigma_grid(X, y_np, lam, family,
+                                 path_length=path_length,
+                                 sigma_ratio=sigma_ratio)
+    sigmas = np.asarray(sigmas)
+    if sigmas.ndim != 1:
+        raise ValueError(
+            f"replicates share one (L,) σ grid, got {sigmas.shape}")
+
+    engine_kw = dict(screening=screening, max_iter=max_iter, tol=solver_tol,
+                     kkt_tol=kkt_tol, max_refits=max_refits)
+    t0 = time.perf_counter()
+    W = W2 = None
+    stats = None
+    if working_set is None:
+        res = replicate_path_engine(
+            jnp.asarray(X), jnp.asarray(y_np), jnp.asarray(lam),
+            jnp.asarray(sigmas), jnp.asarray(weights_np), family, **engine_kw)
+    else:
+        ws_key = (n, p, m, family.name, screening)
+        W, W2 = resolve_ws_tiers(working_set, ws_tiers, n, p, ws_key)
+        res, stats = replicate_compact_path_engine(
+            jnp.asarray(X), jnp.asarray(y_np), jnp.asarray(lam),
+            jnp.asarray(sigmas), jnp.asarray(weights_np), family,
+            width=W, width2=W2, **engine_kw)
+    res = EnginePath(*(np.asarray(a) for a in res))
+    wall = time.perf_counter() - t0
+    if stats is not None:
+        stats = CompactStats(*(np.asarray(a) for a in stats))
+    betas = res.betas  # (B, L, p, m)
+    if m == 1:
+        betas = betas[:, :, :, 0]
+    unrepaired = res.kkt_unrepaired
+    _warn_unrepaired(unrepaired, max_refits)
+    _warn_quarantined(res.health)
+    ws_size = ws_tier = fallback = None
+    if stats is not None:
+        ws_size = stats.ws_size
+        ws_tier = stats.tier
+        fallback = stats.fell_back
+        if working_set == "auto":
+            grow_ws_bucket(ws_key, ws_size, fallback, W, p,
+                           two_tier=ws_tiers != 1)
+    path_trace = None
+    if telemetry != "off":
+        from ..obs import PathTrace
+
+        path_trace = PathTrace.from_arrays(
+            mode=telemetry, p=p, sigmas=np.tile(sigmas, (B, 1)),
+            n_screened=res.n_screened, n_active=res.n_active,
+            n_violations=res.n_violations, refits=res.refits,
+            solver_iters=res.solver_iters, health=res.health,
+            working_set=W, working_set_top=W2, ws_size=ws_size,
+            ws_tier=ws_tier, compact_fallback=fallback)
+    return BatchedPathResult(
+        betas=betas,
+        sigmas=np.tile(sigmas, (B, 1)),
+        lam=lam,
+        n_active=res.n_active,
+        n_screened=res.n_screened,
+        n_violations=res.n_violations,
+        refits=res.refits,
+        solver_iters=res.solver_iters,
+        deviance=res.deviance,
+        kkt_unrepaired=unrepaired,
+        total_time=wall,
+        n_samples=n,
+        health=res.health,
+        working_set=W,
+        working_set_top=W2,
+        ws_size=ws_size,
+        ws_tier=ws_tier,
+        compact_fallback=fallback,
         path_trace=path_trace,
     )
 

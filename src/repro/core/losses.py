@@ -10,6 +10,17 @@ plus the two matvecs (which are what the Pallas kernels accelerate).
 Conventions follow the R SLOPE package: unnormalised sums, centred y for
 OLS, y ∈ {0,1} for logistic, y ∈ ℕ for Poisson, integer classes for
 multinomial (β ∈ R^{p×m}, penalty on the flattened coefficients).
+
+Per-row sample weights generalize every family without touching X:
+
+    f_w(β) = Σ_i w_i ℓ(z_i, y_i),   ∇f_w(β) = Xᵀ (w ⊙ r(z, y))
+
+which is exactly the loss of the row-duplicated problem when w is an
+integer count vector — the representation the resampling engine uses to
+solve B bootstrap replicates against ONE shared X.  ``weights=None``
+keeps the original (unweighted) code path byte-for-byte.  Zero-weight
+rows are guarded with ``jnp.where`` so a w=0 row can never leak a
+non-finite z into the sums (0·inf would otherwise NaN the member).
 """
 
 from __future__ import annotations
@@ -23,6 +34,12 @@ import jax.numpy as jnp
 __all__ = ["Family", "ols", "logistic", "poisson", "multinomial", "get_family"]
 
 
+def _row_broadcast(w, a):
+    """Broadcast per-row weights (n,) against a row-shaped array: (n,) for
+    single-class families, (n, 1) against the (n, m) multinomial block."""
+    return w if a.ndim == 1 else w[:, None]
+
+
 @dataclasses.dataclass(frozen=True)
 class Family:
     name: str
@@ -30,15 +47,33 @@ class Family:
     residual: Callable  # (z, y) -> dloss/dz, same shape as z
     hess_bound: float | None  # sup of d²ℓ/dz² (None: use backtracking)
     n_classes: int = 1  # >1 → β is (p, m)
+    row_value: Callable | None = None  # (z, y) -> (n,) per-row losses
 
-    def loss(self, X, y, beta):
-        return self.value(X @ beta, y)
+    def weighted_value(self, z, y, weights):
+        """Σ wᵢ ℓ(zᵢ, yᵢ) with zero-weight rows exactly inert (a w=0 row
+        contributes an exact 0 even when its z is non-finite)."""
+        rv = self.row_value(z, y)
+        return jnp.sum(jnp.where(weights == 0, jnp.zeros((), rv.dtype),
+                                 weights * rv))
 
-    def gradient(self, X, y, beta):
+    def weighted_residual(self, z, y, weights):
+        """w ⊙ r(z, y), zero-weight rows guarded to exact 0."""
+        r = self.residual(z, y)
+        wb = _row_broadcast(weights, r)
+        return jnp.where(wb == 0, jnp.zeros((), r.dtype), wb * r)
+
+    def loss(self, X, y, beta, weights=None):
+        if weights is None:
+            return self.value(X @ beta, y)
+        return self.weighted_value(X @ beta, y, weights)
+
+    def gradient(self, X, y, beta, weights=None):
         """∇f(β) = Xᵀ r(Xβ, y); shape = beta.shape."""
-        return X.T @ self.residual(X @ beta, y)
+        if weights is None:
+            return X.T @ self.residual(X @ beta, y)
+        return X.T @ self.weighted_residual(X @ beta, y, weights)
 
-    def loss_and_gradient(self, X, y, beta):
+    def loss_and_gradient(self, X, y, beta, weights=None):
         """(f(β), ∇f(β)) sharing ONE linear predictor z = Xβ.
 
         Separate ``loss``/``gradient`` calls each build their own Xβ and
@@ -48,7 +83,10 @@ class Family:
         :func:`repro.kernels.slope_loss_residual`.
         """
         z = X @ beta
-        return self.value(z, y), X.T @ self.residual(z, y)
+        if weights is None:
+            return self.value(z, y), X.T @ self.residual(z, y)
+        return (self.weighted_value(z, y, weights),
+                X.T @ self.weighted_residual(z, y, weights))
 
     def lipschitz(self, X) -> jax.Array:
         """Upper bound on the gradient Lipschitz constant: c·‖X‖₂²."""
@@ -81,7 +119,12 @@ def _ols_residual(z, y):
     return z - y
 
 
-ols = Family("ols", _ols_value, _ols_residual, hess_bound=1.0)
+def _ols_row_value(z, y):
+    return 0.5 * jnp.square(z - y)
+
+
+ols = Family("ols", _ols_value, _ols_residual, hess_bound=1.0,
+             row_value=_ols_row_value)
 
 
 # -- logistic (y ∈ {0,1}) ----------------------------------------------------
@@ -95,7 +138,12 @@ def _logit_residual(z, y):
     return jax.nn.sigmoid(z) - y
 
 
-logistic = Family("logistic", _logit_value, _logit_residual, hess_bound=0.25)
+def _logit_row_value(z, y):
+    return jnp.logaddexp(0.0, z) - y * z
+
+
+logistic = Family("logistic", _logit_value, _logit_residual, hess_bound=0.25,
+                  row_value=_logit_row_value)
 
 
 # -- Poisson -----------------------------------------------------------------
@@ -108,7 +156,12 @@ def _pois_residual(z, y):
     return jnp.exp(z) - y
 
 
-poisson = Family("poisson", _pois_value, _pois_residual, hess_bound=None)
+def _pois_row_value(z, y):
+    return jnp.exp(z) - y * z
+
+
+poisson = Family("poisson", _pois_value, _pois_residual, hess_bound=None,
+                 row_value=_pois_row_value)
 
 
 # -- multinomial (y integer classes, β ∈ R^{p×m}) ----------------------------
@@ -122,9 +175,14 @@ def _multi_residual(Z, y):
     return jax.nn.softmax(Z, axis=-1) - jax.nn.one_hot(y, m, dtype=Z.dtype)
 
 
+def _multi_row_value(Z, y):
+    return (jax.nn.logsumexp(Z, axis=-1)
+            - jnp.take_along_axis(Z, y[:, None], axis=-1)[:, 0])
+
+
 def multinomial(m: int) -> Family:
     return Family("multinomial", _multi_value, _multi_residual, hess_bound=0.5,
-                  n_classes=m)
+                  n_classes=m, row_value=_multi_row_value)
 
 
 def get_family(name: str, n_classes: int = 3) -> Family:

@@ -19,7 +19,8 @@ from jax import lax
 from .losses import Family
 from .sorted_l1 import prox_sorted_l1_with_norm, sorted_l1_norm
 
-__all__ = ["fista", "fista_masked", "fista_compact", "default_L0", "FistaResult",
+__all__ = ["fista", "fista_masked", "fista_shared_masked", "fista_compact",
+           "default_L0", "FistaResult",
            "DEFAULT_PATH_TOL", "DEFAULT_PATH_MAX_ITER", "DEFAULT_KKT_TOL",
            "DEFAULT_MAX_REFITS", "DEFAULT_WS_TIERS"]
 
@@ -39,13 +40,24 @@ DEFAULT_MAX_REFITS = 32
 DEFAULT_WS_TIERS = "auto"
 
 
-def default_L0(X: jax.Array, family: Family) -> jax.Array:
+def default_L0(X: jax.Array, family: Family,
+               weights: jax.Array | None = None) -> jax.Array:
     """Initial curvature guess: crude row-norm bound, corrected by
     backtracking.  Shared by :func:`fista` and the path engine's scan carry
-    so warm-started device solves seed the same curvature as cold ones."""
-    return jnp.maximum(
-        jnp.sum(X * X) * (family.hess_bound or 1.0) / X.shape[1], 1e-3
-    )
+    so warm-started device solves seed the same curvature as cold ones.
+
+    With per-row ``weights`` the bound is Σᵢ wᵢ‖xᵢ‖² — computed as a dot
+    of the weight vector against the (shared) per-row square norms, so a
+    batch of weight vectors against one shared X never materializes a
+    per-member copy of X under vmap."""
+    if weights is None:
+        return jnp.maximum(
+            jnp.sum(X * X) * (family.hess_bound or 1.0) / X.shape[1], 1e-3
+        )
+    row_sq = jnp.sum(X * X, axis=1)  # (n,), loop/batch-invariant for shared X
+    total = jnp.sum(jnp.where(weights == 0, jnp.zeros((), row_sq.dtype),
+                              weights * row_sq))
+    return jnp.maximum(total * (family.hess_bound or 1.0) / X.shape[1], 1e-3)
 
 
 class FistaResult(NamedTuple):
@@ -85,6 +97,8 @@ def fista(
     max_backtrack: int = 30,
     prox_method: str = "stack",
     L0: jax.Array | None = None,
+    weights: jax.Array | None = None,
+    col_mask: jax.Array | None = None,
 ) -> FistaResult:
     """Minimise f(β) + J(β; λ) with FISTA + backtracking + adaptive restart.
 
@@ -95,6 +109,16 @@ def fista(
     passes the previous path step's learned L so warm solves skip the
     backtracking ramp-up.
 
+    ``weights`` (optional, (n,)) solves the row-reweighted problem
+    Σ wᵢ ℓ(zᵢ, yᵢ) + J(β; λ) — the count-vector representation of a
+    bootstrap replicate.  ``col_mask`` (optional, (p,) 0/1) restricts the
+    solve to a working set by zeroing the *gradient* of masked columns
+    instead of the columns of X themselves: for finite X this is bitwise
+    the same fixed point as :func:`fista_masked` (masked coefficients stay
+    exactly 0, unmasked gradients are untouched), but it keeps a shared X
+    unbatched under vmap — ``X * mask`` with a per-member mask would
+    materialize the (B, n, p) stack the resampling engine exists to avoid.
+
     Convergence requires BOTH an objective plateau (|Δobj| ≤ tol·max(1,|obj|))
     and a prox-gradient fixed-point residual ≤ √tol — coefficient-scale
     accuracy tracks √tol, so tol=1e-14 certifies β to ≈1e-7.
@@ -103,16 +127,25 @@ def fista(
     lam = lam.astype(dtype)
 
     def obj_fn(beta):
-        return family.loss(X, y, beta) + sorted_l1_norm(beta, lam)
+        return family.loss(X, y, beta, weights=weights) + sorted_l1_norm(beta, lam)
 
     if L0 is None:
-        L0 = default_L0(X, family)
+        L0 = default_L0(X, family, weights)
+
+    def mask_grad(g):
+        if col_mask is None:
+            return g
+        cm = col_mask if g.ndim == 1 else col_mask[:, None]
+        # where (not multiply): a masked column's gradient becomes an exact
+        # 0 even when non-finite, so a poisoned column cannot leak through
+        return jnp.where(cm == 0, jnp.zeros((), g.dtype), g)
 
     def step(state: _State) -> _State:
         z = state.z
         # fused forward pair: one linear predictor feeds both the loss and
         # the residual for the gradient matvec (X streamed once for z)
-        fz, gz = family.loss_and_gradient(X, y, z)
+        fz, gz = family.loss_and_gradient(X, y, z, weights=weights)
+        gz = mask_grad(gz)
 
         def bt_cond(carry):
             L, x_new, fx, J, ok, tries = carry
@@ -128,7 +161,7 @@ def fista(
             x_new = x_new.reshape(z.shape)
             diff = x_new - z
             q = fz + jnp.vdot(gz, diff) + 0.5 * L * jnp.vdot(diff, diff)
-            fx = family.loss(X, y, x_new)
+            fx = family.loss(X, y, x_new, weights=weights)
             ok = fx <= q + 1e-12 * jnp.abs(q)
             L_next = jnp.where(ok, L, L * 2.0)
             return L_next, x_new, fx, J_scaled * L, ok, tries + 1
@@ -208,6 +241,33 @@ def fista_masked(
     Xm = X * mask_col[None, :]
     beta0 = beta0 * (mask_col if beta0.ndim == 1 else mask_col[:, None])
     return fista(Xm, y, lam, beta0, family, **kw)
+
+
+def fista_shared_masked(
+    X: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    beta0: jax.Array,
+    mask: jax.Array,
+    family: Family,
+    **kw,
+) -> FistaResult:
+    """:func:`fista_masked` for a *shared* design matrix: identical fixed
+    point, but the working set restricts the solve by masking the gradient
+    (``fista(col_mask=...)``) instead of materializing ``X * mask``.
+
+    For finite X the two are numerically identical coordinate-for-
+    coordinate: unmasked gradients are the same partial sums (×1.0 is
+    exact), masked coordinates are exact zeros either way, and the z = Xβ
+    products agree term-by-term because masked coefficients are exactly 0.
+    What changes is the memory profile under vmap — with ``in_axes=None``
+    on X and a per-member mask, ``X * mask`` would batch a (B, n, p)
+    intermediate; the gradient mask keeps X a single (n, p) operand, which
+    is the whole point of the weight-fused replicate engine.
+    """
+    mask_col = mask.astype(X.dtype)
+    beta0 = beta0 * (mask_col if beta0.ndim == 1 else mask_col[:, None])
+    return fista(X, y, lam, beta0, family, col_mask=mask_col, **kw)
 
 
 def fista_compact(

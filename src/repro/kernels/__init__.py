@@ -7,11 +7,14 @@ from .ops import (
     slope_gradient,
     slope_gradient_compact,
     slope_gradient_masked,
+    slope_gradient_replicate,
     slope_residual,
     slope_residual_compact,
     slope_residual_masked,
+    slope_residual_replicate,
     slope_loss_residual,
     slope_loss_residual_compact,
+    slope_loss_residual_replicate,
     screen_scan,
     prox_pool,
     prox_sorted_l1_kernel,
@@ -23,11 +26,14 @@ __all__ = [
     "slope_gradient",
     "slope_gradient_compact",
     "slope_gradient_masked",
+    "slope_gradient_replicate",
     "slope_residual",
     "slope_residual_compact",
     "slope_residual_masked",
+    "slope_residual_replicate",
     "slope_loss_residual",
     "slope_loss_residual_compact",
+    "slope_loss_residual_replicate",
     "screen_scan",
     "prox_pool",
     "prox_sorted_l1_kernel",

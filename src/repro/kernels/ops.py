@@ -38,23 +38,29 @@ from .slope_gemv import (
     DEFAULT_BP,
     xb_loss_residual,
     xb_loss_residual_compact,
+    xb_loss_residual_replicate,
     xb_residual,
     xb_residual_compact,
     xb_residual_masked,
+    xb_residual_replicate,
     xt_matmul,
     xt_matmul_compact,
     xt_matmul_masked,
+    xt_matmul_replicate,
 )
 
 __all__ = [
     "slope_gradient",
     "slope_gradient_masked",
     "slope_gradient_compact",
+    "slope_gradient_replicate",
     "slope_residual",
     "slope_residual_masked",
     "slope_residual_compact",
+    "slope_residual_replicate",
     "slope_loss_residual",
     "slope_loss_residual_compact",
+    "slope_loss_residual_replicate",
     "screen_scan",
     "prox_pool",
     "prox_sorted_l1_kernel",
@@ -174,6 +180,106 @@ def slope_residual_masked(X, B, Y, mask, *, family: str = "none",
     )
     out = out[:n, :m]
     return out[:, 0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# replicate GEMVs: B row-reweighted members against ONE shared X
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bn", "bp", "use_kernel"))
+def slope_gradient_replicate(X, R, W, *, bn: int = DEFAULT_BN,
+                             bp: int = DEFAULT_BP, use_kernel: bool = True):
+    """G_b = Xᵀ (w_b ⊙ R_b) for B replicate members, one shared X.
+
+    X (n, p); R (B, n) or (B, n, m); W (B, n) per-member row weights
+    (bootstrap counts / subsample masks / ones).  Zero-weight rows are
+    exactly inert.  X is never materialized per member — the kernel's
+    member axis rides the grid with an X index map that ignores it.
+    """
+    squeeze = R.ndim == 2
+    R3 = R[..., None] if squeeze else R
+    if not use_kernel:
+        out = _ref.xt_matmul_replicate_ref(X, R3, W)
+        return out[..., 0] if squeeze else out
+    n, p = X.shape
+    m = R3.shape[2]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Rp = _pad_to(_pad_to(R3, bn_, 1), 128, 2)
+    Wt = _pad_to(W.astype(X.dtype).T, bn_, 0)  # (n, B), padded rows w = 0
+    out = xt_matmul_replicate(Xp, Rp, Wt, bn=bn_, bp=bp_,
+                              interpret=_interpret())
+    out = out[:, :p, :m]
+    return out[..., 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("family", "bn", "bp",
+                                             "use_kernel"))
+def slope_residual_replicate(X, B, Y, W, *, family: str = "none",
+                             bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
+                             use_kernel: bool = True):
+    """r_b = w_b ⊙ ∂ℓ/∂z at z_b = X·B_b, one shared X, fused epilogue.
+
+    B (Bm, p) or (Bm, p, m) per-member coefficients; Y (Bm, n[, m])
+    per-member responses; W (Bm, n).  Returns the already-weighted
+    residual stack ready for :func:`slope_gradient_replicate` — note the
+    weights must then NOT be applied again there (pass ones), or use this
+    pair as (residual: weighted, gradient: plain per-member xt_matmul).
+    """
+    squeeze = B.ndim == 2
+    B3 = B[..., None] if squeeze else B
+    Y3 = Y[..., None] if Y.ndim == 2 else Y
+    if not use_kernel:
+        out = _ref.xb_residual_replicate_ref(X, B3, Y3, W, family)
+        return out[..., 0] if squeeze else out
+    n, p = X.shape
+    m = B3.shape[2]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Bp = _pad_to(_pad_to(B3, bp_, 1), 128, 2)
+    Yp = _pad_to(_pad_to(Y3, bn_, 1), 128, 2)
+    Wt = _pad_to(W.astype(X.dtype).T, bn_, 0)
+    out = xb_residual_replicate(Xp, Bp, Yp, Wt, family=family, m_actual=m,
+                                bn=bn_, bp=bp_, interpret=_interpret())
+    out = out[:, :n, :m]
+    return out[..., 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("family", "bn", "bp",
+                                             "use_kernel"))
+def slope_loss_residual_replicate(X, B, Y, W, *, family: str = "none",
+                                  bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
+                                  use_kernel: bool = True):
+    """Per-member fused forward pair (weighted loss, weighted residual).
+
+    Returns ``(loss (Bm,), r (Bm, n[, m]))`` — each member's weighted loss
+    Σᵢ w_{b,i}·ℓ(z_{b,i}, y_{b,i}) and weighted residual from ONE pass
+    over the shared X per member.
+    """
+    squeeze = B.ndim == 2
+    B3 = B[..., None] if squeeze else B
+    Y3 = Y[..., None] if Y.ndim == 2 else Y
+    if not use_kernel:
+        r, rows = _ref.xb_loss_residual_replicate_ref(X, B3, Y3, W, family)
+        return jnp.sum(rows, axis=1), (r[..., 0] if squeeze else r)
+    n, p = X.shape
+    m = B3.shape[2]
+    bn_ = min(bn, _round_up(n, 8))
+    bp_ = min(bp, _round_up(p, 128))
+    Xp = _pad_to(_pad_to(X, bn_, 0), bp_, 1)
+    Bp = _pad_to(_pad_to(B3, bp_, 1), 128, 2)
+    Yp = _pad_to(_pad_to(Y3, bn_, 1), 128, 2)
+    Wt = _pad_to(W.astype(X.dtype).T, bn_, 0)
+    r, rows = xb_loss_residual_replicate(
+        Xp, Bp, Yp, Wt, family=family, m_actual=m, bn=bn_, bp=bp_,
+        interpret=_interpret())
+    # padded rows carry w = 0 → their loss rows are exactly 0, but slice
+    # the real rows anyway (mirrors the unweighted wrappers' convention)
+    loss = jnp.sum(rows[:, :n, 0], axis=1)
+    r = r[:, :n, :m]
+    return loss, (r[..., 0] if squeeze else r)
 
 
 # ---------------------------------------------------------------------------

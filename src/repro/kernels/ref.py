@@ -19,9 +19,19 @@ __all__ = [
     "xb_residual_compact_ref",
     "xb_loss_residual_ref",
     "xb_loss_residual_compact_ref",
+    "xt_matmul_replicate_ref",
+    "xb_residual_replicate_ref",
+    "xb_loss_residual_replicate_ref",
     "screen_scan_ref",
     "prox_pool_ref",
 ]
+
+
+def _apply_w_ref(w: jax.Array, a: jax.Array) -> jax.Array:
+    """w ⊙ a (per-row weights against a row-major block) with zero-weight
+    rows guarded to an exact 0 — the ``Family.weighted_residual`` guard."""
+    wb = w if a.ndim == w.ndim else w[..., None]
+    return jnp.where(wb == 0, jnp.zeros((), a.dtype), wb * a)
 
 
 def xt_matmul_ref(X: jax.Array, R: jax.Array) -> jax.Array:
@@ -108,6 +118,39 @@ def xb_loss_residual_ref(X: jax.Array, B: jax.Array, y: jax.Array,
         "np,pm->nm", X, B, preferred_element_type=jnp.promote_types(X.dtype, jnp.float32)
     ).astype(X.dtype)
     return _epilogue(z, y, family).astype(X.dtype), _row_loss(z, y, family)
+
+
+# The replicate oracles are the *materialized* reference the weight-fused
+# kernels are bit-identity-tested against: per member, weight the small
+# (n, m) operand host-side (zero-guarded, native dtype) and call the plain
+# unweighted oracle against the shared X — which is exactly what a
+# materialized (B, n, p) execution computes, without ever building it.
+
+
+def xt_matmul_replicate_ref(X: jax.Array, R: jax.Array,
+                            W: jax.Array) -> jax.Array:
+    """G_b = Xᵀ (w_b ⊙ R_b); X (n, p), R (B, n, m), W (B, n) → (B, p, m)."""
+    return jax.vmap(lambda r, w: xt_matmul_ref(X, _apply_w_ref(w, r)))(R, W)
+
+
+def xb_residual_replicate_ref(X: jax.Array, B: jax.Array, Y: jax.Array,
+                              W: jax.Array, family: str = "none") -> jax.Array:
+    """r_b = w_b ⊙ ∂ℓ/∂z at z_b = X·B_b; B (Bm, p, m), Y (Bm, n, m),
+    W (Bm, n) → (Bm, n, m)."""
+    return jax.vmap(
+        lambda b, y, w: _apply_w_ref(w, xb_residual_ref(X, b, y, family)))(
+            B, Y, W)
+
+
+def xb_loss_residual_replicate_ref(X: jax.Array, B: jax.Array, Y: jax.Array,
+                                   W: jax.Array, family: str = "none"):
+    """Per-member fused pair: (w_b ⊙ r_b, w_b ⊙ per-row losses)."""
+
+    def one(b, y, w):
+        r, rows = xb_loss_residual_ref(X, b, y, family)
+        return _apply_w_ref(w, r), _apply_w_ref(w.astype(rows.dtype), rows)
+
+    return jax.vmap(one)(B, Y, W)
 
 
 def screen_scan_ref(c: jax.Array, lam: jax.Array) -> jax.Array:

@@ -52,6 +52,9 @@ __all__ = [
     "xb_residual_compact",
     "xb_loss_residual",
     "xb_loss_residual_compact",
+    "xt_matmul_replicate",
+    "xb_residual_replicate",
+    "xb_loss_residual_replicate",
     "DEFAULT_BN",
     "DEFAULT_BP",
 ]
@@ -510,6 +513,231 @@ def xb_loss_residual_compact(
         ],
         interpret=interpret,
     )(live_idx, X, B, Y, mask)
+
+
+# ---------------------------------------------------------------------------
+# replicate variants: B row-reweighted problems against ONE shared X
+# ---------------------------------------------------------------------------
+#
+# The resampling engine represents a bootstrap/subsample member as a per-row
+# weight vector w_b against the shared (n, p) design, so its matvecs are
+#
+#     G_b = Xᵀ (w_b ⊙ r_b)         r_b = w_b ⊙ ∂ℓ/∂z at z_b = X·β_b
+#
+# — the X operand is the SAME array for every member.  These kernels put the
+# member axis on the grid and give X a BlockSpec index map that ignores it,
+# so X is held once in HBM (O(n·p), not O(B·n·p)) while the per-member
+# operands stay O(B·n).  Weights ride in transposed as (n, B) so a member's
+# slice is a clean (bn, 1) column block broadcasting against (bn, m) tiles.
+# Zero-weight rows are where-guarded to an exact 0 (the same guard as
+# ``Family.weighted_residual``), so a w = 0 row can never leak a non-finite
+# residual into the sums — and so results are bit-identical to applying the
+# guarded weight host-side and calling the unweighted kernels per member.
+
+
+def _apply_w(w, a):
+    """w ⊙ a with zero-weight rows exact 0; w (bn, 1), a (bn, m)."""
+    return jnp.where(w == 0, jnp.zeros((), a.dtype), w * a)
+
+
+def _xt_matmul_replicate_kernel(x_ref, r_ref, w_ref, o_ref, acc_ref):
+    nb = pl.program_id(2)
+
+    @pl.when(nb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        _apply_w(w_ref[...], r_ref[0]),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(nb == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def xt_matmul_replicate(
+    X: jax.Array,
+    R: jax.Array,
+    W: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """G_b = Xᵀ (w_b ⊙ R_b) for all B members against one shared X.
+
+    Shapes: X (n, p) shared, R (B, n, m) per-member residuals, W (n, B)
+    transposed row weights → G (B, p, m).  Per member the block schedule
+    (and therefore every partial sum) is exactly :func:`xt_matmul`'s on the
+    pre-weighted residual, so results are bit-identical to the materialized
+    reference.  Caller pads n/p to blocks.
+    """
+    n, p = X.shape
+    B, n_r, m = R.shape
+    assert n_r == n and W.shape == (n, B), (X.shape, R.shape, W.shape)
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    grid = (B, p // bp, n // bn)
+    return pl.pallas_call(
+        _xt_matmul_replicate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda b, pb, nb: (nb, pb)),  # shared X
+            pl.BlockSpec((1, bn, m), lambda b, pb, nb: (b, nb, 0)),
+            pl.BlockSpec((bn, 1), lambda b, pb, nb: (nb, b)),
+        ],
+        out_specs=pl.BlockSpec((1, bp, m), lambda b, pb, nb: (b, pb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, p, m), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, m), jnp.float32)],
+        interpret=interpret,
+    )(X, R, W)
+
+
+def _xb_residual_replicate_kernel(x_ref, b_ref, y_ref, w_ref, o_ref, acc_ref,
+                                  *, family, m_actual):
+    pb = pl.program_id(2)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], b_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pb == pl.num_programs(2) - 1)
+    def _flush():
+        z = acc_ref[...]
+        # cast the epilogue to the output dtype BEFORE weighting, so the
+        # result is bit-identical to host-weighting the unweighted kernel's
+        # output (w stays in its native dtype, as it would host-side)
+        r = _epilogue(z, y_ref[0].astype(jnp.float32), family,
+                      m_actual).astype(o_ref.dtype)
+        o_ref[0] = _apply_w(w_ref[...], r)
+
+
+def xb_residual_replicate(
+    X: jax.Array,
+    B: jax.Array,
+    Y: jax.Array,
+    W: jax.Array,
+    *,
+    family: str = "none",
+    m_actual: int | None = None,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> jax.Array:
+    """r_b = w_b ⊙ ∂ℓ/∂z at z_b = X·B_b, one shared X, fused epilogue.
+
+    Shapes: X (n, p), B (Bm, p, m) per-member coefficients, Y (Bm, n, m)
+    per-member responses (permutation replicates differ per member; others
+    broadcast), W (n, Bm) → r (Bm, n, m) already weighted for the gradient
+    matvec.
+    """
+    n, p = X.shape
+    Bm, p_b, m = B.shape
+    assert p_b == p and Y.shape == (Bm, n, m) and W.shape == (n, Bm), (
+        X.shape, B.shape, Y.shape, W.shape)
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    m_actual = m if m_actual is None else m_actual
+    grid = (Bm, n // bn, p // bp)
+    kernel = functools.partial(_xb_residual_replicate_kernel, family=family,
+                               m_actual=m_actual)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda b, nb, pb: (nb, pb)),  # shared X
+            pl.BlockSpec((1, bp, m), lambda b, nb, pb: (b, pb, 0)),
+            pl.BlockSpec((1, bn, m), lambda b, nb, pb: (b, nb, 0)),
+            pl.BlockSpec((bn, 1), lambda b, nb, pb: (nb, b)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, m), lambda b, nb, pb: (b, nb, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bm, n, m), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
+        interpret=interpret,
+    )(X, B, Y, W)
+
+
+def _xb_loss_residual_replicate_kernel(x_ref, b_ref, y_ref, w_ref, r_ref,
+                                       loss_ref, acc_ref, *, family,
+                                       m_actual):
+    pb = pl.program_id(2)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], b_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pb == pl.num_programs(2) - 1)
+    def _flush():
+        z = acc_ref[...]
+        y = y_ref[0].astype(jnp.float32)
+        w = w_ref[...]
+        # epilogue → output dtype first, then native-dtype weighting: bit-
+        # identical to host-weighting the unweighted kernel's outputs
+        r = _epilogue(z, y, family, m_actual).astype(r_ref.dtype)
+        r_ref[0] = _apply_w(w, r)
+        rl = _row_loss(z, y, family, m_actual)[:, None]  # (bn, 1) f32
+        loss_ref[0] = jnp.broadcast_to(
+            _apply_w(w.astype(jnp.float32), rl),
+            loss_ref.shape[1:]).astype(loss_ref.dtype)
+
+
+def xb_loss_residual_replicate(
+    X: jax.Array,
+    B: jax.Array,
+    Y: jax.Array,
+    W: jax.Array,
+    *,
+    family: str = "none",
+    m_actual: int | None = None,
+    bn: int = DEFAULT_BN,
+    bp: int = DEFAULT_BP,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (w ⊙ r, per-row weighted loss) for B members, one shared X.
+
+    The replicate analogue of :func:`xb_loss_residual`: one pass over the
+    shared X per member yields both halves of that member's FISTA forward
+    pair — ``loss_rows[b, i]`` carries ``w_{b,i}·ℓ(z_{b,i}, y_{b,i})``
+    broadcast across lanes (sum lane 0 over un-padded rows for the
+    member's weighted loss).
+    """
+    n, p = X.shape
+    Bm, p_b, m = B.shape
+    assert p_b == p and Y.shape == (Bm, n, m) and W.shape == (n, Bm), (
+        X.shape, B.shape, Y.shape, W.shape)
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    m_actual = m if m_actual is None else m_actual
+    grid = (Bm, n // bn, p // bp)
+    kernel = functools.partial(_xb_loss_residual_replicate_kernel,
+                               family=family, m_actual=m_actual)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda b, nb, pb: (nb, pb)),  # shared X
+            pl.BlockSpec((1, bp, m), lambda b, nb, pb: (b, pb, 0)),
+            pl.BlockSpec((1, bn, m), lambda b, nb, pb: (b, nb, 0)),
+            pl.BlockSpec((bn, 1), lambda b, nb, pb: (nb, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn, m), lambda b, nb, pb: (b, nb, 0)),
+            pl.BlockSpec((1, bn, m), lambda b, nb, pb: (b, nb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bm, n, m), X.dtype),
+            jax.ShapeDtypeStruct((Bm, n, m), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, m), jnp.float32)],
+        interpret=interpret,
+    )(X, B, Y, W)
 
 
 def _row_loss(z, y, family: str, m_actual: int):

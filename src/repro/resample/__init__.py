@@ -1,0 +1,41 @@
+"""``repro.resample`` — materialize-free bootstrap / permutation /
+subsample replicates for SLOPE paths.
+
+A :class:`ResamplePlan` turns one seed into B replicate problems
+represented as per-member ``(B, n)`` row weights against ONE shared
+``(n, p)`` X; the weight-fused replicate engines solve all B paths without
+ever materializing a ``(B, n, p)`` batch (O(n·p + B·n) memory — ROADMAP
+item 4).  On top ride the paper-adjacent inference workloads: stability
+selection with per-predictor selection frequencies, Westfall–Young
+max-|gradient| permutation p-values, and bagged SLOPE aggregation.
+"""
+
+from .metrics import RESAMPLE_METRICS, resample_stats
+from .plans import RESAMPLE_KINDS, ResamplePlan
+from .select import (
+    BaggedResult,
+    PermutationResult,
+    ReplicateResult,
+    StabilityResult,
+    bagged_slope,
+    fit_replicates,
+    permutation_pvalues,
+    selection_frequencies,
+    stability_selection,
+)
+
+__all__ = [
+    "ResamplePlan",
+    "RESAMPLE_KINDS",
+    "RESAMPLE_METRICS",
+    "resample_stats",
+    "ReplicateResult",
+    "StabilityResult",
+    "PermutationResult",
+    "BaggedResult",
+    "fit_replicates",
+    "selection_frequencies",
+    "stability_selection",
+    "permutation_pvalues",
+    "bagged_slope",
+]

@@ -1,0 +1,50 @@
+"""The shared ``ns=resample`` metrics registry.
+
+One process-wide :class:`~repro.obs.MetricsRegistry` for the resampling
+subsystem, split into its own module so the serve layer can read it
+(``PathService.stats()["resample"]``) by importing
+``repro.resample.metrics`` without pulling the jax-heavy driver modules
+into its import graph ordering.
+
+Series:
+
+* ``replicates_in_flight{kind=...}`` (gauge) — members of the currently
+  executing replicate batch, 0 when idle.
+* ``replicates{kind=...,backend=...}`` (counter) — total replicate paths
+  fitted, by plan kind and engine backend.
+* ``selection_frequency`` (histogram) — per-predictor max selection
+  frequencies from stability-selection runs.
+* ``null_calibration_draws`` (counter) — permutation-null max-|gradient|
+  draws taken by :func:`repro.resample.permutation_pvalues`.
+"""
+
+from __future__ import annotations
+
+from ..obs.registry import MetricsRegistry
+
+__all__ = ["RESAMPLE_METRICS", "resample_stats", "track_in_flight"]
+
+RESAMPLE_METRICS = MetricsRegistry("resample")
+
+
+def track_in_flight(kind: str, delta: int) -> None:
+    """Adjust the ``replicates_in_flight`` gauge by ``delta`` members
+    (floored at 0) — the serve layer's submit/collect bookkeeping, where
+    several resample requests can be in flight at once."""
+    g = RESAMPLE_METRICS.gauge("replicates_in_flight", kind=kind)
+    RESAMPLE_METRICS.set_gauge("replicates_in_flight",
+                               max(0.0, g.value + delta), kind=kind)
+
+
+def resample_stats() -> dict:
+    """JSON-safe read-through view for the services' ``stats()``."""
+    reg = RESAMPLE_METRICS
+    gauges = reg.snapshot()["gauges"]
+    in_flight = sum(v for series, v in gauges.items()
+                    if series.startswith("replicates_in_flight"))
+    return {
+        "replicates_in_flight": in_flight,
+        "replicates": reg.label_values("replicates", "kind"),
+        "selection_frequency": reg.histogram("selection_frequency").summary(),
+        "null_calibration_draws": reg.value("null_calibration_draws"),
+    }

@@ -1,0 +1,304 @@
+"""Resampling workload drivers: stability selection, permutation
+inference and bagging over weight-fused SLOPE paths.
+
+Every driver here fits B replicates against ONE shared ``(n, p)`` X via
+the replicate engines (:func:`repro.core.engine.replicate_path_engine` /
+``replicate_compact_path_engine``) — the per-member state is the
+``(B, n)`` row-weight matrix a :class:`~repro.resample.plans.ResamplePlan`
+generates, never a ``(B, n, p)`` materialized batch.
+
+* :func:`stability_selection` — per-predictor selection frequencies over
+  bootstrap/subsample replicates at every path point, plus a
+  frequency-threshold selector (Meinshausen–Bühlmann-style; the σ grid is
+  shared across replicates so frequencies are comparable per grid point).
+* :func:`permutation_pvalues` — Westfall–Young max-|gradient| null
+  calibration for the SLOPE path entry statistic: under permuted y the
+  strongest null predictor score ``T_b = max_j |∇f(0)_j|`` calibrates
+  family-wise p-values ``p_j = (1 + #{b : T_b ≥ |g_j|}) / (B + 1)``.
+  This is exactly the statistic the strong screening rule thresholds
+  (c = |∇f(β)| against λ), so the null draws reuse the engines' gradient
+  convention verbatim.
+* :func:`bagged_slope` — bootstrap-aggregated coefficients (mean ± sd over
+  replicates, per path point).
+
+All drivers publish telemetry to the shared ``ns=resample``
+:class:`~repro.obs.MetricsRegistry` (``repro.resample.metrics``): replicate
+gauge, selection-frequency histogram, null-calibration draw counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import (
+    CompactStats,
+    EnginePath,
+    null_gradient,
+    null_sigma_grid,
+    replicate_compact_path_engine,
+    replicate_path_engine,
+)
+from ..core.losses import Family, ols
+from ..core.solver import (
+    DEFAULT_KKT_TOL,
+    DEFAULT_MAX_REFITS,
+    DEFAULT_PATH_MAX_ITER,
+    DEFAULT_PATH_TOL,
+)
+from .metrics import RESAMPLE_METRICS
+from .plans import ResamplePlan
+
+__all__ = [
+    "ReplicateResult",
+    "StabilityResult",
+    "PermutationResult",
+    "BaggedResult",
+    "fit_replicates",
+    "selection_frequencies",
+    "stability_selection",
+    "permutation_pvalues",
+    "bagged_slope",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicateResult:
+    """B weight-fused replicate paths against one shared X."""
+
+    betas: np.ndarray        # (B, L, p, m)
+    sigmas: np.ndarray       # (L,) shared σ grid
+    lam: np.ndarray
+    weights: np.ndarray      # (B, n) count/mask/unit row weights
+    health: np.ndarray       # (B, L) int32 HEALTH_* words
+    plan: ResamplePlan
+    stats: CompactStats | None = None  # compact backend only
+
+    @property
+    def n_replicates(self) -> int:
+        return self.betas.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class StabilityResult:
+    """Selection frequencies + threshold selector over the path."""
+
+    frequencies: np.ndarray     # (L, p) selection frequency per path point
+    max_frequency: np.ndarray   # (p,) max over the path — the selector input
+    selected: np.ndarray        # (p,) bool, max_frequency ≥ threshold
+    threshold: float
+    replicates: ReplicateResult
+
+
+@dataclasses.dataclass(frozen=True)
+class PermutationResult:
+    """Max-|gradient| permutation calibration for path entry."""
+
+    pvalues: np.ndarray         # (p,) family-wise adjusted p-values
+    observed: np.ndarray        # (p,) observed |∇f(0)| per predictor
+    null_max: np.ndarray        # (B,) permutation-null max-|gradient| draws
+    plan: ResamplePlan
+
+
+@dataclasses.dataclass(frozen=True)
+class BaggedResult:
+    """Bootstrap-aggregated coefficients along the path."""
+
+    betas_mean: np.ndarray      # (L, p, m) replicate mean
+    betas_sd: np.ndarray        # (L, p, m) replicate sd
+    replicates: ReplicateResult
+
+
+def fit_replicates(
+    X,
+    y,
+    lam,
+    plan: ResamplePlan,
+    family: Family = ols,
+    *,
+    sigmas=None,
+    path_length: int = 100,
+    sigma_ratio: float | None = None,
+    working_set: int | None = None,
+    ws_tiers: int | None = None,
+    screening: str = "strong",
+    solver_tol: float = DEFAULT_PATH_TOL,
+    max_iter: int = DEFAULT_PATH_MAX_ITER,
+    kkt_tol: float = DEFAULT_KKT_TOL,
+    max_refits: int = DEFAULT_MAX_REFITS,
+) -> ReplicateResult:
+    """Fit B replicate paths with the weight-fused engines.
+
+    The σ grid is computed once from the *original* problem and shared by
+    every member, so downstream per-grid-point statistics (selection
+    frequencies, bagged means) compare like with like.  ``working_set``
+    picks the compact gather engine (width = working_set, optional second
+    tier at ``ws_tiers``·W); ``None`` runs the masked engine.
+    """
+    X = np.asarray(X)
+    y = np.asarray(y)
+    lam = np.asarray(lam)
+    n = X.shape[0]
+    if sigmas is None:
+        sigmas = null_sigma_grid(X, y, lam, family, path_length=path_length,
+                                 sigma_ratio=sigma_ratio)
+    sigmas = np.asarray(sigmas)
+
+    weights = plan.row_weights(n, dtype=jnp.asarray(X).dtype)
+    y_fit = plan.permuted_targets(y) if plan.kind == "permutation" else \
+        jnp.asarray(y)
+
+    RESAMPLE_METRICS.set_gauge("replicates_in_flight", plan.n_replicates,
+                               kind=plan.kind)
+    RESAMPLE_METRICS.inc("replicates", plan.n_replicates, kind=plan.kind,
+                         backend="compact" if working_set else "masked")
+    try:
+        if working_set is None:
+            res = replicate_path_engine(
+                jnp.asarray(X), y_fit, jnp.asarray(lam), jnp.asarray(sigmas),
+                weights, family, screening=screening, max_iter=max_iter,
+                tol=solver_tol, kkt_tol=kkt_tol, max_refits=max_refits)
+            stats = None
+        else:
+            width2 = None if not ws_tiers or ws_tiers < 2 else \
+                min(2 * int(working_set), X.shape[1] * max(family.n_classes, 1))
+            res, cstats = replicate_compact_path_engine(
+                jnp.asarray(X), y_fit, jnp.asarray(lam), jnp.asarray(sigmas),
+                weights, family, width=int(working_set), width2=width2,
+                screening=screening, max_iter=max_iter, tol=solver_tol,
+                kkt_tol=kkt_tol, max_refits=max_refits)
+            stats = CompactStats(*(np.asarray(s) for s in cstats))
+    finally:
+        RESAMPLE_METRICS.set_gauge("replicates_in_flight", 0, kind=plan.kind)
+
+    return ReplicateResult(
+        betas=np.asarray(res.betas),
+        sigmas=sigmas,
+        lam=lam,
+        weights=np.asarray(weights),
+        health=np.asarray(res.health),
+        plan=plan,
+        stats=stats,
+    )
+
+
+def selection_frequencies(betas, *, tol: float = 0.0) -> np.ndarray:
+    """Per-predictor selection frequency ``(L, p)`` over replicate paths.
+
+    ``betas`` is ``(B, L, p, m)`` (a multiclass predictor counts as
+    selected when *any* of its class coefficients exceeds ``tol``).
+    """
+    b = np.asarray(betas)
+    active = np.abs(b).max(axis=-1) > tol  # (B, L, p)
+    return active.mean(axis=0)
+
+
+def stability_selection(
+    X,
+    y,
+    lam,
+    plan: ResamplePlan | None = None,
+    family: Family = ols,
+    *,
+    threshold: float = 0.6,
+    tol: float = 0.0,
+    **fit_kwargs,
+) -> StabilityResult:
+    """Stability-selection frequencies + threshold selector for SLOPE.
+
+    Defaults to a 100-replicate half-subsample plan (the classical
+    stability-selection resampling scheme); pass a bootstrap plan for
+    bagged-frequency variants.  A predictor is selected when its maximal
+    selection frequency along the path reaches ``threshold``.
+    """
+    if plan is None:
+        plan = ResamplePlan(kind="subsample", n_replicates=100, fraction=0.5)
+    if plan.kind == "permutation":
+        raise ValueError(
+            "stability selection needs a bootstrap or subsample plan; "
+            "permutation plans are for permutation_pvalues")
+    rep = fit_replicates(X, y, lam, plan, family, **fit_kwargs)
+    freq = selection_frequencies(rep.betas, tol=tol)
+    max_freq = freq.max(axis=0)
+    for f in max_freq:
+        RESAMPLE_METRICS.observe("selection_frequency", float(f))
+    return StabilityResult(
+        frequencies=freq,
+        max_frequency=max_freq,
+        selected=max_freq >= threshold,
+        threshold=float(threshold),
+        replicates=rep,
+    )
+
+
+def permutation_pvalues(
+    X,
+    y,
+    plan: ResamplePlan | None = None,
+    family: Family = ols,
+) -> PermutationResult:
+    """Westfall–Young max-|gradient| permutation p-values for path entry.
+
+    The observed statistic per predictor is ``g_j = max_m |∇f(0)_{jm}|`` —
+    the same null-gradient magnitude the σ grid and the strong rule key
+    off.  Each permutation draw recomputes it against permuted y (X fixed,
+    one shared matmul batch) and keeps the *max* over predictors, giving
+    family-wise-error-controlling adjusted p-values
+    ``p_j = (1 + #{b : T_b ≥ g_j}) / (B + 1)``.
+    """
+    if plan is None:
+        plan = ResamplePlan(kind="permutation", n_replicates=200)
+    if plan.kind != "permutation":
+        raise ValueError(
+            f"permutation_pvalues needs a permutation plan, got "
+            f"{plan.kind!r}")
+    X = np.asarray(X)
+    y = np.asarray(y)
+    p = X.shape[1]
+    m = max(family.n_classes, 1)
+
+    g_obs = np.abs(null_gradient(X, y, family)).reshape(p, m).max(axis=1)
+
+    Xj = jnp.asarray(X)
+    beta0 = jnp.zeros((p,) if m == 1 else (p, m), Xj.dtype)
+    y_perm = plan.permuted_targets(y)
+
+    def null_stat(yb):
+        g = family.gradient(Xj, yb, beta0)
+        return jnp.max(jnp.abs(g))
+
+    null_max = np.asarray(jax.vmap(null_stat)(y_perm))
+    RESAMPLE_METRICS.inc("null_calibration_draws", plan.n_replicates)
+
+    B = plan.n_replicates
+    exceed = (null_max[:, None] >= g_obs[None, :]).sum(axis=0)
+    pvalues = (1.0 + exceed) / (B + 1.0)
+    return PermutationResult(pvalues=pvalues, observed=g_obs,
+                             null_max=null_max, plan=plan)
+
+
+def bagged_slope(
+    X,
+    y,
+    lam,
+    plan: ResamplePlan | None = None,
+    family: Family = ols,
+    **fit_kwargs,
+) -> BaggedResult:
+    """Bagged SLOPE: bootstrap-aggregated coefficients along the path."""
+    if plan is None:
+        plan = ResamplePlan(kind="bootstrap", n_replicates=100)
+    if plan.kind == "permutation":
+        raise ValueError(
+            "bagging aggregates refitted coefficients; permutation plans "
+            "destroy the signal being aggregated — use bootstrap/subsample")
+    rep = fit_replicates(X, y, lam, plan, family, **fit_kwargs)
+    return BaggedResult(
+        betas_mean=rep.betas.mean(axis=0),
+        betas_sd=rep.betas.std(axis=0),
+        replicates=rep,
+    )

@@ -39,6 +39,7 @@ _LAZY = {
     "PathService": "service",
     "PathResponse": "service",
     "CvResponse": "service",
+    "ResampleResponse": "service",
     "AsyncPathService": "dispatch",
     "FaultPlan": "faults",
     "FaultSpec": "faults",

@@ -49,7 +49,12 @@ class ProgramSpec:
     state by ``step_chunk`` σ-steps per call
     (:func:`repro.core.engine.chunk_path_engine` — masked engine only), and
     ``"init"`` is the batched prefill that seeds a newly inserted slot
-    (:func:`repro.core.engine.path_init_engine`).
+    (:func:`repro.core.engine.path_init_engine`).  ``"replicate"`` is the
+    weight-fused resample program: ``batch`` row-reweighted members against
+    ONE shared ``(n_rows, n_cols)`` design
+    (:func:`repro.core.engine.replicate_path_engine`, or the compact
+    variant when ``working_set`` is set) — the resident operands are
+    O(n·p + B·n), never a (B, n, p) stack.
     """
 
     family: Family
@@ -70,9 +75,9 @@ class ProgramSpec:
     step_chunk: int | None = None
 
     def __post_init__(self):
-        if self.variant not in ("path", "chunk", "init"):
-            raise ValueError(f"variant must be 'path', 'chunk' or 'init', "
-                             f"got {self.variant!r}")
+        if self.variant not in ("path", "chunk", "init", "replicate"):
+            raise ValueError(f"variant must be 'path', 'chunk', 'init' or "
+                             f"'replicate', got {self.variant!r}")
         if self.variant == "chunk":
             if self.step_chunk is None or self.step_chunk < 1:
                 raise ValueError("variant='chunk' needs step_chunk ≥ 1, got "
@@ -97,6 +102,8 @@ class ProgramSpec:
             s += f"/chunk{self.step_chunk}"
         elif self.variant == "init":
             s += "/init"
+        elif self.variant == "replicate":
+            s += "/replicate"
         return s
 
     def plan(self):
@@ -115,6 +122,10 @@ class ProgramSpec:
         if self.variant == "chunk":
             reason += (f" (continuous batching: {self.step_chunk}-step "
                        f"chunks, slots recycled at chunk boundaries)")
+        elif self.variant == "replicate":
+            reason += (f" (weight-fused replicates: {self.batch} members "
+                       f"share ONE {self.n_rows}×{self.n_cols} design via "
+                       f"per-member row weights)")
         return ExecutionPlan(
             backend="serve",
             mode="compact" if self.working_set else "masked",
@@ -132,11 +143,13 @@ class CompiledProgram:
 
     ``"path"`` programs take ``(Xs, ys, lam, sigmas, p_valid)``; ``"chunk"``
     programs take ``(Xs, ys, lam, sig_prev, sig_next, live, beta, grad,
-    active, L, health, p_valid)``; ``"init"`` programs take ``(Xs, ys)``.
-    Operands
+    active, L, health, p_valid)``; ``"init"`` programs take ``(Xs, ys)``;
+    ``"replicate"`` programs take ``(X, ys, lam, sigmas, weights, p_valid)``
+    with one shared (N, P) design, (B, N) member responses/weights and a
+    scalar ``p_valid``.  Operands
     are converted as-is — AOT executables demand exact dtypes, so callers
     own them — except the trailing int32 ``p_valid``, which is cast for
-    convenience on the two variants that end with it.
+    convenience on the variants that end with it.
     """
 
     def __init__(self, spec: ProgramSpec, compiled, build_seconds: float):
@@ -150,7 +163,7 @@ class CompiledProgram:
 
         self.calls += 1
         args = [jnp.asarray(a) for a in operands]
-        if self.spec.variant in ("path", "chunk"):
+        if self.spec.variant in ("path", "chunk", "replicate"):
             args[-1] = jnp.asarray(args[-1], jnp.int32)  # p_valid
         return self._compiled(*args)
 
@@ -162,6 +175,8 @@ def _build(spec: ProgramSpec) -> tuple:
         chunk_path_engine,
         compact_path_engine,
         path_init_engine,
+        replicate_compact_path_engine,
+        replicate_path_engine,
     )
 
     m = spec.family.n_classes
@@ -178,7 +193,25 @@ def _build(spec: ProgramSpec) -> tuple:
               tol=spec.solver_tol, kkt_tol=spec.kkt_tol,
               max_refits=spec.max_refits)
     t0 = time.perf_counter()
-    if spec.variant == "init":
+    if spec.variant == "replicate":
+        # ONE shared (N, P) design, (B, N) member responses and row
+        # weights, one shared λ/σ grid, scalar p_valid
+        rdata = (
+            sds((N, P), f),                         # shared X
+            sds((B, N), np.dtype(spec.y_dtype)),    # per-member y
+            sds((P * m,), f),                       # shared λ
+            sds((L,), f),                           # shared σ grid
+            sds((B, N), f),                         # per-member row weights
+        )
+        rpv = sds((), np.int32)
+        if spec.working_set is None:
+            lowered = replicate_path_engine.lower(*rdata, spec.family, rpv,
+                                                  **kw)
+        else:
+            lowered = replicate_compact_path_engine.lower(
+                *rdata, spec.family, rpv, width=spec.working_set,
+                width2=spec.working_set_top, **kw)
+    elif spec.variant == "init":
         lowered = path_init_engine.lower(*data, spec.family)
     elif spec.variant == "chunk":
         C = spec.step_chunk

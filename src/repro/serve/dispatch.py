@@ -61,7 +61,13 @@ from ..core.solver import DEFAULT_WS_TIERS
 from .batcher import Pending, QueueFull, Rejection
 from .buckets import pad_batch
 from .cache import ProgramSpec
-from .service import CvResponse, PathResponse, PathService, _GroupKey
+from .service import (
+    CvResponse,
+    PathResponse,
+    PathService,
+    ResampleResponse,
+    _GroupKey,
+)
 
 __all__ = ["AsyncPathService", "Rejection"]
 
@@ -176,6 +182,7 @@ class AsyncPathService(PathService):
             self._futures.clear()
             self._traces.clear()
             self._cv_fold_rids.clear()
+            self._rs_member_rids.clear()
         for rid, fut in leftovers:
             if not fut.done():
                 fut.set_exception(RuntimeError(
@@ -205,7 +212,7 @@ class AsyncPathService(PathService):
     # -- admission (future-returning) ---------------------------------------
 
     def _admit(self, key: _GroupKey, item, *, deadline_ms=None, priority=0,
-               _cv_fold: bool = False) -> Future:
+               _cv_fold: bool = False, _rs_member: bool = False) -> Future:
         fut: Future = Future()
         t_in = self._clock()
         with self._lock:
@@ -215,6 +222,8 @@ class AsyncPathService(PathService):
             fut.rid = rid
             if _cv_fold:
                 self._cv_fold_rids.add(rid)
+            if _rs_member:
+                self._rs_member_rids.add(rid)
             item = self._maybe_corrupt(rid, item)
             now = self._clock()
             try:
@@ -224,6 +233,7 @@ class AsyncPathService(PathService):
             except QueueFull as e:
                 self.metrics.inc("rejected")
                 self._cv_fold_rids.discard(rid)
+                self._rs_member_rids.discard(rid)
                 fut.set_result(Rejection(
                     rid=rid, reason=str(e), queued=self._batcher.pending(),
                     max_queue=self._batcher.max_queue))
@@ -241,6 +251,7 @@ class AsyncPathService(PathService):
         self._record_latency(rid, resp)   # before dropping fold membership
         self._finish_trace(rid, resp)
         self._cv_fold_rids.discard(rid)
+        self._rs_member_rids.discard(rid)
         fut = self._futures.pop(rid, None)
         if fut is not None and not fut.done():
             fut.set_result(resp)
@@ -314,6 +325,46 @@ class AsyncPathService(PathService):
         for f in fold_futs:
             f.add_done_callback(on_fold_done)
         return cv_fut
+
+    # -- resample: member futures aggregate the same way --------------------
+
+    def _register_resample(self, rid, member_futs, W, rs, sigmas,
+                           lam) -> Future:
+        from ..resample.metrics import track_in_flight
+
+        parent: Future = Future()
+        parent.rid = rid
+        remaining = [len(member_futs)]
+        agg_lock = threading.Lock()
+
+        def on_member_done(_):
+            with agg_lock:
+                remaining[0] -= 1
+                if remaining[0]:
+                    return
+            try:
+                members = [f.result() for f in member_futs]
+                track_in_flight(rs.kind, -len(members))
+                rej = next((r for r in members if isinstance(r, Rejection)),
+                           None)
+                if rej is not None:
+                    parent.set_result(Rejection(
+                        rid=rid,
+                        reason=f"replicate member rejected: {rej.reason}",
+                        queued=rej.queued, max_queue=rej.max_queue))
+                    return
+                self.metrics.inc("completed")
+                parent.set_result(ResampleResponse(
+                    rid=rid, betas=np.stack([f.betas for f in members]),
+                    sigmas=sigmas, lam=lam, weights=W, resample=rs,
+                    member_responses=members))
+            except BaseException as e:  # pragma: no cover - defensive
+                if not parent.done():
+                    parent.set_exception(e)
+
+        for f in member_futs:
+            f.add_done_callback(on_member_done)
+        return parent
 
     # -- the dispatcher -----------------------------------------------------
 
@@ -459,16 +510,17 @@ class AsyncPathService(PathService):
         """Re-dispatch exactly ``cohort`` (no new queue pulls) through the
         normal execution path — same programs, same padded operands, so a
         successful re-serve is bit-identical to an unfaulted serve."""
-        if key.working_set is not None:
+        if key.working_set is not None or key.replicates:
             self._execute_batch(key, list(cohort), trigger="retry")
         else:
             self._run_continuous(key, "retry", cohort=list(cohort))
 
     def _serve_group(self, key: _GroupKey, trigger: str) -> None:
-        if key.working_set is not None:
-            # compact carried state is not slot-swappable: whole-grid
-            # program, same as the synchronous service (delivery still
-            # resolves futures through the _deliver override)
+        if key.working_set is not None or key.replicates:
+            # compact carried state is not slot-swappable, and replicate
+            # chunks already batch continuously over the member axis:
+            # whole-grid program, same as the synchronous service (delivery
+            # still resolves futures through the _deliver override)
             self._flush_group(key, trigger=trigger)
         else:
             self._run_continuous(key, trigger)

@@ -58,6 +58,7 @@ from ..api.specs import (
     ValidationError,
     apply_weights,
     as_lambda_spec,
+    check_weights,
     find_nonfinite,
     shared_canonicalizer,
 )
@@ -78,6 +79,12 @@ from ..core.solver import DEFAULT_WS_TIERS
 from ..core.losses import Family, ols
 from ..obs import MetricsRegistry, Trace
 from ..obs.profile import annotate
+from ..resample.metrics import (
+    RESAMPLE_METRICS,
+    resample_stats,
+    track_in_flight,
+)
+from ..resample.plans import ResamplePlan
 from .batcher import (
     LambdaCanonicalizer,
     MicroBatcher,
@@ -89,7 +96,7 @@ from .buckets import ShapeBucketPolicy, default_policy, pad_batch
 from .cache import ProgramCache, ProgramSpec
 from .faults import FaultPlan, NO_FAULTS
 
-__all__ = ["PathService", "PathResponse", "CvResponse"]
+__all__ = ["PathService", "PathResponse", "CvResponse", "ResampleResponse"]
 
 
 @dataclasses.dataclass
@@ -102,6 +109,9 @@ class _Item:
     sigmas: np.ndarray     # native (L,)
     family: Family
     working_set: int | str | None
+    weights: np.ndarray | None = None  # (n,) replicate row weights — set
+    #   only on resample members; every item in a replicate group shares
+    #   the SAME X object, so the flush pads the design once
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +133,10 @@ class _GroupKey:
     #   normalizes to 2 at submit, masked requests to 1)
     dtype: str
     y_dtype: str
+    replicates: int = 0             # resample-request token (0 = plain
+    #   fit): members of ONE ResamplePlan share a token — and hence one
+    #   group, one compiled weight-fused program, and ONE padded design —
+    #   and never co-batch with plain fits or other resample requests
 
 
 @dataclasses.dataclass
@@ -225,6 +239,43 @@ class _CvPending:
     selection: str
 
 
+@dataclasses.dataclass
+class ResampleResponse:
+    """Aggregated B-replicate resample request (members served like plain
+    fits, chunked through the weight-fused replicate program)."""
+
+    rid: int
+    betas: np.ndarray              # (B, L, p) or (B, L, p, m)
+    sigmas: np.ndarray             # (L,) shared grid
+    lam: np.ndarray
+    weights: np.ndarray            # (B, n) per-member row weights
+    resample: ResamplePlan
+    member_responses: list[PathResponse]
+
+    @property
+    def n_replicates(self) -> int:
+        return self.betas.shape[0]
+
+    def selection_frequencies(self, *, tol: float = 0.0) -> np.ndarray:
+        """Per-(grid-point, predictor) selection frequencies over the
+        replicates — the stability-selection statistic."""
+        from ..resample.select import selection_frequencies
+
+        betas = self.betas
+        if betas.ndim == 3:
+            betas = betas[..., None]
+        return selection_frequencies(betas, tol=tol)
+
+
+@dataclasses.dataclass
+class _RsPending:
+    member_rids: list[int]
+    weights: np.ndarray            # (B, n)
+    resample: ResamplePlan
+    sigmas: np.ndarray
+    lam: np.ndarray
+
+
 class PathService:
     """Shape-bucketed micro-batching front-end over the device path engine.
 
@@ -267,6 +318,9 @@ class PathService:
         self._cv: dict[int, _CvPending] = {}
         self._cv_hold: OrderedDict[int, PathResponse] = OrderedDict()
         self._cv_fold_rids: set[int] = set()
+        self._rs: dict[int, _RsPending] = {}
+        self._rs_hold: OrderedDict[int, PathResponse] = OrderedDict()
+        self._rs_member_rids: set[int] = set()
         # every counter/distribution this service reports lives in ONE
         # thread-safe registry; stats() is a read-through view over it, so
         # the dict schema and the incremented numbers cannot drift.
@@ -434,7 +488,7 @@ class PathService:
 
     def _admit(self, key: _GroupKey, item: _Item, *,
                deadline_ms: float | None = None, priority: int = 0,
-               _cv_fold: bool = False) -> int:
+               _cv_fold: bool = False, _rs_member: bool = False) -> int:
         """Queue one canonicalized request; the async subclass overrides
         this to return a future and to reject-with-status at capacity.
 
@@ -451,6 +505,8 @@ class PathService:
                 # group (fill, or a deadline on a neighbour) synchronously,
                 # and the flush routes responses by this membership
                 self._cv_fold_rids.add(rid)
+            if _rs_member:
+                self._rs_member_rids.add(rid)  # same ordering constraint
             item = self._maybe_corrupt(rid, item)
             now = self._clock()
             try:
@@ -460,6 +516,7 @@ class PathService:
             except QueueFull as e:
                 self.metrics.inc("rejected")
                 self._cv_fold_rids.discard(rid)
+                self._rs_member_rids.discard(rid)
                 raise RejectionError(Rejection(
                     rid=rid, reason=str(e), queued=self._batcher.pending(),
                     max_queue=self._batcher.max_queue)) from None
@@ -516,6 +573,8 @@ class PathService:
                            if policy.backend == "auto" else policy)
             plan = plan_execution(problem, path, plan_policy)
         pln = plan
+        if path.resample is not None:
+            return self._submit_resample(problem, path, policy, pln)
         ws = None
         if pln.mode == "compact":
             ws = policy.working_set
@@ -568,6 +627,98 @@ class PathService:
                 sigmas=sigmas, family=family, selection=selection)
             return rid
 
+    def _submit_resample(self, problem: Problem, path: PathSpec,
+                         policy: SolverPolicy, pln):
+        """Fan a :class:`~repro.resample.ResamplePlan` out into B replicate
+        members riding the normal shape-bucketed queues.
+
+        Every member carries its (n,) row-weight vector and a reference to
+        the SAME native design; the group key's ``replicates`` token keeps
+        one request's members together, so each flushed chunk runs the
+        weight-fused replicate program against ONE padded X (operands stay
+        O(n·p + slots·n) per chunk — no (B, n, p) stack, no per-member X
+        copies).  Chunks of up to ``slots`` members form by the same fill /
+        deadline rules as plain fits — continuous chunked batching over the
+        replicate axis.  Members aggregate like CV folds: collection (sync
+        ``poll`` / async future) returns a :class:`ResampleResponse` once
+        every member has been served.
+        """
+        rs = path.resample
+        X = np.asarray(problem.X)
+        y = np.asarray(problem.y)
+        family = problem.family
+        n, p = X.shape
+        m = family.n_classes
+        lam = as_lambda_spec(path.lam).resolve(
+            p * m, n=n, canonicalizer=self.canonicalizer)
+        lam = np.asarray(lam)
+        if policy.validate == "strict":
+            issues = find_nonfinite(X=X, y=y, lam=lam, sigmas=path.sigmas)
+            if issues:
+                self.metrics.inc("validation_rejected")
+                raise ValidationError(issues)
+        sigmas = path.sigmas
+        if sigmas is None:
+            # shared grid from the ORIGINAL problem — replicates compare
+            # like with like, exactly as CV folds share the full-data grid
+            sigmas = null_sigma_grid(X, y, lam, family,
+                                     path_length=path.path_length,
+                                     sigma_ratio=path.sigma_ratio)
+        sigmas = np.asarray(sigmas)
+        W = np.asarray(rs.row_weights(n, dtype=X.dtype))
+        if problem.weights is not None:
+            W = W * check_weights(problem)[None, :]
+        y_members = (np.asarray(rs.permuted_targets(y))
+                     if rs.kind == "permutation" else None)
+
+        ws = None
+        ws_tiers = 1
+        if pln.mode == "compact":
+            ws = policy.working_set
+            ws = "auto" if ws is None or ws == "auto" else ws
+            ws_tiers = 1 if policy.ws_tiers == 1 else 2
+        N, P = self.policy.shape_bucket(n, p, family.name)
+        if isinstance(ws, int):
+            ws = _ws_bucket(ws, N, P, (N, P, m, family.name, policy.screening))
+            if ws_tiers == 2 and second_tier_width(ws, 2, P) is None:
+                ws_tiers = 1
+        with self._lock:
+            parent_rid = self._next_rid
+            self._next_rid += 1
+            self.metrics.inc("submitted")
+        key = _GroupKey(
+            family=family, n_rows=N, n_cols=P, path_length=len(sigmas),
+            screening=policy.screening, solver_tol=policy.solver_tol,
+            max_iter=policy.max_iter, kkt_tol=policy.kkt_tol,
+            max_refits=policy.max_refits, working_set=ws, ws_tiers=ws_tiers,
+            dtype=X.dtype.name, y_dtype=y.dtype.name,
+            replicates=parent_rid + 1)
+        handles = [
+            self._admit(
+                key,
+                _Item(X=X, y=(y if y_members is None else y_members[b]),
+                      lam=lam, sigmas=sigmas, family=family, working_set=ws,
+                      weights=W[b]),
+                deadline_ms=policy.deadline_ms, priority=policy.priority,
+                _rs_member=True)
+            for b in range(rs.n_replicates)
+        ]
+        RESAMPLE_METRICS.inc("replicates", rs.n_replicates, kind=rs.kind,
+                             backend="serve")
+        track_in_flight(rs.kind, rs.n_replicates)
+        return self._register_resample(parent_rid, handles, W, rs, sigmas,
+                                       lam)
+
+    def _register_resample(self, rid: int, member_rids: list[int],
+                           W: np.ndarray, rs: ResamplePlan,
+                           sigmas: np.ndarray, lam: np.ndarray) -> int:
+        """Record the pending aggregation (``poll`` collects it); the async
+        subclass overrides this to aggregate member futures instead."""
+        with self._lock:
+            self._rs[rid] = _RsPending(member_rids=member_rids, weights=W,
+                                       resample=rs, sigmas=sigmas, lam=lam)
+        return rid
+
     # -- flushing -----------------------------------------------------------
 
     def flush(self) -> int:
@@ -597,6 +748,32 @@ class PathService:
         cohort.  Base (synchronous) service: no-op — exceptions propagate
         to the submitting caller directly."""
 
+    def _pad_replicate(self, batch, N: int, P: int, m: int):
+        """Padded operands for one weight-fused replicate chunk.
+
+        Returns ``((X, ys, lam, sigmas, weights, p_valid), n_batch)`` in the
+        replicate program's call convention: ONE shared padded (N, P)
+        design, (slots, N) member responses and row weights (zero rows on
+        padding and on empty slots — exactly inert under the engine's
+        zero-weight guard), shared λ/σ, scalar ``p_valid``.
+        """
+        item0 = batch[0].item
+        X0 = item0.X
+        n, p = X0.shape
+        dtype = X0.dtype
+        Xp = np.zeros((N, P), dtype)
+        Xp[:n, :p] = X0
+        lam = np.zeros((P * m,), dtype)
+        lam[: p * m] = np.asarray(item0.lam)[: p * m]
+        ys = np.zeros((self.slots, N), item0.y.dtype)
+        Wts = np.zeros((self.slots, N), dtype)
+        for i, pending in enumerate(batch):
+            it = pending.item
+            ys[i, :n] = it.y
+            Wts[i, :n] = it.weights
+        sigmas = np.asarray(item0.sigmas, dtype)
+        return (Xp, ys, lam, sigmas, Wts, np.int32(p)), len(batch)
+
     def _execute_batch(self, key: _GroupKey, batch, *, trigger: str) -> None:
         """Pad, compile-or-fetch, execute and deliver one taken batch.
 
@@ -623,7 +800,8 @@ class PathService:
             path_length=L, screening=key.screening,
             solver_tol=key.solver_tol, max_iter=key.max_iter,
             kkt_tol=key.kkt_tol, max_refits=key.max_refits, working_set=W,
-            working_set_top=W2, dtype=key.dtype, y_dtype=key.y_dtype)
+            working_set_top=W2, dtype=key.dtype, y_dtype=key.y_dtype,
+            variant="replicate" if key.replicates else "path")
         rids = [p.rid for p in batch]
         # opt-in tracing: traces for the rids this serve carries (empty
         # dict when tracing is off — the disabled cost is one falsy check)
@@ -633,20 +811,31 @@ class PathService:
             # the queue span ended when the batcher released the request;
             # flush covers padding + program-spec assembly
             t.mark("queue", now)
-        pb = pad_batch([(it.item.X, it.item.y, it.item.lam, it.item.sigmas)
-                        for it in batch],
-                       n_rows=N, n_cols=P, n_slots=self.slots, n_classes=m)
+        if key.replicates:
+            # replicate chunk: every member references the SAME native X
+            # (the group token guarantees it), so the design is padded
+            # ONCE and members contribute only a (N,) response row and a
+            # (N,) weight row — empty slots keep all-zero weights, which
+            # the weight-fused engine solves as exact null members
+            operands, n_batch = self._pad_replicate(batch, N, P, m)
+        else:
+            pb = pad_batch(
+                [(it.item.X, it.item.y, it.item.lam, it.item.sigmas)
+                 for it in batch],
+                n_rows=N, n_cols=P, n_slots=self.slots, n_classes=m)
+            operands = (pb.Xs, pb.ys, pb.lam, pb.sigmas, pb.p_valid)
+            n_batch = pb.n_batch
         self._faults.fire("compile", rids=rids)
         for t in trs:
             t.mark("flush", self._clock(), trigger=trigger,
-                   slots=self.slots, batch=pb.n_batch)
+                   slots=self.slots, batch=n_batch)
         prog, hit = self.cache.get(spec)
         for t in trs:
             t.mark("compile", self._clock(), hit=hit, program=spec.short())
         t0 = self._clock()
         self._faults.fire("worker", rids=rids)
         with annotate(f"repro.serve.execute/{spec.short()}"):
-            out = prog(pb.Xs, pb.ys, pb.lam, pb.sigmas, pb.p_valid)
+            out = prog(*operands)
             stats = None
             if W is not None:
                 out, stats = out
@@ -656,7 +845,7 @@ class PathService:
         wall = self._clock() - t0
         for t in trs:
             t.mark("execute", self._clock(), solve_ms=round(wall * 1e3, 3))
-        B_real = pb.n_batch
+        B_real = n_batch
         # grow-on-overflow through the same helper (and the same registry)
         # fit_path_batched(working_set="auto") uses
         if ws_key is not None and stats is not None:
@@ -707,8 +896,9 @@ class PathService:
         """Queue+solve latency, routed to the user-facing or the internal
         (CV-fold-fit) window — percentiles must measure what a caller sees."""
         lat = resp.queue_s + resp.solve_s
-        scope = "internal" if rid in self._cv_fold_rids else "user"
-        self.metrics.observe("latency_s", lat, scope=scope)
+        internal = rid in self._cv_fold_rids or rid in self._rs_member_rids
+        self.metrics.observe("latency_s", lat,
+                             scope="internal" if internal else "user")
 
     def _finish_trace(self, rid: int, resp: PathResponse) -> None:
         """Close and attach the request's trace (the final "deliver" span)."""
@@ -729,6 +919,8 @@ class PathService:
         self._finish_trace(rid, resp)
         if rid in self._cv_fold_rids:
             self._store(self._cv_hold, rid, resp)
+        elif rid in self._rs_member_rids:
+            self._store(self._rs_hold, rid, resp)
         else:
             self._store(self._done, rid, resp)
 
@@ -739,6 +931,7 @@ class PathService:
             # an evicted fold orphans its CV request; drop the membership
             # so the set cannot grow unboundedly with abandoned folds
             self._cv_fold_rids.discard(old)
+            self._rs_member_rids.discard(old)
             self.metrics.inc("results_evicted")
 
     # -- collection ---------------------------------------------------------
@@ -756,6 +949,8 @@ class PathService:
             self._flush_due(self._clock())
             if rid in self._cv:
                 return self._collect_cv(rid)
+            if rid in self._rs:
+                return self._collect_rs(rid)
             return self._done.pop(rid, None)
 
     def _collect_cv(self, rid: int):
@@ -777,6 +972,20 @@ class PathService:
             best_sigma=float(cv.sigmas[best]), best_index_min=best_min,
             best_index_1se=best_1se, selection=cv.selection,
             fold_responses=folds)
+
+    def _collect_rs(self, rid: int):
+        rp = self._rs[rid]
+        if not all(r in self._rs_hold for r in rp.member_rids):
+            return None
+        del self._rs[rid]
+        members = [self._rs_hold.pop(r) for r in rp.member_rids]
+        self._rs_member_rids.difference_update(rp.member_rids)
+        self.metrics.inc("completed")
+        track_in_flight(rp.resample.kind, -len(members))
+        return ResampleResponse(
+            rid=rid, betas=np.stack([f.betas for f in members]),
+            sigmas=rp.sigmas, lam=rp.lam, weights=rp.weights,
+            resample=rp.resample, member_responses=members)
 
     # -- warmup & telemetry -------------------------------------------------
 
@@ -820,8 +1029,10 @@ class PathService:
             return {
                 "submitted": m.value("submitted"),
                 "completed": m.value("completed"),
-                "pending": self._batcher.pending() + len(self._cv),
-                "unclaimed": len(self._done) + len(self._cv_hold),
+                "pending": (self._batcher.pending() + len(self._cv)
+                            + len(self._rs)),
+                "unclaimed": (len(self._done) + len(self._cv_hold)
+                              + len(self._rs_hold)),
                 "results_evicted": m.value("results_evicted"),
                 "batches": m.value("batches"),
                 "flush_fill": m.value("flush", trigger="fill"),
@@ -850,4 +1061,7 @@ class PathService:
                 # planner/program decisions behind the numbers above
                 "plans": m.label_values("plans", "plan"),
                 "ws_buckets": _WS_BUCKETS.summary(),
+                # the resampling subsystem's registry (ns=resample) — one
+                # read-through dict, shared with direct execution
+                "resample": resample_stats(),
             }

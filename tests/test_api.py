@@ -63,14 +63,14 @@ EXPECTED_ALL = {
     "Problem", "LambdaSpec", "PathSpec", "SolverPolicy", "ExecutionPlan",
     "plan_execution", "slope_path", "SlopE", "as_lambda_spec",
     "default_service", "default_async_service", "shared_canonicalizer",
-    "ValidationError", "find_nonfinite",
+    "ValidationError", "find_nonfinite", "ResamplePlan",
 }
 
 EXPECTED_FIELDS = {
     Problem: ["X", "y", "family", "weights"],
     LambdaSpec: ["kind", "q", "values"],
     PathSpec: ["lam", "path_length", "sigma_ratio", "sigmas", "early_stop",
-               "cv_folds", "stratify", "selection"],
+               "cv_folds", "stratify", "selection", "resample"],
     SolverPolicy: ["backend", "working_set", "ws_tiers", "pad", "screening",
                    "solver_tol", "max_iter", "kkt_tol", "max_refits",
                    "verbose", "deadline_ms", "priority", "validate",

@@ -169,7 +169,7 @@ SYNC_STATS_KEYS = {
     "faults", "slots", "occupancy_mean", "padding_ratio_mean",
     "latency_ms_p50", "latency_ms_p95", "latency_count",
     "internal_latency_ms_p50", "internal_latency_ms_p95",
-    "internal_latency_count", "cache", "plans", "ws_buckets",
+    "internal_latency_count", "cache", "plans", "ws_buckets", "resample",
 }
 
 ASYNC_ONLY_KEYS = {

@@ -1,0 +1,543 @@
+"""repro.resample — materialize-free replicate engine tests.
+
+Covers the PR-9 subsystem end to end: deterministic ResamplePlan
+expansion (prefix-stable per-member PRNG), the weight-fused replicate
+engines against the materialized row-duplication reference (the property
+the whole design rests on), the compact gather variant, the weighted
+Pallas kernel wrappers, the API/planner seams (PathSpec.resample,
+Problem.weights) and the served replicate fan-out (sync + async).
+
+Runs in the test-minimal CI job: stdlib + NumPy only on top of the repo
+(hypothesis is optional via tests/_hypothesis_fallback).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.api import (
+    PathSpec,
+    Problem,
+    ResamplePlan,
+    SolverPolicy,
+    plan_execution,
+    slope_path,
+)
+from repro.core.engine import (
+    null_sigma_grid,
+    replicate_compact_path_engine,
+    replicate_path_engine,
+)
+from repro.core.lambda_seq import bh_sequence
+from repro.core.losses import logistic, ols
+from repro.resample import (
+    bagged_slope,
+    fit_replicates,
+    permutation_pvalues,
+    resample_stats,
+    selection_frequencies,
+    stability_selection,
+)
+
+ENG_KW = dict(screening="strong", max_iter=20000, tol=1e-10, kkt_tol=1e-4,
+              max_refits=32)
+POL = dict(solver_tol=1e-10, max_iter=20000, kkt_tol=1e-4)
+
+
+def _problem(n, p, seed=0, k=3, noise=0.5):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    beta = np.zeros(p)
+    beta[:k] = 2.0 * np.sign(rng.standard_normal(k))
+    y = X @ beta + noise * rng.standard_normal(n)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    return X, y, lam
+
+
+def _sigmas(X, y, lam, L=6, family=ols):
+    return np.asarray(null_sigma_grid(X, y, lam, family, path_length=L,
+                                      sigma_ratio=None))
+
+
+# ---------------------------------------------------------------------------
+# ResamplePlan: validation, determinism, prefix stability
+# ---------------------------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="unknown resample kind"):
+        ResamplePlan(kind="jackknife")
+    with pytest.raises(ValueError, match="positive int"):
+        ResamplePlan(n_replicates=0)
+    with pytest.raises(ValueError, match="positive int"):
+        ResamplePlan(n_replicates=True)
+    with pytest.raises(ValueError, match="fraction"):
+        ResamplePlan(kind="subsample", fraction=0.0)
+    with pytest.raises(ValueError, match="fraction"):
+        ResamplePlan(kind="subsample", fraction=1.5)
+
+
+@pytest.mark.parametrize("kind", ["bootstrap", "subsample", "permutation"])
+def test_plan_deterministic_and_prefix_stable(kind):
+    n = 20
+    w1 = np.asarray(ResamplePlan(kind=kind, n_replicates=8,
+                                 seed=7).row_weights(n))
+    w2 = np.asarray(ResamplePlan(kind=kind, n_replicates=8,
+                                 seed=7).row_weights(n))
+    np.testing.assert_array_equal(w1, w2)          # same seed → same draws
+    # member b depends only on (seed, b), never on B: a B=16 plan's first
+    # 8 members ARE the B=8 plan (incremental B sweeps are reproducible)
+    w16 = np.asarray(ResamplePlan(kind=kind, n_replicates=16,
+                                  seed=7).row_weights(n))
+    np.testing.assert_array_equal(w1, w16[:8])
+    if kind != "permutation":
+        w3 = np.asarray(ResamplePlan(kind=kind, n_replicates=8,
+                                     seed=8).row_weights(n))
+        assert not np.array_equal(w1, w3)          # seed actually matters
+
+
+def test_plan_weight_semantics():
+    n = 25
+    wb = np.asarray(ResamplePlan(kind="bootstrap", n_replicates=6,
+                                 seed=1).row_weights(n))
+    # n multinomial draws with replacement: counts sum to n per member
+    np.testing.assert_array_equal(wb.sum(axis=1), np.full(6, float(n)))
+    assert (wb >= 0).all() and (wb == np.round(wb)).all()
+
+    ws = np.asarray(ResamplePlan(kind="subsample", n_replicates=6, seed=1,
+                                 fraction=0.4).row_weights(n))
+    assert set(np.unique(ws)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(ws.sum(axis=1), np.full(6, 10.0))  # ⌈.4n⌉
+
+    wp = np.asarray(ResamplePlan(kind="permutation", n_replicates=4,
+                                 seed=1).row_weights(n))
+    np.testing.assert_array_equal(wp, np.ones((4, n)))
+
+
+def test_replicate_indices_agree_with_weights():
+    n = 18
+    boot = ResamplePlan(kind="bootstrap", n_replicates=5, seed=3)
+    w = np.asarray(boot.row_weights(n))
+    for b, idx in enumerate(boot.replicate_indices(n)):
+        np.testing.assert_array_equal(np.bincount(idx, minlength=n), w[b])
+    sub = ResamplePlan(kind="subsample", n_replicates=5, seed=3, fraction=0.5)
+    ws = np.asarray(sub.row_weights(n))
+    for b, idx in enumerate(sub.replicate_indices(n)):
+        np.testing.assert_array_equal(np.flatnonzero(ws[b]), idx)
+    perm = ResamplePlan(kind="permutation", n_replicates=3, seed=3)
+    y = np.arange(n, dtype=float)
+    yp = np.asarray(perm.permuted_targets(y))
+    for b, idx in enumerate(perm.replicate_indices(n)):
+        np.testing.assert_array_equal(y[idx], yp[b])
+
+
+def test_plan_is_static_pytree():
+    plan = ResamplePlan(kind="subsample", n_replicates=12, seed=5,
+                        fraction=0.7)
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    assert leaves == []                        # fully static: four scalars
+    again = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert again.kind == plan.kind and again.seed == plan.seed
+    assert again.n_replicates == 12 and again.fraction == 0.7
+
+
+# ---------------------------------------------------------------------------
+# Weight-fused engines vs the materialized reference
+# ---------------------------------------------------------------------------
+
+def test_zero_weight_member_is_exactly_null():
+    X, y, lam = _problem(20, 12, seed=2)
+    sig = _sigmas(X, y, lam)
+    W = jnp.asarray(ResamplePlan(kind="bootstrap", n_replicates=3,
+                                 seed=1).row_weights(20))
+    W = W.at[0].set(0.0)                       # an all-zero count vector
+    res = replicate_path_engine(jnp.asarray(X), jnp.asarray(y),
+                                jnp.asarray(lam), jnp.asarray(sig), W, ols,
+                                **ENG_KW)
+    # exact null member (no data → β ≡ 0), not merely small
+    assert float(jnp.max(jnp.abs(res.betas[0]))) == 0.0
+    assert float(jnp.max(jnp.abs(res.betas[1:]))) > 0.0
+
+
+def test_ones_weights_match_unweighted_path():
+    from repro.core.path import fit_path
+
+    X, y, lam = _problem(24, 16, seed=4)
+    sig = _sigmas(X, y, lam)
+    ref = fit_path(X, y, lam, ols, engine="device", sigmas=sig,
+                   early_stop=False, screening="strong", solver_tol=1e-10,
+                   max_iter=20000, kkt_tol=1e-4, max_refits=32)
+    W = jnp.ones((2, 24))
+    res = replicate_path_engine(jnp.asarray(X), jnp.asarray(y),
+                                jnp.asarray(lam), jnp.asarray(sig), W, ols,
+                                **ENG_KW)
+    # the weighted code path evaluates the same math through different
+    # expressions (w⊙r contraction), so tight-tol — not bitwise
+    ref_b = np.asarray(ref.betas).reshape(len(sig), -1)
+    for b in range(2):
+        np.testing.assert_allclose(np.asarray(res.betas[b]).reshape(
+            len(sig), -1), ref_b, atol=1e-10)
+
+
+def test_compact_matches_masked_bitwise():
+    X, y, lam = _problem(20, 30, seed=6)
+    sig = _sigmas(X, y, lam)
+    W = jnp.asarray(ResamplePlan(kind="bootstrap", n_replicates=4,
+                                 seed=2).row_weights(20))
+    masked = replicate_path_engine(jnp.asarray(X), jnp.asarray(y),
+                                   jnp.asarray(lam), jnp.asarray(sig), W,
+                                   ols, **ENG_KW)
+    compact, stats = replicate_compact_path_engine(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray(lam), jnp.asarray(sig),
+        W, ols, width=16, width2=None, **ENG_KW)
+    # the gather engine falls back to the masked solve when the working
+    # set overflows, and agrees bit-for-bit when it does not — either way
+    # the results are identical
+    np.testing.assert_array_equal(np.asarray(compact.betas),
+                                  np.asarray(masked.betas))
+    assert stats is not None
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 14), st.integers(4, 10),
+       st.integers(2, 3))
+def test_property_weighted_equals_materialized(seed, n, p, B):
+    """The load-bearing identity: a count-weighted replicate path equals
+    the path fit on the materialized row-duplicated bootstrap sample."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    y = X[:, 0] - 0.5 * X[:, p // 2] + 0.3 * rng.standard_normal(n)
+    lam = np.asarray(bh_sequence(p, q=0.1))
+    sig = _sigmas(X, y, lam, L=4)
+    plan = ResamplePlan(kind="bootstrap", n_replicates=B, seed=seed % 997)
+    W = plan.row_weights(n, dtype=jnp.float64)
+    fused = replicate_path_engine(jnp.asarray(X), jnp.asarray(y),
+                                  jnp.asarray(lam), jnp.asarray(sig), W,
+                                  ols, **ENG_KW)
+    for b, idx in enumerate(plan.replicate_indices(n)):
+        # same engine, ones-weights, on the duplicated rows — the σ grid
+        # is shared so both solve the identical sequence of problems
+        ref = replicate_path_engine(
+            jnp.asarray(X[idx]), jnp.asarray(y[idx]), jnp.asarray(lam),
+            jnp.asarray(sig), jnp.ones((1, len(idx))), ols, **ENG_KW)
+        np.testing.assert_allclose(np.asarray(fused.betas[b]),
+                                   np.asarray(ref.betas[0]), atol=1e-8)
+
+
+def test_subsample_weights_equal_materialized_subset():
+    X, y, lam = _problem(22, 10, seed=9)
+    sig = _sigmas(X, y, lam, L=4)
+    plan = ResamplePlan(kind="subsample", n_replicates=3, seed=11,
+                        fraction=0.6)
+    W = plan.row_weights(22, dtype=jnp.float64)
+    fused = replicate_path_engine(jnp.asarray(X), jnp.asarray(y),
+                                  jnp.asarray(lam), jnp.asarray(sig), W,
+                                  ols, **ENG_KW)
+    for b, idx in enumerate(plan.replicate_indices(22)):
+        ref = replicate_path_engine(
+            jnp.asarray(X[idx]), jnp.asarray(y[idx]), jnp.asarray(lam),
+            jnp.asarray(sig), jnp.ones((1, len(idx))), ols, **ENG_KW)
+        np.testing.assert_allclose(np.asarray(fused.betas[b]),
+                                   np.asarray(ref.betas[0]), atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Weighted Pallas kernel wrappers vs per-member host weighting
+# ---------------------------------------------------------------------------
+
+def test_replicate_kernel_ops_bitwise():
+    from repro.kernels.ops import (
+        slope_gradient,
+        slope_gradient_replicate,
+        slope_residual,
+        slope_residual_replicate,
+    )
+
+    rng = np.random.default_rng(13)
+    n, p, B = 32, 24, 3
+    X = jnp.asarray(rng.standard_normal((n, p)))
+    R = jnp.asarray(rng.standard_normal((B, n)))
+    Bv = jnp.asarray(rng.standard_normal((B, p)))
+    Y = jnp.asarray(rng.standard_normal((B, n)))
+    W = jnp.asarray(ResamplePlan(kind="bootstrap", n_replicates=B,
+                                 seed=4).row_weights(n, dtype=jnp.float64))
+    g = slope_gradient_replicate(X, R, W)
+    r = slope_residual_replicate(X, Bv, Y, W, family="ols")
+    for b in range(B):
+        # Xᵀ(w⊙r): weighting the residual on the host and running the
+        # unweighted kernel is the same contraction in the same order
+        g_ref = slope_gradient(X, W[b] * R[b])
+        np.testing.assert_array_equal(np.asarray(g[b]), np.asarray(g_ref))
+        r_ref = W[b] * slope_residual(X, Bv[b], Y[b], family="ols")
+        np.testing.assert_array_equal(np.asarray(r[b]), np.asarray(r_ref))
+
+
+def test_replicate_loss_residual_zero_weight_guard():
+    from repro.kernels.ops import slope_loss_residual_replicate
+
+    rng = np.random.default_rng(14)
+    n, p = 16, 8
+    X = jnp.asarray(rng.standard_normal((3, n, p))[0])
+    Bv = jnp.asarray(rng.standard_normal((2, p)))
+    Y = jnp.asarray(rng.standard_normal((2, n)))
+    W = jnp.ones((2, n)).at[0].set(0.0)        # an exact-null member
+    loss, r = slope_loss_residual_replicate(X, Bv, Y, W, family="ols")
+    assert float(loss[0]) == 0.0 and float(jnp.max(jnp.abs(r[0]))) == 0.0
+    assert np.isfinite(float(loss[1]))
+
+
+# ---------------------------------------------------------------------------
+# API seams: PathSpec.resample, planner rules, Problem.weights
+# ---------------------------------------------------------------------------
+
+def test_pathspec_resample_validation():
+    with pytest.raises(ValueError, match="ResamplePlan"):
+        PathSpec(resample="bootstrap")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        PathSpec(resample=ResamplePlan(n_replicates=4), cv_folds=3)
+
+
+def test_planner_resample_rules():
+    X, y, lam = _problem(20, 12)
+    rs = ResamplePlan(n_replicates=4)
+    spec = PathSpec(lam=lam, resample=rs)
+    pln = plan_execution(Problem(X, y), spec, SolverPolicy())
+    assert pln.backend in ("device", "serve")
+    assert any("resampling" in r for r in pln.reasons)
+
+    with pytest.raises(ValueError, match="single \\(n, p\\) problem"):
+        plan_execution(Problem(np.stack([X, X]), np.stack([y, y])), spec,
+                       SolverPolicy())
+    with pytest.raises(ValueError, match="backend='host'"):
+        plan_execution(Problem(X, y), spec, SolverPolicy(backend="host"))
+    with pytest.raises(ValueError, match="backend='serve'"):
+        plan_execution(Problem(X, y), spec,
+                       SolverPolicy(backend="masked", pad="bucket"))
+
+
+def test_slope_path_resample_matches_fit_replicates():
+    X, y, lam = _problem(20, 12, seed=21)
+    rs = ResamplePlan(kind="bootstrap", n_replicates=4, seed=5)
+    out = slope_path(Problem(X, y),
+                     PathSpec(lam=lam, path_length=5, resample=rs),
+                     SolverPolicy(backend="masked", **POL))
+    assert out.resample is rs
+    direct = fit_replicates(X, y, lam, rs, ols, path_length=5,
+                            solver_tol=1e-10, max_iter=20000)
+    assert np.asarray(out.betas).shape[0] == 4
+    np.testing.assert_array_equal(
+        np.asarray(out.betas).reshape(4, 5, -1),
+        direct.betas.reshape(4, 5, -1))
+    out_sig = np.asarray(out.sigmas)
+    if out_sig.ndim == 2:                      # batched results broadcast
+        out_sig = out_sig[0]                   # the shared grid per member
+    np.testing.assert_array_equal(out_sig, direct.sigmas)
+
+
+def test_weighted_problem_matches_scaled_design():
+    X, y, lam = _problem(20, 12, seed=30)
+    w = np.random.default_rng(31).uniform(0.5, 2.0, size=20)
+    spec = PathSpec(lam=lam, path_length=5, early_stop=False)
+    weighted = slope_path(Problem(X, y, weights=w), spec,
+                          SolverPolicy(backend="masked", **POL))
+    sw = np.sqrt(w)
+    scaled = slope_path(Problem(X * sw[:, None], y * sw), spec,
+                        SolverPolicy(backend="masked", **POL))
+    # the rw device route computes its σ grid from the √w-scaled problem,
+    # so both runs solve the identical path
+    np.testing.assert_array_equal(np.asarray(weighted.sigmas),
+                                  np.asarray(scaled.sigmas))
+    np.testing.assert_allclose(np.asarray(weighted.betas),
+                               np.asarray(scaled.betas), atol=1e-10)
+
+
+def test_weights_rejected_for_non_ols():
+    X, y, lam = _problem(20, 8)
+    yb = (y > 0).astype(float)
+    prob = Problem(X, yb, family=logistic,
+                   weights=np.ones(20))
+    with pytest.raises(ValueError, match="OLS"):
+        slope_path(prob, PathSpec(lam=np.asarray(bh_sequence(8, q=0.1))),
+                   SolverPolicy(backend="masked", **POL))
+    with pytest.raises(ValueError, match="strictly positive"):
+        slope_path(Problem(X, y, weights=np.zeros(20)),
+                   PathSpec(lam=lam), SolverPolicy(backend="masked", **POL))
+
+
+# ---------------------------------------------------------------------------
+# Workload drivers
+# ---------------------------------------------------------------------------
+
+def test_stability_selection_recovers_support():
+    X, y, lam = _problem(60, 16, seed=17, k=3, noise=0.3)
+    res = stability_selection(
+        X, y, lam,
+        ResamplePlan(kind="subsample", n_replicates=16, seed=1, fraction=0.5),
+        path_length=6, solver_tol=1e-8, max_iter=5000)
+    assert res.frequencies.shape == (6, 16)
+    assert res.max_frequency.shape == (16,)
+    assert ((0.0 <= res.frequencies) & (res.frequencies <= 1.0)).all()
+    # the planted predictors are selected in (almost) every replicate;
+    # most noise predictors never reach the threshold
+    assert res.selected[:3].all()
+    assert res.max_frequency[:3].min() > res.max_frequency[3:].mean()
+    assert res.replicates.n_replicates == 16
+
+    with pytest.raises(ValueError, match="permutation"):
+        stability_selection(X, y, lam, ResamplePlan(kind="permutation",
+                                                    n_replicates=4))
+
+
+def test_stability_selection_compact_backend():
+    X, y, lam = _problem(40, 20, seed=18, k=2, noise=0.3)
+    res = stability_selection(
+        X, y, lam,
+        ResamplePlan(kind="subsample", n_replicates=8, seed=2, fraction=0.5),
+        path_length=5, working_set=8, ws_tiers=2,
+        solver_tol=1e-8, max_iter=5000)
+    assert res.replicates.stats is not None    # compact engine ran
+    assert res.selected[:2].all()
+
+
+def test_selection_frequencies_shape_and_tol():
+    betas = np.zeros((4, 3, 5, 1))
+    betas[:2, :, 0, 0] = 1.0                    # predictor 0 in half
+    betas[:, :, 1, 0] = 1e-12                   # sub-tol noise
+    freq = selection_frequencies(betas, tol=1e-8)
+    np.testing.assert_allclose(freq[:, 0], 0.5)
+    np.testing.assert_allclose(freq[:, 1], 0.0)
+
+
+def test_permutation_pvalues():
+    X, y, _ = _problem(50, 12, seed=23, k=2, noise=0.3)
+    res = permutation_pvalues(X, y, ResamplePlan(kind="permutation",
+                                                 n_replicates=99, seed=3))
+    assert res.pvalues.shape == (12,)
+    assert ((0.0 < res.pvalues) & (res.pvalues <= 1.0)).all()
+    assert res.null_max.shape == (99,)
+    # planted predictors beat every permutation-null max-|gradient| draw
+    assert (res.pvalues[:2] == 1.0 / 100.0).all()
+    assert res.pvalues[2:].mean() > 0.2        # nulls are not small
+
+    with pytest.raises(ValueError, match="permutation plan"):
+        permutation_pvalues(X, y, ResamplePlan(kind="bootstrap"))
+
+
+def test_bagged_slope():
+    X, y, lam = _problem(40, 10, seed=29, k=2, noise=0.3)
+    res = bagged_slope(X, y, lam,
+                       ResamplePlan(kind="bootstrap", n_replicates=8, seed=4),
+                       path_length=5, solver_tol=1e-8, max_iter=5000)
+    L = len(res.replicates.sigmas)
+    assert res.betas_mean.shape[:2] == (L, 10) or \
+        res.betas_mean.shape[0] == L
+    assert res.betas_sd.shape == res.betas_mean.shape
+    assert (res.betas_sd >= 0.0).all()
+    # bagged means still carry the planted signal
+    dense = np.abs(res.betas_mean).reshape(L, -1)
+    assert dense[-1, :2].min() > dense[-1, 2:].max()
+
+    with pytest.raises(ValueError, match="bootstrap/subsample"):
+        bagged_slope(X, y, lam, ResamplePlan(kind="permutation"))
+
+
+def test_resample_stats_keys():
+    X, y, lam = _problem(30, 8, seed=31)
+    fit_replicates(X, y, lam, ResamplePlan(n_replicates=2, seed=1),
+                   path_length=4, solver_tol=1e-8, max_iter=3000)
+    st_ = resample_stats()
+    assert set(st_) == {"replicates_in_flight", "replicates",
+                        "selection_frequency", "null_calibration_draws"}
+    assert st_["replicates_in_flight"] == 0     # nothing mid-flight
+    assert st_["replicates"].get("bootstrap", 0) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Served replicates (sync + async)
+# ---------------------------------------------------------------------------
+
+def _served_case(n=32, p=128, seed=41):
+    # bucket-aligned shapes: the served program then runs at native size
+    X, y, lam = _problem(n, p, seed=seed)
+    sig = _sigmas(X, y, lam, L=5)
+    rs = ResamplePlan(kind="bootstrap", n_replicates=5, seed=9)
+    spec = PathSpec(lam=lam, sigmas=sig, early_stop=False, resample=rs)
+    return X, y, lam, sig, rs, spec
+
+
+def test_served_resample_sync():
+    from repro.serve import PathService, ResampleResponse
+
+    X, y, lam, sig, rs, spec = _served_case()
+    svc = PathService(max_batch=4, max_delay=60.0)
+    rid = svc.submit(problem=Problem(X, y), path=spec,
+                     policy=SolverPolicy(**POL))
+    resp = svc.poll(rid, flush=True)
+    assert isinstance(resp, ResampleResponse)
+    assert resp.n_replicates == 5
+    assert resp.betas.shape[:2] == (5, len(sig))
+    assert resp.weights.shape == (5, X.shape[0])
+    assert resp.resample is rs
+    assert len(resp.member_responses) == 5
+    freq = resp.selection_frequencies()
+    assert freq.shape == (len(sig), X.shape[1])
+
+    direct = slope_path(Problem(X, y), spec,
+                        SolverPolicy(backend="masked", **POL))
+    # served members stack per-member y (vmap axis 0) where direct
+    # broadcasts the shared vector — same math, different HLO, so
+    # tight-tol rather than bitwise
+    np.testing.assert_allclose(
+        resp.betas.reshape(5, len(sig), -1),
+        np.asarray(direct.betas).reshape(5, len(sig), -1), atol=1e-9)
+
+    st_ = svc.stats()
+    assert "resample" in st_
+    assert st_["resample"]["replicates_in_flight"] == 0
+
+
+def test_served_resample_async_future():
+    from repro.serve import AsyncPathService, ResampleResponse
+
+    X, y, lam, sig, rs, spec = _served_case(seed=43)
+    svc = AsyncPathService(max_batch=4, max_delay=0.005)
+    try:
+        fut = svc.submit(problem=Problem(X, y), path=spec,
+                         policy=SolverPolicy(**POL))
+        resp = fut.result(timeout=300)
+        assert isinstance(resp, ResampleResponse)
+        assert resp.betas.shape[:2] == (5, len(sig))
+        sync_direct = slope_path(Problem(X, y), spec,
+                                 SolverPolicy(backend="masked", **POL))
+        np.testing.assert_allclose(
+            resp.betas.reshape(5, len(sig), -1),
+            np.asarray(sync_direct.betas).reshape(5, len(sig), -1),
+            atol=1e-9)
+        assert "resample" in svc.stats()
+    finally:
+        svc.close()
+
+
+def test_served_resample_internal_members_hidden():
+    from repro.serve import PathService
+
+    X, y, lam, sig, rs, spec = _served_case(seed=47)
+    svc = PathService(max_batch=4, max_delay=60.0)
+    before = svc.stats()["completed"]
+    rid = svc.submit(problem=Problem(X, y), path=spec,
+                     policy=SolverPolicy(**POL))
+    resp = svc.poll(rid, flush=True)
+    assert resp is not None
+    # member fits are internal bookkeeping: unclaimed-response and
+    # latency accounting must not leak B member entries to the client
+    st_ = svc.stats()
+    assert st_["unclaimed"] == 0
+    assert st_["completed"] >= before + rs.n_replicates
