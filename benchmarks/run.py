@@ -20,6 +20,10 @@ Default sizes are scaled to finish on this CPU-only container in minutes;
   serve_async          AsyncPathService under a Poisson open-loop load: p50/p95
                        latency vs the deadline_ms SLO, slot-recycle counts,
                        admission rejection rate, and bit-identity vs sync
+  serve_restart        restart recovery: cold boot vs a second boot against a
+                       populated durable program store — manifest replay
+                       deserializes every program (zero XLA compiles) and
+                       time-to-served collapses to execution cost
   serve_chaos          fault-injected serving: one poison request in a cohort
                        of 8 → availability ≥ 7/8, innocents bit-identical to
                        the unfaulted run, bounded recovery latency; transient
@@ -767,6 +771,76 @@ def serve_async(full: bool):
         f"maxdiff={maxdiff:.1f} checked={R} tolerance=0")
 
 
+def serve_restart(full: bool):
+    """ISSUE 10 acceptance: restart recovery against a durable program
+    store.
+
+    Three boots serve the SAME request stream end to end (boot included in
+    the timed window — restart recovery is about time-to-served, not
+    steady state):
+
+    * **cold** — no store: every program lowers and compiles from source.
+    * **populate** — an empty store: same compiles, plus the cost of
+      serializing each executable to disk and recording the warmup
+      manifest.
+    * **restart** — a fresh service + fresh cache against the populated
+      store, i.e. the restarted-process arm: boot-time manifest replay
+      deserializes every program the previous boot compiled, so the stream
+      is served with ZERO XLA compiles.
+    """
+    import shutil
+    import tempfile
+
+    from repro.serve import AsyncPathService, DurableProgramStore
+
+    R = 8
+    L = 20
+    kw = dict(path_length=L, solver_tol=1e-8, max_iter=20000)
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(R):  # one (64, 64) bucket: 2 programs (init + chunk)
+        n = int(rng.integers(33, 64))
+        p = int(rng.integers(40, 64))
+        X, y, _ = make_regression(n, p, k=4, rho=0.2, seed=500 + i,
+                                  noise=0.3)
+        reqs.append((X, y))
+
+    def boot_and_serve(store):
+        t0 = time.perf_counter()
+        svc = AsyncPathService(max_batch=8, max_delay=0.01, step_chunk=8,
+                               store=store)
+        futs = [svc.submit(X, y, **kw) for X, y in reqs]
+        for f in futs:
+            f.result(timeout=600)
+        dt = time.perf_counter() - t0
+        st = svc.stats()["cache"]
+        svc.close()
+        return dt, st
+
+    t_cold, st_cold = boot_and_serve(None)
+    row(f"serve_restart/cold_boot_R{R}", t_cold * 1e6,
+        f"rps={R / t_cold:.2f} builds={st_cold['builds']}")
+
+    d = tempfile.mkdtemp(prefix="repro-prog-store-")
+    try:
+        t_pop, st_pop = boot_and_serve(DurableProgramStore(d))
+        row(f"serve_restart/populate_store_R{R}", t_pop * 1e6,
+            f"rps={R / t_pop:.2f} builds={st_pop['builds']} "
+            f"saved={st_pop['store']['saved']}")
+        t_warm, st_warm = boot_and_serve(DurableProgramStore(d))
+        assert st_warm["builds"] == 0 or not st_warm["store"]["serializable"]
+        row(f"serve_restart/warm_store_boot_R{R}", t_warm * 1e6,
+            f"rps={R / t_warm:.2f} builds={st_warm['builds']} "
+            f"loaded={st_warm['store']['loaded']} "
+            f"speedup_vs_cold={t_cold / t_warm:.2f}x")
+        metric("serve_restart/warm_boot_speedup", t_cold / t_warm,
+               f"cold_s={t_cold:.3f} warm_s={t_warm:.3f} "
+               f"builds_cold={st_cold['builds']} "
+               f"builds_warm={st_warm['builds']}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def serve_chaos(full: bool):
     """ISSUE 7 acceptance: the serving stack under deterministic fault
     injection.
@@ -997,6 +1071,7 @@ BENCHES = {
     "compact_two_tier": compact_two_tier,
     "serve": serve,
     "serve_async": serve_async,
+    "serve_restart": serve_restart,
     "serve_chaos": serve_chaos,
     "resample": resample,
 }

@@ -325,7 +325,11 @@ class SolverPolicy:
     telemetry) and a queue-ordering rank (higher first, FIFO within a
     rank).  Setting either routes ``backend="auto"`` through the serving
     layer — only a service can enforce them — and pinning a non-serve
-    backend alongside them is a planning error.
+    backend alongside them is a planning error.  ``solve_timeout_ms`` is
+    the serving watchdog budget for this request's device dispatches: a
+    chunk/batch call exceeding it is abandoned and the request's cohort
+    recovers through the service's retry/bisection path (sync services
+    accept but only the async dispatcher enforces mid-flight).
 
     ``validate`` is the admission-validation policy for non-finite
     operands: ``"strict"`` (default) rejects NaN/Inf in X/y/λ host-side
@@ -356,6 +360,7 @@ class SolverPolicy:
     priority: int = 0
     validate: str = "strict"
     telemetry: str = "off"
+    solve_timeout_ms: float | None = None
 
     def __post_init__(self):
         if self.validate not in ("strict", "quarantine", "off"):
@@ -390,6 +395,11 @@ class SolverPolicy:
                                                              int):
             raise ValueError(
                 f"priority must be an int, got {self.priority!r}")
+        if (self.solve_timeout_ms is not None
+                and not self.solve_timeout_ms > 0):
+            raise ValueError(
+                f"solve_timeout_ms must be > 0, "
+                f"got {self.solve_timeout_ms!r}")
 
 
 def _register(cls, leaf_fields: tuple[str, ...]):

@@ -8,7 +8,10 @@ micro-batching and λ-sequence canonicalization
 and eviction stats (:mod:`~repro.serve.cache`), the synchronous
 ``submit``/``poll`` front-end (:mod:`~repro.serve.service`), and the
 asynchronous future-returning front-end with timer-driven deadline flush
-and continuous batching (:mod:`~repro.serve.dispatch`).
+and continuous batching (:mod:`~repro.serve.dispatch`), and the
+crash-safety primitives — durable program store, checkpoint/restore,
+watchdog, circuit breaker, load shedding
+(:mod:`~repro.serve.durable`).
 
 Import layering: ``buckets`` is NumPy-only and is imported *by*
 ``repro.core.engine`` (the working-set bucket registry lives there), so it
@@ -45,6 +48,11 @@ _LAZY = {
     "FaultSpec": "faults",
     "InjectedFault": "faults",
     "NO_FAULTS": "faults",
+    "DurableProgramStore": "durable",
+    "ServiceCheckpoint": "durable",
+    "CircuitBreaker": "durable",
+    "LoadShedGovernor": "durable",
+    "WatchdogTimeout": "durable",
 }
 
 __all__ = [

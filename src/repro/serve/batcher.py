@@ -75,9 +75,12 @@ class Rejection:
     """
 
     rid: int
-    reason: str
+    reason: str            # queue-capacity text, or the admission-control
+    #   verdicts "circuit_open" (per-program circuit breaker is open) and
+    #   "shed" (adaptive load shedding under latency pressure)
     queued: int            # queue depth at the rejecting admission
-    max_queue: int | None  # the capacity that was hit
+    max_queue: int | None  # the capacity that was hit (None: not a
+    #   capacity rejection)
 
 
 class RejectionError(QueueFull):
@@ -195,6 +198,14 @@ class MicroBatcher:
     def groups(self) -> list:
         with self._lock:
             return [k for k, q in self._queues.items() if q]
+
+    def snapshot(self) -> list[tuple]:
+        """Non-destructive ``(key, Pending)`` view of everything queued, in
+        pop order per group — what a service checkpoint records without
+        disturbing admission state."""
+        with self._lock:
+            return [(k, e[2]) for k, q in self._queues.items()
+                    for e in sorted(q)]
 
     def pending(self) -> int:
         with self._lock:

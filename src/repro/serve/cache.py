@@ -245,12 +245,22 @@ class ProgramCache:
     compilation itself holds the lock too (simpler, and the service flushes
     batches from one thread — concurrent builders would just duplicate
     work).
+
+    ``store`` (optional, a :class:`repro.serve.DurableProgramStore`) makes
+    misses crash-safe: a miss first tries the store's serialized
+    executable (milliseconds) before compiling from source (seconds), and
+    every fresh build is saved back plus appended to the store's warmup
+    manifest — so a restarted process replays the manifest at boot and
+    compiles nothing it has already seen.  ``misses`` counts cache misses
+    regardless of where the program came from; ``builds`` counts actual
+    XLA compilations (a warm-store boot shows misses > 0, builds == 0).
     """
 
-    def __init__(self, capacity: int = 32):
+    def __init__(self, capacity: int = 32, store=None):
         if capacity < 1:
             raise ValueError(f"capacity must be ≥ 1, got {capacity}")
         self.capacity = capacity
+        self.store = store
         self._data: OrderedDict[ProgramSpec, CompiledProgram] = OrderedDict()
         self._lock = threading.Lock()
         # hits/misses/evictions/build_seconds live on the unified registry;
@@ -265,10 +275,15 @@ class ProgramCache:
                 self.metrics.inc("hits")
                 return prog, True
             self.metrics.inc("misses")
-            compiled, dt = _build(spec)
-            prog = CompiledProgram(spec, compiled, dt)
-            self.metrics.inc("build_seconds", dt)
-            self.metrics.observe("build_s", dt)
+            prog = None if self.store is None else self.store.load(spec)
+            if prog is None:
+                compiled, dt = _build(spec)
+                prog = CompiledProgram(spec, compiled, dt)
+                self.metrics.inc("builds")
+                self.metrics.inc("build_seconds", dt)
+                self.metrics.observe("build_s", dt)
+                if self.store is not None:
+                    self.store.save(spec, prog)
             self._data[spec] = prog
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
@@ -305,6 +320,8 @@ class ProgramCache:
                 "misses": misses,
                 "hit_rate": hits / total if total else 0.0,
                 "evictions": m.value("evictions"),
+                "builds": m.value("builds"),
                 "build_seconds": round(m.value("build_seconds", 0.0), 3),
                 "programs": {s.short(): p.calls for s, p in self._data.items()},
+                "store": None if self.store is None else self.store.stats(),
             }

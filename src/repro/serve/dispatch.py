@@ -41,6 +41,22 @@ execution path, so their results are bit-identical to an unfaulted run
 in-graph (non-finite inputs under ``validate="quarantine"``) resolve
 normally with ``PathResponse.quarantined`` set — sick data is a *flagged
 result*, not an exception, and never stalls the cohort.
+
+Crash safety (PR 10): :meth:`AsyncPathService.checkpoint` pauses the
+dispatcher at a chunk boundary and snapshots every admitted-but-undelivered
+request — untaken queue entries plus each live slot's carried engine state
+(the same ``(beta, grad, active, L, health)`` host carry the chunk rounds
+already round-trip) — into a picklable :class:`ServiceCheckpoint`;
+:meth:`AsyncPathService.restore` on a fresh process re-admits the queued
+requests and resumes the in-flight ones from their carry, completing them
+**bit-identical** to an uninterrupted run.  A ``solve_timeout_ms`` budget
+(service-wide or per request) runs each chunk round under a watchdog, so a
+hung device dispatch fails only its cohort through the retry/bisect path;
+repeated compile/execute failures open a per-program circuit breaker and
+latency pressure against request deadlines sheds the lowest-priority
+admissions (both reject with a structured :class:`Rejection`).  Pair with
+``store=DurableProgramStore(...)`` and a restarted server also skips every
+recompile its predecessor already paid for.
 """
 
 from __future__ import annotations
@@ -61,6 +77,13 @@ from ..core.solver import DEFAULT_WS_TIERS
 from .batcher import Pending, QueueFull, Rejection
 from .buckets import pad_batch
 from .cache import ProgramSpec
+from .durable import (
+    InflightSlot,
+    ServiceCheckpoint,
+    WatchdogTimeout,
+    run_with_watchdog,
+    snapshot_queued,
+)
 from .service import (
     CvResponse,
     PathResponse,
@@ -69,7 +92,7 @@ from .service import (
     _GroupKey,
 )
 
-__all__ = ["AsyncPathService", "Rejection"]
+__all__ = ["AsyncPathService", "Rejection", "ServiceCheckpoint"]
 
 
 @dataclasses.dataclass
@@ -115,11 +138,21 @@ class AsyncPathService(PathService):
                  retry_jitter: float = 0.25,
                  autostart: bool = True, policy=None, cache=None,
                  canonicalizer=None, clock=time.perf_counter, faults=None,
-                 tracing: bool = False):
+                 tracing: bool = False, store=None,
+                 solve_timeout_ms: float | None = None,
+                 breaker_threshold: int = 5, breaker_cooldown: float = 5.0,
+                 shed_threshold: float = 0.9, shed_priority: int = 0,
+                 shed_window: int = 8):
         super().__init__(max_batch=max_batch, max_delay=max_delay,
                          max_queue=max_queue, policy=policy, cache=cache,
                          canonicalizer=canonicalizer, clock=clock,
-                         faults=faults, tracing=tracing)
+                         faults=faults, tracing=tracing, store=store,
+                         solve_timeout_ms=solve_timeout_ms,
+                         breaker_threshold=breaker_threshold,
+                         breaker_cooldown=breaker_cooldown,
+                         shed_threshold=shed_threshold,
+                         shed_priority=shed_priority,
+                         shed_window=shed_window)
         if step_chunk < 1:
             raise ValueError(f"step_chunk must be ≥ 1, got {step_chunk}")
         if retry_limit < 0:
@@ -142,6 +175,13 @@ class AsyncPathService(PathService):
         self._cond = threading.Condition()
         self._stop_flag = False
         self._worker: threading.Thread | None = None
+        # crash-safety state (PR 10): the continuous runner keeps, per
+        # in-flight rid, a copy of the slot's carried engine state at its
+        # last chunk boundary (checkpoint() collects these), and restore()
+        # parks resumed carries here until the runner inserts them
+        self._inflight_state: dict[int, InflightSlot] = {}
+        self._resume_state: dict[int, InflightSlot] = {}
+        self._ckpt_request = False
         if autostart:
             self.start()
 
@@ -183,6 +223,9 @@ class AsyncPathService(PathService):
             self._traces.clear()
             self._cv_fold_rids.clear()
             self._rs_member_rids.clear()
+            self._solve_timeouts.clear()
+            self._resume_state.clear()
+            self._inflight_state.clear()
         for rid, fut in leftovers:
             if not fut.done():
                 fut.set_exception(RuntimeError(
@@ -198,21 +241,105 @@ class AsyncPathService(PathService):
 
     def drain(self, timeout: float | None = None) -> bool:
         """Block until every admitted request has been delivered (or
-        ``timeout`` seconds passed; returns False on timeout)."""
+        ``timeout`` seconds passed; returns False on timeout).
+
+        Waits on the dispatcher's condition variable — every delivery
+        notifies it — instead of polling on a sleep loop.  The idle
+        predicate is read without ``self._lock`` (deliverers hold it while
+        notifying, so taking it here would be an ABBA ordering); a stale
+        read only costs one extra wait-and-recheck, never a wrong answer.
+        """
         deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            with self._lock:
-                idle = not self._futures and self._batcher.pending() == 0
-            if idle:
-                return True
-            if deadline is not None and time.monotonic() > deadline:
-                return False
-            time.sleep(0.001)
+        with self._cond:
+            while self._futures or self._batcher.pending():
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    left = deadline - time.monotonic()
+                    if left <= 0 or not self._cond.wait(timeout=left):
+                        return not (self._futures
+                                    or self._batcher.pending())
+            return True
+
+    # -- checkpoint / restore -----------------------------------------------
+
+    def checkpoint(self, *, timeout: float = 60.0) -> ServiceCheckpoint:
+        """Pause serving at the next chunk boundary and snapshot every
+        admitted-but-undelivered request.
+
+        The dispatcher is signalled, joined, and the snapshot assembled
+        from the batcher queue (untaken requests, non-destructively) plus
+        the continuous runner's shadowed per-slot carry (in-flight
+        requests at their last chunk boundary).  The service is left
+        STOPPED — a checkpoint is the prelude to a process exit; call
+        :meth:`start` to keep serving in place, or :meth:`restore` the
+        snapshot on a fresh service, where every captured request
+        completes bit-identical to an uninterrupted run.
+        """
+        with self._cond:
+            self._ckpt_request = True
+            self._stop_flag = True
+            self._cond.notify_all()
+        w = self._worker
+        if w is not None:
+            w.join(timeout=timeout)
+            if w.is_alive():
+                self._ckpt_request = False
+                raise RuntimeError(
+                    f"dispatcher did not reach a chunk boundary within "
+                    f"{timeout} s; checkpoint aborted")
+        self._ckpt_request = False
+        with self._lock:
+            queued = snapshot_queued(self._batcher, self._cv_fold_rids,
+                                     self._rs_member_rids)
+            queued_rids = {q.rid for q in queued}
+            inflight = [st for rid, st in self._inflight_state.items()
+                        if rid in self._futures and rid not in queued_rids]
+            self.metrics.inc("checkpoints")
+        return ServiceCheckpoint(queued=queued, inflight=inflight)
+
+    def restore(self, ckpt: ServiceCheckpoint) -> dict:
+        """Re-admit every request a :class:`ServiceCheckpoint` captured;
+        returns ``{old_rid: Future}`` keyed by the checkpointed process's
+        request ids.
+
+        Queued requests re-enter normal admission.  In-flight requests
+        re-enter WITH their carried engine state, which the continuous
+        runner scatters into a batch slot in place of init seeding — the
+        resumed path picks up at the exact chunk boundary the checkpoint
+        cut (per-slot σ windows are cursor-driven, so chunk alignment is
+        preserved) and its result is bit-identical to an uninterrupted
+        run.  Refuses a checkpoint taken under a different jax/jaxlib/
+        backend fingerprint: bit-identity cannot be promised across
+        version or backend changes.
+        """
+        from .durable import backend_fingerprint
+
+        here = backend_fingerprint()
+        if ckpt.fingerprint != here:
+            raise RuntimeError(
+                f"checkpoint fingerprint {ckpt.fingerprint!r} does not "
+                f"match this process ({here!r}); resumed execution would "
+                f"not be bit-identical")
+        futures: dict = {}
+        for q in ckpt.queued:
+            futures[q.rid] = self._admit(
+                q.key, q.item, priority=q.priority,
+                _cv_fold=q.cv_fold, _rs_member=q.rs_member)
+            self.metrics.inc("restored")
+        for st in ckpt.inflight:
+            futures[st.rid] = self._admit(
+                st.key, st.item, priority=st.priority,
+                _cv_fold=st.cv_fold, _resume=st)
+            self.metrics.inc("restored")
+        return futures
 
     # -- admission (future-returning) ---------------------------------------
 
     def _admit(self, key: _GroupKey, item, *, deadline_ms=None, priority=0,
-               _cv_fold: bool = False, _rs_member: bool = False) -> Future:
+               solve_timeout_ms: float | None = None,
+               _cv_fold: bool = False, _rs_member: bool = False,
+               _resume: InflightSlot | None = None) -> Future:
         fut: Future = Future()
         t_in = self._clock()
         with self._lock:
@@ -220,10 +347,23 @@ class AsyncPathService(PathService):
             self._next_rid += 1
             self.metrics.inc("submitted")
             fut.rid = rid
+            verdict = self._admission_control(
+                key, rid, priority=priority, deadline_ms=deadline_ms)
+            if verdict is not None:
+                # async contract: rejection is a resolved future, not an
+                # exception — callers see backpressure without waiting
+                fut.set_result(verdict)
+                return fut
             if _cv_fold:
                 self._cv_fold_rids.add(rid)
             if _rs_member:
                 self._rs_member_rids.add(rid)
+            if solve_timeout_ms is not None:
+                self._solve_timeouts[rid] = solve_timeout_ms / 1e3
+            if _resume is not None:
+                # restore(): the continuous runner scatters this carried
+                # state into the slot instead of init-seeding it
+                self._resume_state[rid] = _resume
             item = self._maybe_corrupt(rid, item)
             now = self._clock()
             try:
@@ -234,6 +374,8 @@ class AsyncPathService(PathService):
                 self.metrics.inc("rejected")
                 self._cv_fold_rids.discard(rid)
                 self._rs_member_rids.discard(rid)
+                self._solve_timeouts.pop(rid, None)
+                self._resume_state.pop(rid, None)
                 fut.set_result(Rejection(
                     rid=rid, reason=str(e), queued=self._batcher.pending(),
                     max_queue=self._batcher.max_queue))
@@ -252,9 +394,13 @@ class AsyncPathService(PathService):
         self._finish_trace(rid, resp)
         self._cv_fold_rids.discard(rid)
         self._rs_member_rids.discard(rid)
+        self._solve_timeouts.pop(rid, None)
+        self._inflight_state.pop(rid, None)
         fut = self._futures.pop(rid, None)
         if fut is not None and not fut.done():
             fut.set_result(resp)
+        with self._cond:
+            self._cond.notify_all()  # drain() waits on delivery
 
     def poll(self, rid, *, flush: bool = False):
         raise TypeError("AsyncPathService resolves results through the "
@@ -266,7 +412,8 @@ class AsyncPathService(PathService):
                    sigmas, path_length, sigma_ratio, screening, solver_tol,
                    max_iter, kkt_tol, max_refits, working_set,
                    ws_tiers=DEFAULT_WS_TIERS, deadline_ms=None,
-                   priority=0, validate="strict") -> Future:
+                   priority=0, solve_timeout_ms=None,
+                   validate="strict") -> Future:
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -280,7 +427,9 @@ class AsyncPathService(PathService):
                         max_iter=max_iter, kkt_tol=kkt_tol,
                         max_refits=max_refits, working_set=working_set,
                         ws_tiers=ws_tiers, deadline_ms=deadline_ms,
-                        priority=priority, validate=validate, _cv_fold=True)
+                        priority=priority,
+                        solve_timeout_ms=solve_timeout_ms,
+                        validate=validate, _cv_fold=True)
             for tr in trains
         ]
         cv_fut: Future = Future()
@@ -483,6 +632,8 @@ class AsyncPathService(PathService):
             with self._lock:
                 self.metrics.inc("poisoned")
                 self._cv_fold_rids.discard(pending.rid)
+                self._solve_timeouts.pop(pending.rid, None)
+                self._inflight_state.pop(pending.rid, None)
                 fut = self._futures.pop(pending.rid, None)
                 tr = self._traces.pop(pending.rid, None)
             if tr is not None:
@@ -495,6 +646,8 @@ class AsyncPathService(PathService):
                     pass
             if fut is not None and not fut.done():
                 fut.set_exception(exc)
+            with self._cond:
+                self._cond.notify_all()  # drain() waits on resolution
             return
         self.metrics.inc("bisections")
         self._trace_recovery(cohort, "bisect", cohort_size=len(cohort))
@@ -540,6 +693,27 @@ class AsyncPathService(PathService):
 
     def _run_continuous(self, key: _GroupKey, trigger: str,
                         cohort: list[Pending] | None = None) -> None:
+        """Breaker-instrumented wrapper around the continuous runner.
+
+        Any failure — injected, device, watchdog timeout — counts one
+        consecutive-failure strike against ``key``'s circuit before the
+        PR-7 recovery machinery sees it; a clean drain (including the
+        innocent halves of a bisection, which re-enter here) resets the
+        count, so only a persistent fault opens the circuit.
+        """
+        try:
+            self._run_continuous_impl(key, trigger, cohort=cohort)
+        except BaseException:
+            if self._breaker.record_failure(key) == "open":
+                self._trace_recovery(list(self._current_cohort),
+                                     "breaker_open",
+                                     threshold=self._breaker.threshold)
+            raise
+        else:
+            self._breaker.record_success(key)
+
+    def _run_continuous_impl(self, key: _GroupKey, trigger: str,
+                             cohort: list[Pending] | None = None) -> None:
         """Serve one masked group until it drains, recycling slots.
 
         Persistent padded operand buffers plus the scan carry round-trip
@@ -591,6 +765,14 @@ class AsyncPathService(PathService):
 
         rounds = 0
         while True:
+            if self._ckpt_request and cohort is None:
+                # checkpoint(): pause at this chunk boundary — untaken work
+                # stays queued, live slots' carry is already shadowed in
+                # self._inflight_state by the end of the previous round.
+                # Recovery cohorts run to completion: their pendings left
+                # the queue long ago and re-admission owns no record of
+                # them, so pausing mid-recovery would strand futures.
+                return
             # refill free slots from the queue (the slot-recycle seam), or —
             # in cohort mode — from the re-dispatched pendings only
             free = [i for i in range(S) if slots[i] is None]
@@ -604,6 +786,7 @@ class AsyncPathService(PathService):
                     self._note_taken(taken)
             occupied = S - len(free) + len(taken)
             inserted = []
+            resumed = []
             now = self._clock()
             if self._traces and taken:
                 with self._lock:
@@ -622,12 +805,45 @@ class AsyncPathService(PathService):
                 p_valid[i] = pb.p_valid[0]
                 with self._lock:
                     es = pending.rid not in self._cv_fold_rids
+                    rs = self._resume_state.pop(pending.rid, None)
                 slots[i] = _Slot(
                     pending=pending, grid=np.asarray(item.sigmas, f),
                     n=item.X.shape[0], p=item.X.shape[1], inserted=now,
                     batch_size=occupied, early_stop=es,
                     cache_hit=first_hit if rounds == 0 else True)
-                inserted.append(i)
+                if rs is None:
+                    inserted.append(i)
+                    continue
+                # restore(): scatter the checkpointed carry into the lane
+                # instead of init-seeding it — the slot continues from the
+                # exact chunk boundary the checkpoint cut, so per-slot σ
+                # windows (cursor-driven, not round-driven) and every later
+                # step are bit-identical to an uninterrupted run
+                s = slots[i]
+                beta[i] = rs.beta
+                grad[i] = rs.grad
+                active[i] = rs.active
+                Lc[i] = rs.L
+                Hc[i] = rs.H
+                s.cursor = rs.cursor
+                s.steps = list(rs.steps)
+                s.null_dev = rs.null_dev
+                s.prev_dev = rs.prev_dev
+                s.health0 = rs.health0
+                s.early_stop = rs.early_stop
+                s.solve_s = rs.solve_s
+                resumed.append(i)
+                if self._traces:
+                    with self._lock:
+                        tr = self._traces.get(pending.rid)
+                    if tr is not None:
+                        tr.mark("restore", self._clock(), slot=i,
+                                cursor=rs.cursor)
+            for i in resumed:
+                # a carry checkpointed at the finish line (sick at init, or
+                # cursor already past the grid) delivers immediately
+                if slots[i].health0 or slots[i].cursor >= L:
+                    self._finish_slot(i, slots, key, bufs)
             if inserted:
                 if rounds > 0:
                     # joined a cohort already in flight: true recycling
@@ -679,12 +895,25 @@ class AsyncPathService(PathService):
                         sig_next[i, c] = 1.0
                         live[i, c] = False
 
+            rids = [s.pending.rid for s in slots if s is not None]
+
+            def _chunk_round():
+                # the worker fault site fires INSIDE the watched call, so an
+                # injected kind="hang" delay trips the watchdog exactly like
+                # a stuck device dispatch would
+                self._faults.fire("worker", rids=rids)
+                return chunk_prog(
+                    Xs, ys, lam, sig_prev, sig_next, live, beta, grad,
+                    active, Lc, Hc, p_valid)
+
             t0 = self._clock()
-            self._faults.fire("worker", rids=[
-                s.pending.rid for s in slots if s is not None])
-            (nb, ng, na, nL, nH), ep = chunk_prog(
-                Xs, ys, lam, sig_prev, sig_next, live, beta, grad, active,
-                Lc, Hc, p_valid)
+            try:
+                (nb, ng, na, nL, nH), ep = run_with_watchdog(
+                    _chunk_round, self._watchdog_budget(rids),
+                    label=chunk_spec.short())
+            except WatchdogTimeout:
+                self.metrics.inc("watchdog_timeouts")
+                raise  # cohort-scoped: _serve_safely recovers exactly rids
             # copy INTO the persistent buffers (device outputs view as
             # read-only, and the next insertion scatters into them; copyto
             # keeps the bufs handles above valid)
@@ -748,6 +977,25 @@ class AsyncPathService(PathService):
                     s.prev_dev = dev
                 if s.finished or s.cursor >= L:
                     self._finish_slot(i, slots, key, bufs)
+
+            # shadow every still-live slot's carry at this chunk boundary —
+            # what checkpoint() collects after pausing the runner, and the
+            # most a crash can lose per request is the current chunk
+            with self._lock:
+                for i in range(S):
+                    s = slots[i]
+                    if s is None:
+                        continue
+                    self._inflight_state[s.pending.rid] = InflightSlot(
+                        rid=s.pending.rid, key=key, item=s.pending.item,
+                        priority=s.pending.priority,
+                        cv_fold=not s.early_stop,
+                        beta=beta[i].copy(), grad=grad[i].copy(),
+                        active=active[i].copy(), L=float(Lc[i]),
+                        H=int(Hc[i]), cursor=s.cursor,
+                        steps=list(s.steps), null_dev=s.null_dev,
+                        prev_dev=s.prev_dev, health0=s.health0,
+                        early_stop=s.early_stop, solve_s=s.solve_s)
 
     def _finish_slot(self, i: int, slots: list, key: _GroupKey,
                      bufs: dict) -> None:
@@ -852,6 +1100,8 @@ class AsyncPathService(PathService):
                 retries=m.value("retries"),
                 bisections=m.value("bisections"),
                 poisoned=m.value("poisoned"),
+                checkpoints=m.value("checkpoints"),
+                restored=m.value("restored"),
                 retry_limit=self.retry_limit,
                 retry_backoff=self.retry_backoff,
                 worker_alive=bool(self._worker is not None

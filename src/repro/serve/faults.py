@@ -12,6 +12,10 @@ site      fires
 ========  ==============================================================
 admit     during ``submit``, per request — ``kind="nan"`` corrupts the
           request's design matrix (the poison-request injector)
+overload  during admission control, per request — an ``error`` spec here
+          forces the adaptive load-shedding verdict
+          (``Rejection(reason="shed")``) regardless of the latency
+          window, so shedding is chaos-testable without generating load
 compile   in the worker, before the program-cache lookup for a batch
 worker    in the worker, after compile / before the compiled call —
           per execution round, with the in-flight rids attached
@@ -27,6 +31,10 @@ specific request id — so a test can say "the 2nd worker call crashes" or
 - ``"nan"``   — return a corrupted copy of the array at an ``admit`` site
   (seeded positions, so the poisoned operand is reproducible)
 - ``"delay"`` — sleep ``delay_s`` (deadline overruns, slow workers)
+- ``"hang"``  — sleep ``delay_s`` like ``delay``, but declared as a hang:
+  the spec must set ``delay_s`` *past* the service's watchdog budget
+  (``solve_timeout_ms``), so the watchdog — not the sleep — ends the
+  wait and the cohort recovers through retry/bisection
 
 Services hold a plan (default :data:`NO_FAULTS`, inert) and call
 :meth:`FaultPlan.fire` / :meth:`FaultPlan.corrupt` at the sites above;
@@ -45,7 +53,7 @@ import numpy as np
 
 __all__ = ["FaultSpec", "FaultPlan", "InjectedFault", "NO_FAULTS"]
 
-_KINDS = ("error", "nan", "delay")
+_KINDS = ("error", "nan", "delay", "hang")
 
 
 class InjectedFault(RuntimeError):
@@ -77,6 +85,10 @@ class FaultSpec:
             raise ValueError(f"times must be ≥ 1, got {self.times}")
         if self.after < 0:
             raise ValueError(f"after must be ≥ 0, got {self.after}")
+        if self.kind == "hang" and not self.delay_s > 0:
+            raise ValueError(
+                "kind='hang' needs delay_s > 0 (longer than the watchdog "
+                f"budget it is meant to trip), got {self.delay_s!r}")
 
 
 class FaultPlan:
@@ -125,7 +137,7 @@ class FaultPlan:
                 if spec.kind == "nan" or not self._match(spec, i, site, rids):
                     continue
                 self.events.append((site, spec.kind, spec.rid))
-                if spec.kind == "delay":
+                if spec.kind in ("delay", "hang"):
                     delay = max(delay, spec.delay_s)
                 elif err is None:
                     err = InjectedFault(f"{spec.message} [site={site}]")

@@ -94,7 +94,13 @@ from .batcher import (
 )
 from .buckets import ShapeBucketPolicy, default_policy, pad_batch
 from .cache import ProgramCache, ProgramSpec
-from .faults import FaultPlan, NO_FAULTS
+from .durable import (
+    CircuitBreaker,
+    LoadShedGovernor,
+    WatchdogTimeout,
+    run_with_watchdog,
+)
+from .faults import FaultPlan, InjectedFault, NO_FAULTS
 
 __all__ = ["PathService", "PathResponse", "CvResponse", "ResampleResponse"]
 
@@ -293,16 +299,45 @@ class PathService:
                  canonicalizer: LambdaCanonicalizer | None = None,
                  clock=time.perf_counter,
                  faults: FaultPlan | None = None,
-                 tracing: bool = False):
+                 tracing: bool = False,
+                 store=None,
+                 solve_timeout_ms: float | None = None,
+                 breaker_threshold: int = 5,
+                 breaker_cooldown: float = 5.0,
+                 shed_threshold: float = 0.9,
+                 shed_priority: int = 0,
+                 shed_window: int = 8):
         # explicit None checks: the cache and canonicalizer define __len__,
         # so a freshly shared (still empty) instance is falsy.  The default
         # canonicalizer is the process-wide one repro.api.LambdaSpec
         # resolves through, so named sequences are generated once and
         # shared byte-for-byte between direct and served execution.
         self.policy = policy if policy is not None else default_policy()
-        self.cache = cache if cache is not None else ProgramCache()
+        if cache is not None and store is not None:
+            if cache.store is not None and cache.store is not store:
+                raise ValueError("cache already carries a different durable "
+                                 "store; pass one or the other")
+            cache.store = store
+        self.cache = (cache if cache is not None
+                      else ProgramCache(store=store))
+        self.store = self.cache.store
         self.canonicalizer = (canonicalizer if canonicalizer is not None
                               else shared_canonicalizer())
+        if solve_timeout_ms is not None and not solve_timeout_ms > 0:
+            raise ValueError(
+                f"solve_timeout_ms must be > 0, got {solve_timeout_ms!r}")
+        # watchdog budget on device dispatch: service-wide default, further
+        # tightened per request via submit(solve_timeout_ms=...) /
+        # SolverPolicy.solve_timeout_ms (the batch runs under the tightest
+        # budget of its members)
+        self.solve_timeout_ms = solve_timeout_ms
+        self._solve_timeouts: dict[int, float] = {}   # rid → seconds
+        self._breaker = CircuitBreaker(threshold=breaker_threshold,
+                                       cooldown=breaker_cooldown,
+                                       clock=clock)
+        self._governor = LoadShedGovernor(threshold=shed_threshold,
+                                          priority_cutoff=shed_priority,
+                                          min_window=shed_window)
         self.slots = self.policy.batch_bucket(max_batch)
         self._batcher = MicroBatcher(max_batch=max_batch, max_delay=max_delay,
                                      max_queue=max_queue)
@@ -342,6 +377,12 @@ class PathService:
         # disabled cost is one falsy dict check.
         self.tracing = bool(tracing)
         self._traces: dict[int, Trace] = {}
+        # boot-time warmup: replay the durable store's manifest so every
+        # program the previous process compiled for live traffic is
+        # resident (loaded from the store, not rebuilt) before the first
+        # request arrives
+        if self.store is not None:
+            self.store.replay(self.cache)
 
     # -- admission ----------------------------------------------------------
 
@@ -358,6 +399,7 @@ class PathService:
                cv_folds: int | None = None, stratify="auto",
                selection: str = "min",
                deadline_ms: float | None = None, priority: int = 0,
+               solve_timeout_ms: float | None = None,
                validate: str = "strict",
                _cv_fold: bool = False,
                problem: Problem | None = None,
@@ -403,6 +445,9 @@ class PathService:
                                      _cv_fold=_cv_fold)
         if deadline_ms is not None and not deadline_ms > 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms!r}")
+        if solve_timeout_ms is not None and not solve_timeout_ms > 0:
+            raise ValueError(
+                f"solve_timeout_ms must be > 0, got {solve_timeout_ms!r}")
         if isinstance(priority, bool) or not isinstance(priority, int):
             raise ValueError(f"priority must be an int, got {priority!r}")
         X = np.asarray(X)
@@ -450,7 +495,8 @@ class PathService:
                 solver_tol=solver_tol, max_iter=max_iter, kkt_tol=kkt_tol,
                 max_refits=max_refits, working_set=working_set,
                 ws_tiers=ws_tiers, deadline_ms=deadline_ms,
-                priority=priority, validate=validate)
+                priority=priority, solve_timeout_ms=solve_timeout_ms,
+                validate=validate)
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -476,7 +522,9 @@ class PathService:
         item = _Item(X=X, y=y, lam=lam, sigmas=sigmas, family=family,
                      working_set=ws)
         return self._admit(key, item, deadline_ms=deadline_ms,
-                           priority=priority, _cv_fold=_cv_fold)
+                           priority=priority,
+                           solve_timeout_ms=solve_timeout_ms,
+                           _cv_fold=_cv_fold)
 
     def _flush_by(self, now: float, deadline_ms: float | None) -> float:
         """Flush deadline for one admission: ``max_delay`` of queueing, or —
@@ -486,13 +534,51 @@ class PathService:
             return now + self._batcher.max_delay
         return now + min(self._batcher.max_delay, deadline_ms / 2e3)
 
+    def _admission_control(self, key: _GroupKey, rid: int, *,
+                           priority: int,
+                           deadline_ms: float | None) -> Rejection | None:
+        """Pre-queue gates (caller holds the lock): the per-program circuit
+        breaker first, then adaptive load shedding.  Returns the
+        :class:`Rejection` verdict (the request is NOT queued) or None.
+
+        Both verdicts are deterministic: the breaker's state is a pure
+        function of the recorded compile/execute outcomes and the clock,
+        and the shed decision a pure function of the latency window — the
+        ``overload`` fault site forces the shed verdict for chaos tests.
+        """
+        if not self._breaker.allow(key):
+            self.metrics.inc("rejected")
+            self.metrics.inc("breaker_rejected")
+            return Rejection(
+                rid=rid, reason="circuit_open",
+                queued=self._batcher.pending(), max_queue=None)
+        shed = False
+        if self._faults.active():
+            try:
+                self._faults.fire("overload", rids=(rid,))
+            except InjectedFault:
+                shed = True
+        if not shed and deadline_ms is not None:
+            lat = self.metrics.histogram("latency_s", scope="user")
+            shed = self._governor.should_shed(
+                lat.percentile(95), deadline_ms, priority, lat.retained)
+        if shed:
+            self.metrics.inc("rejected")
+            self.metrics.inc("shed")
+            return Rejection(
+                rid=rid, reason="shed",
+                queued=self._batcher.pending(), max_queue=None)
+        return None
+
     def _admit(self, key: _GroupKey, item: _Item, *,
                deadline_ms: float | None = None, priority: int = 0,
+               solve_timeout_ms: float | None = None,
                _cv_fold: bool = False, _rs_member: bool = False) -> int:
         """Queue one canonicalized request; the async subclass overrides
         this to return a future and to reject-with-status at capacity.
 
-        At queue capacity raises :class:`RejectionError` — a
+        At queue capacity — or on an admission-control verdict (circuit
+        breaker open, load shed) — raises :class:`RejectionError`, a
         :class:`QueueFull` subclass carrying the structured
         :class:`Rejection` (``err.rejection``)."""
         t_in = self._clock()
@@ -500,6 +586,10 @@ class PathService:
             rid = self._next_rid
             self._next_rid += 1
             self.metrics.inc("submitted")
+            verdict = self._admission_control(
+                key, rid, priority=priority, deadline_ms=deadline_ms)
+            if verdict is not None:
+                raise RejectionError(verdict)
             if _cv_fold:
                 # register BEFORE admission: admitting can flush this very
                 # group (fill, or a deadline on a neighbour) synchronously,
@@ -507,6 +597,8 @@ class PathService:
                 self._cv_fold_rids.add(rid)
             if _rs_member:
                 self._rs_member_rids.add(rid)  # same ordering constraint
+            if solve_timeout_ms is not None:
+                self._solve_timeouts[rid] = solve_timeout_ms / 1e3
             item = self._maybe_corrupt(rid, item)
             now = self._clock()
             try:
@@ -517,6 +609,7 @@ class PathService:
                 self.metrics.inc("rejected")
                 self._cv_fold_rids.discard(rid)
                 self._rs_member_rids.discard(rid)
+                self._solve_timeouts.pop(rid, None)
                 raise RejectionError(Rejection(
                     rid=rid, reason=str(e), queued=self._batcher.pending(),
                     max_queue=self._batcher.max_queue)) from None
@@ -592,14 +685,17 @@ class PathService:
             ws_tiers=policy.ws_tiers,
             cv_folds=path.cv_folds, stratify=path.stratify,
             selection=path.selection, deadline_ms=policy.deadline_ms,
-            priority=policy.priority, validate=policy.validate,
+            priority=policy.priority,
+            solve_timeout_ms=policy.solve_timeout_ms,
+            validate=policy.validate,
             _cv_fold=_cv_fold)
 
     def _submit_cv(self, X, y, lam, family, *, n_folds, stratify, selection,
                    sigmas, path_length, sigma_ratio, screening, solver_tol,
                    max_iter, kkt_tol, max_refits, working_set,
                    ws_tiers=DEFAULT_WS_TIERS, deadline_ms=None,
-                   priority=0, validate="strict") -> int:
+                   priority=0, solve_timeout_ms=None,
+                   validate="strict") -> int:
         if sigmas is None:
             sigmas = null_sigma_grid(X, y, lam, family,
                                      path_length=path_length,
@@ -615,7 +711,9 @@ class PathService:
                         max_iter=max_iter, kkt_tol=kkt_tol,
                         max_refits=max_refits, working_set=working_set,
                         ws_tiers=ws_tiers, deadline_ms=deadline_ms,
-                        priority=priority, validate=validate, _cv_fold=True)
+                        priority=priority,
+                        solve_timeout_ms=solve_timeout_ms,
+                        validate=validate, _cv_fold=True)
             for tr in trains
         ]
         with self._lock:
@@ -700,7 +798,7 @@ class PathService:
                       lam=lam, sigmas=sigmas, family=family, working_set=ws,
                       weights=W[b]),
                 deadline_ms=policy.deadline_ms, priority=policy.priority,
-                _rs_member=True)
+                solve_timeout_ms=policy.solve_timeout_ms, _rs_member=True)
             for b in range(rs.n_replicates)
         ]
         RESAMPLE_METRICS.inc("replicates", rs.n_replicates, kind=rs.kind,
@@ -774,12 +872,31 @@ class PathService:
         sigmas = np.asarray(item0.sigmas, dtype)
         return (Xp, ys, lam, sigmas, Wts, np.int32(p)), len(batch)
 
+    def _watchdog_budget(self, rids) -> float | None:
+        """Effective watchdog budget (seconds) for one device dispatch: the
+        tightest of the service-wide ``solve_timeout_ms`` and the
+        per-request budgets of the batch members (None: unbounded)."""
+        with self._lock:
+            per = [self._solve_timeouts[r] for r in rids
+                   if r in self._solve_timeouts]
+        if self.solve_timeout_ms is not None:
+            per.append(self.solve_timeout_ms / 1e3)
+        return min(per) if per else None
+
     def _execute_batch(self, key: _GroupKey, batch, *, trigger: str) -> None:
         """Pad, compile-or-fetch, execute and deliver one taken batch.
 
         Also the retry/bisection re-dispatch path: serving the same
         pendings through here is bit-identical to the original serve (same
         program, same padded operands, slot assignment by batch order).
+
+        Compile and execute run under the per-program circuit breaker
+        (consecutive faults open it — admissions then reject with
+        ``reason="circuit_open"`` until the half-open probe) and the device
+        call under the watchdog: past the effective ``solve_timeout_ms``
+        the dispatch is abandoned and :class:`WatchdogTimeout` raised — the
+        synchronous service propagates it to the caller, the async
+        dispatcher recovers the cohort through retry/bisection.
         """
         now = self._clock()
         family = key.family
@@ -825,23 +942,43 @@ class PathService:
                 n_rows=N, n_cols=P, n_slots=self.slots, n_classes=m)
             operands = (pb.Xs, pb.ys, pb.lam, pb.sigmas, pb.p_valid)
             n_batch = pb.n_batch
-        self._faults.fire("compile", rids=rids)
-        for t in trs:
-            t.mark("flush", self._clock(), trigger=trigger,
-                   slots=self.slots, batch=n_batch)
-        prog, hit = self.cache.get(spec)
-        for t in trs:
-            t.mark("compile", self._clock(), hit=hit, program=spec.short())
         t0 = self._clock()
-        self._faults.fire("worker", rids=rids)
-        with annotate(f"repro.serve.execute/{spec.short()}"):
-            out = prog(*operands)
-            stats = None
-            if W is not None:
-                out, stats = out
-            ep = EnginePath(*(np.asarray(a) for a in out))
-            if stats is not None:
-                stats = CompactStats(*(np.asarray(a) for a in stats))
+
+        def _device_call():
+            # the worker fault site fires INSIDE the watched call, so an
+            # injected "hang" trips the watchdog exactly like a stuck
+            # device dispatch would
+            self._faults.fire("worker", rids=rids)
+            with annotate(f"repro.serve.execute/{spec.short()}"):
+                out = prog(*operands)
+                stats = None
+                if W is not None:
+                    out, stats = out
+                ep = EnginePath(*(np.asarray(a) for a in out))
+                if stats is not None:
+                    stats = CompactStats(*(np.asarray(a) for a in stats))
+            return ep, stats
+
+        try:
+            self._faults.fire("compile", rids=rids)
+            for t in trs:
+                t.mark("flush", self._clock(), trigger=trigger,
+                       slots=self.slots, batch=n_batch)
+            prog, hit = self.cache.get(spec)
+            for t in trs:
+                t.mark("compile", self._clock(), hit=hit,
+                       program=spec.short())
+            t0 = self._clock()
+            ep, stats = run_with_watchdog(
+                _device_call, self._watchdog_budget(rids),
+                label=spec.short())
+        except BaseException as e:
+            if isinstance(e, WatchdogTimeout):
+                self.metrics.inc("watchdog_timeouts")
+            self._breaker.record_failure(key)
+            raise
+        else:
+            self._breaker.record_success(key)
         wall = self._clock() - t0
         for t in trs:
             t.mark("execute", self._clock(), solve_ms=round(wall * 1e3, 3))
@@ -917,6 +1054,7 @@ class PathService:
         self.metrics.inc("kkt_violations", int(resp.n_violations.sum()))
         self._record_latency(rid, resp)
         self._finish_trace(rid, resp)
+        self._solve_timeouts.pop(rid, None)
         if rid in self._cv_fold_rids:
             self._store(self._cv_hold, rid, resp)
         elif rid in self._rs_member_rids:
@@ -1041,6 +1179,10 @@ class PathService:
                 "flush_retry": m.value("flush", trigger="retry"),
                 "rejected": m.value("rejected"),
                 "validation_rejected": m.value("validation_rejected"),
+                "shed": m.value("shed"),
+                "watchdog_timeouts": m.value("watchdog_timeouts"),
+                "breaker": {**self._breaker.stats(),
+                            "rejected": m.value("breaker_rejected")},
                 "kkt_violations": m.value("kkt_violations"),
                 "max_queue": self._batcher.max_queue,
                 "faults": self._faults.stats() if self._faults.active()

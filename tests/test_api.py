@@ -74,7 +74,7 @@ EXPECTED_FIELDS = {
     SolverPolicy: ["backend", "working_set", "ws_tiers", "pad", "screening",
                    "solver_tol", "max_iter", "kkt_tol", "max_refits",
                    "verbose", "deadline_ms", "priority", "validate",
-                   "telemetry"],
+                   "telemetry", "solve_timeout_ms"],
     ExecutionPlan: ["backend", "mode", "batch", "n", "p", "working_set",
                     "ws_tiers", "pad", "exec_shape", "screening", "device",
                     "reasons"],

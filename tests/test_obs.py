@@ -165,7 +165,8 @@ def test_trace_events_and_render():
 SYNC_STATS_KEYS = {
     "submitted", "completed", "pending", "unclaimed", "results_evicted",
     "batches", "flush_fill", "flush_deadline", "flush_forced", "flush_retry",
-    "rejected", "validation_rejected", "kkt_violations", "max_queue",
+    "rejected", "validation_rejected", "shed", "watchdog_timeouts",
+    "breaker", "kkt_violations", "max_queue",
     "faults", "slots", "occupancy_mean", "padding_ratio_mean",
     "latency_ms_p50", "latency_ms_p95", "latency_count",
     "internal_latency_ms_p50", "internal_latency_ms_p95",
@@ -174,7 +175,8 @@ SYNC_STATS_KEYS = {
 
 ASYNC_ONLY_KEYS = {
     "slot_recycles", "chunk_batches", "step_chunk", "inflight", "retries",
-    "bisections", "poisoned", "retry_limit", "retry_backoff", "worker_alive",
+    "bisections", "poisoned", "checkpoints", "restored",
+    "retry_limit", "retry_backoff", "worker_alive",
 }
 
 
@@ -194,7 +196,7 @@ def test_stats_schema_snapshot(shared_cache):
 def test_cache_and_bucket_stats_schema(shared_cache):
     assert set(shared_cache.stats().keys()) == {
         "size", "capacity", "hits", "misses", "hit_rate", "evictions",
-        "build_seconds", "programs"}
+        "builds", "build_seconds", "store", "programs"}
     from repro.core.engine import _WS_BUCKETS
     assert set(_WS_BUCKETS.stats().keys()) == {
         "name", "size", "capacity", "hits", "misses", "updates",
